@@ -1,0 +1,19 @@
+"""Paper Fig.5: jitter & predictability under high load — latency std and
+tail span (max-min), normalized to the best baseline (higher=better)."""
+from benchmarks._grid import WORKLOADS, best_baseline, grid, ours
+
+
+def run(quick: bool = True):
+    rows = grid(quick)
+    out = []
+    hi = sorted({r["rps"] for r in rows})[-1]
+    for wl in WORKLOADS:
+        std_gain = best_baseline(rows, wl, hi, "latency_std", hi=False) / \
+            max(ours(rows, wl, hi, "latency_std"), 1e-9)
+        span_gain = best_baseline(rows, wl, hi, "tail_span", hi=False) / \
+            max(ours(rows, wl, hi, "tail_span"), 1e-9)
+        out.append((f"jitter/{wl}/std_gain", 0.0,
+                    f"{std_gain:.2f}x(paper:~2.3x_livebench)"))
+        out.append((f"jitter/{wl}/tail_span_gain", 0.0,
+                    f"{span_gain:.2f}x(paper:~2.1x_livebench)"))
+    return out

@@ -1,0 +1,22 @@
+"""Paper Fig.4: average end-to-end latency vs arrival rate."""
+from benchmarks._grid import SYSTEMS, WORKLOADS, best_baseline, grid, ours
+
+
+def run(quick: bool = True):
+    rows = grid(quick)
+    out = []
+    rps_points = sorted({r["rps"] for r in rows})
+    for wl in WORKLOADS:
+        for rps in rps_points:
+            for s in SYSTEMS:
+                r = [x for x in rows
+                     if (x["workload"], x["system"], x["rps"]) == (wl, s, rps)][0]
+                out.append((f"latency/{wl}/rps{rps}/{s}",
+                            r["avg_latency"] * 1e6,
+                            f"avg={r['avg_latency']:.2f}s p99={r['p99_latency']:.2f}s"))
+        hi = rps_points[-1]
+        red = best_baseline(rows, wl, hi, "avg_latency", hi=False) / \
+            max(ours(rows, wl, hi, "avg_latency"), 1e-9)
+        out.append((f"latency/{wl}/reduction_vs_best_baseline", 0.0,
+                    f"{red:.2f}x(paper:~3-4x_under_contention)"))
+    return out

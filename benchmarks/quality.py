@@ -1,0 +1,91 @@
+"""Paper Fig.6: head-centric vs uniform selection quality across retention.
+
+No model weights/datasets ship offline (HumanEval/GSM8K impossible), so we
+use two proxies that isolate exactly what Fig.6 measures — whether per-head
+selection preserves information that head-aggregated selection destroys:
+
+  1. **Attention fidelity**: mean |reuse_hidden(sparse) − reuse_hidden(dense)|
+     on a reduced model, across r ∈ {0.1..0.5}. Lower = better.
+  2. **Head-disjoint retrieval**: synthetic K/V where each head's critical
+     token is salient only to that head. Recovery rate of critical tokens
+     under each policy (accuracy-like, higher = better; uniform provably
+     drops minority-head tokens at low r).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.models import backbone as BB
+from repro.models import transformer as T
+from repro.models.sparse_select import select_indices
+
+RETENTIONS = (0.1, 0.2, 0.3, 0.4, 0.5)
+
+
+def attention_fidelity(selection: str, r: float, seed: int = 0):
+    cfg = reduced(ARCHS["llada-8b"], n_layers=3, d_model=96, n_heads=6,
+                  n_kv_heads=6, head_dim=16)
+    key = jax.random.PRNGKey(seed)
+    params = BB.init_params(cfg, key)
+    B, S, Sb = 4, 128, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    bs = jnp.array([32, 48, 64, 96], dtype=jnp.int32)
+    btoks = jax.vmap(lambda t, s: jax.lax.dynamic_slice_in_dim(t, s, Sb))(
+        tokens, bs)
+    bpos = bs[:, None] + jnp.arange(Sb)[None]
+
+    def reuse_h(sel, retain):
+        ctx = T.ServeContext(block_size=Sb, retain=retain, selection=sel,
+                             q_chunk=S)
+        out = BB.serve_refresh(params, cfg, tokens, bs, ctx)
+        return BB.serve_reuse(params, cfg, btoks, bpos, out.cache, ctx)
+
+    dense = reuse_h("none", S - Sb)
+    sparse = reuse_h(selection, max(8, int(S * r)))
+    scale = float(jnp.mean(jnp.abs(dense))) + 1e-9
+    return float(jnp.mean(jnp.abs(sparse - dense))) / scale
+
+
+def head_disjoint_recovery(mode: str, r: float, seed: int = 0,
+                           K: int = 8, S: int = 128) -> float:
+    """Each KV head h has `per_head` critical positions whose keys align
+    with that head's query only. Fraction of critical positions retained."""
+    rng = jax.random.PRNGKey(seed)
+    dh, Sb = 16, 4
+    q = jax.random.normal(rng, (1, Sb, K, dh)) * 0.01
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, S, K, dh)) * 0.01
+    per_head = 4
+    crit = {}
+    for h in range(K):
+        pos = 8 + h * per_head + np.arange(per_head)
+        crit[h] = pos
+        # make these keys salient to head h only
+        k = k.at[0, pos, h].set(np.asarray(
+            jax.random.normal(jax.random.fold_in(rng, 100 + h), (per_head, dh))) * 3.0)
+        q = q.at[0, :, h].set(np.asarray(k[0, pos[0], h]))
+    from repro.models.sparse_select import head_scores
+    scores = head_scores(q, k, kernel_size=1)
+    retain = max(per_head, int(S * r))
+    idx = select_indices(scores, retain, mode=mode,
+                         exclude=jnp.zeros((1, S), bool))
+    idx = np.asarray(idx)[0]
+    hits = sum(np.isin(crit[h], idx[h]).sum() for h in range(K))
+    return hits / (K * per_head)
+
+
+def run(quick: bool = True):
+    out = []
+    rets = RETENTIONS if not quick else (0.1, 0.3, 0.5)
+    for r in rets:
+        eh = attention_fidelity("head", r)
+        eu = attention_fidelity("uniform", r)
+        out.append((f"quality/fidelity_err/r{r}/head", 0.0, f"{eh:.4f}"))
+        out.append((f"quality/fidelity_err/r{r}/uniform", 0.0, f"{eu:.4f}"))
+        rh = np.mean([head_disjoint_recovery("head", r, s) for s in range(3)])
+        ru = np.mean([head_disjoint_recovery("uniform", r, s) for s in range(3)])
+        out.append((f"quality/recovery/r{r}/head", 0.0, f"{rh*100:.1f}%"))
+        out.append((f"quality/recovery/r{r}/uniform", 0.0, f"{ru*100:.1f}%"))
+    out.append(("quality/claim", 0.0,
+                "paper:+87.7%_rel_GSM8K@r=0.1_head_vs_uniform"))
+    return out

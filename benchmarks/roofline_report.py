@@ -1,0 +1,33 @@
+"""Dry-run roofline summary: reads results/dryrun_*.json (produced by
+``python -m repro.launch.dryrun --all [--multipod]``) and prints the
+per-cell roofline terms — the §Roofline table of EXPERIMENTS.md."""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(quick: bool = True):
+    out = []
+    for mesh, fname in (("16x16", "dryrun_singlepod.json"),
+                        ("2x16x16", "dryrun_multipod.json")):
+        path = os.path.join(RESULTS, fname)
+        if not os.path.exists(path):
+            out.append((f"roofline/{mesh}", 0.0, "missing(run_dryrun_first)"))
+            continue
+        recs = json.load(open(path))
+        n_ok = sum(r.get("ok", False) for r in recs)
+        out.append((f"roofline/{mesh}/cells_ok", 0.0, f"{n_ok}/{len(recs)}"))
+        if mesh != "16x16":
+            continue  # per-assignment, the roofline table is single-pod
+        for r in recs:
+            if not r.get("ok"):
+                continue
+            out.append((
+                f"roofline/{r['arch']}/{r['shape']}",
+                r["step_time"] * 1e6,
+                f"bottleneck={r['bottleneck']} mfu={r['mfu']*100:.1f}% "
+                f"comp={r['t_compute']*1e3:.1f}ms mem={r['t_memory']*1e3:.1f}ms "
+                f"coll={r['t_collective']*1e3:.1f}ms "
+                f"useful={r['useful_flops_ratio']*100:.0f}%"))
+    return out

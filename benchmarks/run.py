@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only name]``
+prints ``name,us_per_call,derived`` CSV rows (us_per_call = 0.0 for
+pure-derived metrics).
+"""
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "logit_budget",      # §3.2 logit memory boom (Fig.2 mechanism)
+    "footprint",         # Table 1
+    "quality",           # Fig. 6
+    "throughput",        # Fig. 3 + Table 4
+    "latency",           # Fig. 4
+    "jitter",            # Fig. 5
+    "sensitivity",       # Fig. 7
+    "ablation",          # Fig. 8
+    "roofline_report",   # §Roofline (from dry-run artifacts)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            for n, us, derived in rows:
+                print(f"{n},{us:.3f},{derived}")
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},0.000,ERROR")
+            failures += 1
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

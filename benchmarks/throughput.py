@@ -1,0 +1,24 @@
+"""Paper Fig.3 + Table 4: serving throughput per system/workload/arrival rate.
+
+Reported: tok/s per cell, and dLLM-Serve's speedup over the best baseline
+(the paper's headline: 1.61-1.81×)."""
+from benchmarks._grid import SYSTEMS, WORKLOADS, best_baseline, grid, ours
+
+
+def run(quick: bool = True):
+    rows = grid(quick)
+    out = []
+    rps_points = sorted({r["rps"] for r in rows})
+    for wl in WORKLOADS:
+        for rps in rps_points:
+            for s in SYSTEMS:
+                r = [x for x in rows
+                     if (x["workload"], x["system"], x["rps"]) == (wl, s, rps)][0]
+                us_per_tok = 1e6 / max(r["throughput_tok_s"], 1e-9)
+                out.append((f"throughput/{wl}/rps{rps}/{s}", us_per_tok,
+                            f"{r['throughput_tok_s']:.2f}tok_s"))
+        hi_rps = rps_points[-1]
+        speedup = ours(rows, wl, hi_rps) / best_baseline(rows, wl, hi_rps)
+        out.append((f"throughput/{wl}/speedup_vs_best_baseline", 0.0,
+                    f"{speedup:.2f}x(paper:1.61-1.81x)"))
+    return out

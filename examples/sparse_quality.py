@@ -1,0 +1,29 @@
+"""Head-centric vs uniform sparse KV: the paper's Fig.6 mechanism, visible.
+
+    PYTHONPATH=src python examples/sparse_quality.py
+
+Builds a synthetic attention problem where each KV head depends on tokens
+salient only to it, then shows the retained-token recovery rate of both
+policies across retention ratios — uniform (Sparse-dLLM) collapses at low r,
+head-centric (dLLM-Serve) keeps every head's critical context.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.quality import RETENTIONS, head_disjoint_recovery
+
+
+def main():
+    print(f"{'retention':>10s} {'head-centric':>14s} {'uniform':>10s}")
+    for r in RETENTIONS:
+        rh = head_disjoint_recovery("head", r)
+        ru = head_disjoint_recovery("uniform", r)
+        bar = "*" * int(rh * 20)
+        print(f"{r:10.1f} {rh*100:13.1f}% {ru*100:9.1f}%   {bar}")
+    print("\npaper: at r=0.1, head-centric holds 75.1% GSM8K vs 40.0% uniform")
+
+
+if __name__ == "__main__":
+    main()

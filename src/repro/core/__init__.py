@@ -1,0 +1,2 @@
+# dLLM-Serve core: diffusion engine, phase-multiplexed scheduler,
+# logit-aware budgeting, head-centric sparse KV pool, baselines.

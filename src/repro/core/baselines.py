@@ -1,0 +1,70 @@
+"""Baseline serving systems (paper §6.1) expressed as ServeConfig profiles.
+
+Every system runs through the same Engine so differences come only from the
+policies the paper varies — scheduler granularity, KV selection, refresh
+cadence, and logit handling:
+
+  * **Fast-dLLM** (Dual-Cache, parallel decoding disabled): request-level
+    static batching, dense block KV reuse (refresh only at block
+    transitions), monolithic logits.
+  * **dLLM-Cache**: request-level batching, dense cache with adaptive partial
+    refresh modeled by its generation-interval cadence (7 steps), monolithic
+    logits.
+  * **Sparse-dLLM**: request-level batching, *uniform* (head-shared) top-k
+    retention at r=0.5, monolithic logits.
+  * **dLLM-Serve** (ours): phase-multiplexed scheduler, *head-centric*
+    retention at r=0.5, budgeted logit stage.
+
+Slot capacity per system comes from the offline profiler (§4.2): the same
+HBM budget is split into weights + activation reservation + KV pool, so
+systems that reserve a monolithic logit buffer or keep dense caches fit
+fewer concurrent requests — the paper's capacity coupling, reproduced
+mechanically rather than hard-coded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.core.budgeting import plan_memory
+
+
+def system_profiles(base: ServeConfig) -> Dict[str, ServeConfig]:
+    r = dataclasses.replace
+    return {
+        "fast-dllm": r(base, scheduler="request", selection="none",
+                       retention_ratio=1.0, refresh_interval=0,
+                       logit_mode="monolithic"),
+        "dllm-cache": r(base, scheduler="request", selection="none",
+                        retention_ratio=1.0, refresh_interval=7,
+                        logit_mode="monolithic"),
+        "sparse-dllm": r(base, scheduler="request", selection="uniform",
+                         retention_ratio=0.5, refresh_interval=8,
+                         logit_mode="monolithic"),
+        "dllm-serve": r(base, scheduler="phase", selection="head",
+                        retention_ratio=0.5, refresh_interval=8,
+                        logit_mode="chunked", varlen_pack=True),
+    }
+
+
+def ablation_profiles(base: ServeConfig) -> Dict[str, ServeConfig]:
+    """§6.6 cumulative toggles on top of the Sparse-dLLM baseline."""
+    r = dataclasses.replace
+    baseline = r(base, scheduler="request", selection="uniform",
+                 retention_ratio=0.5, refresh_interval=8,
+                 logit_mode="monolithic")
+    # custom engine: head-centric packed KV + varlen flattening (§6.6)
+    engine = r(baseline, selection="head", varlen_pack=True)
+    sched = r(engine, scheduler="phase")                  # + smart scheduler
+    budget = r(sched, logit_mode="chunked")               # + logit budgeting
+    return {"baseline": baseline, "+engine": engine,
+            "+scheduler": sched, "+budgeting": budget}
+
+
+def size_slots(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
+               floor: int = 1) -> ServeConfig:
+    """Clamp max_slots to what the profiler says fits the HBM budget."""
+    plan = plan_memory(cfg, serve, hbm_bytes)
+    return dataclasses.replace(
+        serve, max_slots=max(floor, min(serve.max_slots, plan.max_slots)))

@@ -1,0 +1,140 @@
+"""Logit-Aware Activation Budgeting + Offline Memory Profiler (paper §4.2-4.3).
+
+The profiler maps the memory envelope under worst-case serving pressure and
+returns a :class:`MemoryPlan`: how much HBM is reserved for transient
+activations (dominated by the logit stage) and how many KV slots fit in the
+remainder. Because the logit reservation depends on ``logit_mode``, the plan
+mechanically reproduces the paper's capacity coupling: decomposing the logit
+tensor shrinks the activation reservation and converts the reclaimed bytes
+into additional concurrent requests ("KV Cache Maximization").
+
+Two profiling modes:
+  * analytic  — closed-form worst-case byte accounting (used for capacity
+    planning of the big dry-run configs; §3.2 arithmetic).
+  * measured  — lower + compile the actual step functions and read
+    ``memory_analysis().temp_size_in_bytes`` (exact under XLA's static
+    planner; used by the logit-budget benchmark).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ServeConfig
+
+
+def dtype_bytes(dtype: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2}[dtype]
+
+
+# ---------------------------------------------------------------------------
+# analytic accounting
+# ---------------------------------------------------------------------------
+
+def logit_activation_bytes(cfg: ModelConfig, serve: ServeConfig,
+                           n_logit_tokens: int) -> int:
+    """Peak bytes of the output-projection stage under each C1 mode."""
+    if serve.logit_mode == "monolithic":
+        # the paper's §3.2 boom: the full [N, V] tensor (f32 after softcap)
+        return n_logit_tokens * cfg.vocab_size * 4
+    if serve.logit_mode == "chunked":
+        return min(n_logit_tokens, serve.max_num_logits) * cfg.vocab_size * 4
+    # fused: the Pallas online kernel holds one [T_tile, V_tile] f32 block
+    return 256 * serve.vocab_tile * 4
+
+
+def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
+    """Static per-request KV region (§4.5): r·L tokens, head-major dense."""
+    b = dtype_bytes(serve.dtype)
+    R = serve.retained_len
+    if cfg.family == "ssm":
+        st = cfg.n_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        cv = cfg.n_layers * (cfg.ssm_conv_kernel - 1) * (
+            cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) * b
+        return st + cv
+    dh = cfg.resolved_head_dim
+    n_attn = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.shared_attn_interval, 1)
+        st = cfg.n_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    else:
+        st = 0
+    kv = n_attn * cfg.n_kv_heads * R * dh * 2 * b
+    meta = n_attn * cfg.n_kv_heads * R * 5  # pos(i32) + valid(bool)
+    return kv + meta + st
+
+
+def backbone_activation_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
+    """Workspace for attention/MLP over one packed batch (query-token scaled,
+    the §4.4 'scheduling currency' assumption)."""
+    b = dtype_bytes(serve.dtype)
+    T = serve.max_num_batched_tokens
+    width = max(cfg.d_ff, cfg.n_heads * cfg.resolved_head_dim,
+                3 * cfg.d_model)
+    return T * width * b * 2  # double-buffered
+
+
+@dataclass(frozen=True)
+class MemoryPlan:
+    weights_bytes: int
+    activation_bytes: int       # reserved (incl. logit stage under the mode)
+    logit_bytes: int
+    slot_bytes: int
+    kv_pool_bytes: int
+    max_slots: int
+
+    def summary(self) -> str:
+        gb = 1 << 30
+        return (f"weights={self.weights_bytes/gb:.2f}GiB "
+                f"act={self.activation_bytes/gb:.3f}GiB "
+                f"(logit={self.logit_bytes/gb:.3f}GiB) "
+                f"kv_pool={self.kv_pool_bytes/gb:.2f}GiB "
+                f"slots={self.max_slots}")
+
+
+def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
+                guard_band: float = 0.03) -> MemoryPlan:
+    """The offline profiler's output: activation reservation + KV pool size.
+
+    Worst-case N_logit = one active block per resident request is bounded by
+    slots·block; we budget for the scheduler-level cap instead:
+    ``max_num_batched_tokens`` query tokens all needing logits.
+    """
+    weights = cfg.n_params() * dtype_bytes(cfg.dtype)
+    n_logit_worst = serve.max_num_batched_tokens
+    logit = logit_activation_bytes(cfg, serve, n_logit_worst)
+    act = backbone_activation_bytes(cfg, serve) + logit
+    guard = int(hbm_bytes * guard_band)
+    slot = kv_slot_bytes(cfg, serve)
+    pool = max(0, hbm_bytes - weights - act - guard)
+    slots = min(serve.max_slots, pool // slot) if slot else serve.max_slots
+    return MemoryPlan(weights, act, logit, slot, pool, int(slots))
+
+
+# ---------------------------------------------------------------------------
+# measured profiling (exact, via XLA compile)
+# ---------------------------------------------------------------------------
+
+def measure_logit_peak(cfg: ModelConfig, serve: ServeConfig,
+                       n_tokens: int) -> dict:
+    """Compile the decode stage in every C1 mode and read XLA's exact
+    temp-buffer peak. Runs on any backend (no allocation: AOT only)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm_head as LM
+
+    dtype = jnp.dtype(cfg.dtype)
+    h = jax.ShapeDtypeStruct((n_tokens, cfg.d_model), dtype)
+    params = {"table": jax.ShapeDtypeStruct((cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.ShapeDtypeStruct(
+            (cfg.d_model, cfg.vocab_size), dtype)
+    out = {}
+    for mode in ("monolithic", "chunked", "fused"):
+        def fn(params, h, mode=mode):
+            return LM.decode_tokens(params, cfg, h,
+                                    max_num_logits=serve.max_num_logits,
+                                    mode=mode, vocab_tile=serve.vocab_tile)
+        compiled = jax.jit(fn).lower(params, h).compile()
+        ma = compiled.memory_analysis()
+        out[mode] = int(ma.temp_size_in_bytes)
+    return out

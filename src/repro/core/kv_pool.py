@@ -1,0 +1,55 @@
+"""Slot-granular static KV pool (paper §4.5 "Static Allocation and
+Contiguous Storage").
+
+Holds one device-resident cache pytree whose second axis is the request slot
+(``[L, slots+1, ...]``; the extra slot is scratch for padded batch rows).
+Refresh writes a freshly packed cache into a request's slot; Reuse gathers
+slot slices for the scheduled sub-batch. The cache content is family-specific
+(PackedKV / SSMCache / HybridCache) — the pool is shape-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KVPool:
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.scratch_slot = max_slots
+        self.cache = None          # device pytree, slot axis = 1
+        self._write = jax.jit(
+            lambda pool, cache, slots: jax.tree.map(
+                lambda P, c: P.at[:, slots].set(c), pool, cache),
+            donate_argnums=0)
+        self._gather = jax.jit(
+            lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool))
+
+    def ensure(self, cache_example) -> None:
+        """Lazily allocate the pool from the first Refresh output's shapes."""
+        if self.cache is not None:
+            return
+        n = self.max_slots + 1
+
+        def alloc(c):
+            shape = (c.shape[0], n) + tuple(c.shape[2:])
+            return jnp.zeros(shape, c.dtype)
+
+        self.cache = jax.tree.map(alloc, cache_example)
+
+    def nbytes(self) -> int:
+        if self.cache is None:
+            return 0
+        return sum(x.nbytes for x in jax.tree.leaves(self.cache))
+
+    def write(self, slots: Sequence[int], cache) -> None:
+        self.ensure(cache)
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        self.cache = self._write(self.cache, cache, idx)
+
+    def gather(self, slots: Sequence[int]):
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        return self._gather(self.cache, idx)

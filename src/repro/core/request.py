@@ -1,0 +1,121 @@
+"""Request lifecycle + phase state machine (paper §5.2 control plane).
+
+A request iterates over denoising steps, alternating **Refresh** and
+**Reuse** phases. Phase is derived from the cache policy: the first step of
+every block refreshes (block transition), and a fixed ``refresh_interval``
+forces periodic refreshes inside a block (the K_int cadence of §2.3).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core import diffusion
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+class Phase(enum.Enum):
+    REFRESH = "refresh"
+    REUSE = "reuse"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [P] int32
+    gen_len: int
+    arrival: float                      # seconds (trace time)
+    cfg: ServeConfig
+    mask_id: int = 0
+
+    state: State = State.WAITING
+    slot: Optional[int] = None
+    tokens: Optional[np.ndarray] = None  # [max_seq_len]
+    block_idx: int = 0
+    step_in_block: int = 0
+    steps_done: int = 0
+    # metrics
+    t_admitted: float = -1.0
+    t_first_commit: float = -1.0
+    t_finished: float = -1.0
+
+    def __post_init__(self):
+        pad = (-self.gen_len) % self.cfg.block_size
+        self.gen_len += pad
+        self.tokens = diffusion.build_sequence(
+            self.prompt, self.gen_len, self.cfg.max_seq_len, self.mask_id)
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.gen_len
+
+    @property
+    def n_blocks(self) -> int:
+        return self.gen_len // self.cfg.block_size
+
+    @property
+    def block_start(self) -> int:
+        return self.prompt_len + self.block_idx * self.cfg.block_size
+
+    # -- phase machine -------------------------------------------------------
+    @property
+    def phase(self) -> Phase:
+        if self.step_in_block == 0:
+            return Phase.REFRESH
+        if self.cfg.refresh_interval and \
+                self.step_in_block % self.cfg.refresh_interval == 0:
+            return Phase.REFRESH
+        return Phase.REUSE
+
+    @property
+    def query_tokens(self) -> int:
+        """Scheduling currency (§4.4): full seq in Refresh, block in Reuse."""
+        if self.phase == Phase.REFRESH:
+            return self.total_len
+        return self.cfg.block_size
+
+    def block_tokens(self) -> np.ndarray:
+        s = self.block_start
+        return self.tokens[s: s + self.cfg.block_size]
+
+    def block_masked(self) -> int:
+        return int((self.block_tokens() == self.mask_id).sum())
+
+    def advance(self, new_block_tokens: np.ndarray, now: float) -> None:
+        """Apply a committed denoising step and advance the state machine."""
+        s = self.block_start
+        if self.t_first_commit < 0 and \
+                (new_block_tokens != self.mask_id).any():
+            self.t_first_commit = now
+        self.tokens[s: s + self.cfg.block_size] = new_block_tokens
+        self.steps_done += 1
+        self.step_in_block += 1
+        done_block = (new_block_tokens != self.mask_id).all() or \
+            self.step_in_block >= self.cfg.steps_per_block
+        if done_block:
+            self.block_idx += 1
+            self.step_in_block = 0
+            if self.block_idx >= self.n_blocks:
+                self.state = State.FINISHED
+                self.t_finished = now
+
+    def output_tokens(self) -> np.ndarray:
+        return self.tokens[self.prompt_len: self.total_len]
+
+    @property
+    def latency(self) -> float:
+        return self.t_finished - self.arrival

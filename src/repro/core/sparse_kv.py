@@ -1,0 +1,9 @@
+"""Head-Centric Sparse KV management (paper C3) — public entry points.
+
+The selection/packing math lives in ``repro.models.sparse_select`` (it runs
+inside the layer scan); the physical slot pool in ``repro.core.kv_pool``.
+This module re-exports both so the paper-facing API matches DESIGN.md.
+"""
+from repro.core.kv_pool import KVPool                     # noqa: F401
+from repro.models.sparse_select import (                  # noqa: F401
+    PackedKV, head_scores, pack, select_and_pack, select_indices)

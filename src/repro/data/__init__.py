@@ -1,0 +1,1 @@
+# Data substrate: synthetic serving workloads + training pipeline.

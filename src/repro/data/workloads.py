@@ -1,0 +1,82 @@
+"""Synthetic serving workloads mirroring the paper's three traces (§6.1).
+
+No datasets ship offline, so each workload is a *statistical replica* of the
+corresponding benchmark's serving-relevant properties — arrival process,
+prompt-length distribution, output length — which are the only properties the
+paper's systems experiments consume:
+
+  * **livebench** — coding questions: medium prompts (~300 tok, lognormal),
+    fixed 256-token generations, Poisson arrivals.
+  * **burst** — BurstGPT trace: ON/OFF bursty arrivals (Markov-modulated
+    Poisson), heavy-tailed prompt lengths.
+  * **osc**  — OpenAI Summarization Comparison: long prompts (~500 tok),
+    256-token summaries, Poisson arrivals.
+
+Lengths are scaled by ``scale`` so the same shapes exercise toy CPU models
+(max_seq 128-512) and the full dry-run configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TraceRequest:
+    arrival: float      # seconds
+    prompt_len: int
+    gen_len: int
+
+
+def _poisson_arrivals(n: int, rps: float, rng) -> np.ndarray:
+    return np.cumsum(rng.exponential(1.0 / rps, n))
+
+
+def _burst_arrivals(n: int, rps: float, rng, burst_factor: float = 6.0,
+                    p_on: float = 0.3) -> np.ndarray:
+    """Markov-modulated Poisson: ON periods at burst_factor×rate."""
+    out = []
+    t = 0.0
+    on = False
+    while len(out) < n:
+        on = rng.random() < (p_on if not on else 0.7)
+        rate = rps * burst_factor if on else rps * 0.4
+        k = min(n - len(out), rng.integers(2, 8))
+        for _ in range(k):
+            t += rng.exponential(1.0 / rate)
+            out.append(t)
+    return np.asarray(out[:n])
+
+
+def make_trace(name: str, n: int, rps: float, seed: int = 0,
+               scale: float = 1.0) -> List[TraceRequest]:
+    rng = np.random.default_rng(seed)
+    if name == "livebench":
+        arr = _poisson_arrivals(n, rps, rng)
+        plen = np.clip(rng.lognormal(np.log(300), 0.4, n), 50, 900)
+        glen = np.full(n, 256)
+    elif name == "burst":
+        arr = _burst_arrivals(n, rps, rng)
+        plen = np.clip((rng.pareto(1.8, n) + 1) * 120, 30, 1500)
+        glen = np.full(n, 256)
+    elif name == "osc":
+        arr = _poisson_arrivals(n, rps, rng)
+        plen = np.clip(rng.normal(500, 120, n), 150, 1200)
+        glen = np.full(n, 256)
+    else:
+        raise ValueError(name)
+    return [TraceRequest(float(a), max(4, int(p * scale)),
+                         max(4, int(g * scale)))
+            for a, p, g in zip(arr, plen, glen)]
+
+
+def trace_prompts(trace: List[TraceRequest], vocab_size: int,
+                  seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed + 1)
+    return [rng.integers(0, vocab_size - 1, t.prompt_len).astype(np.int32)
+            for t in trace]
+
+
+WORKLOADS = ("livebench", "burst", "osc")

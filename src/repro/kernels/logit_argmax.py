@@ -1,0 +1,112 @@
+"""Fused online logit→token kernel — the TPU-native form of paper C1.
+
+The paper's Logit Decomposition splits the output projection into serial
+token-axis sub-batches and frees each ``[chunk, V]`` buffer before the next.
+XLA has no ``free()``; the TPU-native equivalent is to *never materialize*
+``[chunk, V]``: tile the vocabulary axis through VMEM and carry only the
+O(chunk) online-argmax/online-softmax state across tiles. Peak activation for
+the output stage drops from ``chunk × V × 2B`` (paper) to
+``T_tile × V_tile × 4B`` (here) — e.g. for LLaDA-8B (V=126,464),
+2048×126464×2B ≈ 494 MB → 256×512×4B ≈ 0.5 MB per core-step.
+
+Grid: ``(T // T_tile, V // V_tile)`` — the V axis iterates innermost
+(sequentially on a TPU core), accumulating into revisited output blocks:
+
+  * ``m``   — running max logit           [T]
+  * ``idx`` — running argmax index        [T]
+  * ``s``   — running Σ exp(z − m)        [T]  (online softmax)
+
+``conf = 1/s`` (softmax probability of the argmax) is formed in ``ops.py``.
+
+MXU alignment: the matmul is ``[T_tile, D] × [D, V_tile]`` with T_tile, V_tile
+multiples of 128 and D the full model dim (bf16-friendly; accumulation f32).
+VMEM at defaults (T_tile=256, V_tile=512, D=8192): q-block 4 MB + w-block
+8 MB + acc < 13 MB — under the 16 MB/core budget for the largest arch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, w_ref, idx_ref, m_ref, s_ref, *, softcap: float,
+            v_tile: int, n_v: int, w_layout: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    h = h_ref[...]                     # [T_tile, D]
+    w = w_ref[...]                     # [D, V_tile] ("dv") | [V_tile, D] ("vd")
+    if w_layout == "vd":
+        # tied-embedding layout: contract over the last dim of both — the
+        # MXU takes either orientation; this avoids transposing the whole
+        # [V, D] table in HBM.
+        z = jax.lax.dot_general(h, w, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    else:
+        z = jnp.dot(h, w, preferred_element_type=jnp.float32)  # [T_tile, V_tile]
+    if softcap:
+        z = softcap * jnp.tanh(z / softcap)
+
+    local_m = jnp.max(z, axis=1)                           # [T_tile]
+    local_i = jnp.argmax(z, axis=1).astype(jnp.int32) + j * v_tile
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, local_m)
+    s_ref[...] = (s_ref[...] * jnp.exp(m_old - m_new)
+                  + jnp.sum(jnp.exp(z - m_new[:, None]), axis=1))
+    idx_ref[...] = jnp.where(local_m > m_old, local_i, idx_ref[...])
+    m_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "t_tile", "v_tile",
+                                             "interpret", "w_layout"))
+def fused_logit_argmax_call(
+    h: jax.Array,          # [T, D]
+    w: jax.Array,          # [D, V] (w_layout="dv") or [V, D] ("vd", tied)
+    *,
+    softcap: float = 0.0,
+    t_tile: int = 256,
+    v_tile: int = 512,
+    interpret: bool = True,
+    w_layout: str = "dv",
+):
+    T, D = h.shape
+    V = w.shape[1] if w_layout == "dv" else w.shape[0]
+    t_tile = min(t_tile, T)
+    v_tile = min(v_tile, V)
+    assert T % t_tile == 0 and V % v_tile == 0, (T, t_tile, V, v_tile)
+    n_t, n_v = T // t_tile, V // v_tile
+
+    kern = functools.partial(_kernel, softcap=softcap, v_tile=v_tile, n_v=n_v,
+                             w_layout=w_layout)
+    w_spec = (pl.BlockSpec((D, v_tile), lambda i, j: (0, j))
+              if w_layout == "dv"
+              else pl.BlockSpec((v_tile, D), lambda i, j: (j, 0)))
+    idx, m, s = pl.pallas_call(
+        kern,
+        grid=(n_t, n_v),
+        in_specs=[
+            pl.BlockSpec((t_tile, D), lambda i, j: (i, 0)),
+            w_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((t_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((t_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((t_tile,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+            jax.ShapeDtypeStruct((T,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, w)
+    return idx, m, s

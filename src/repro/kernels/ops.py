@@ -1,0 +1,191 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (the validation mode required here) and
+False on real TPU backends. Each wrapper adapts the model-layer calling
+convention ([B, S, H, dh] tensors) to the kernels' head-major packed layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import packed_flash_attention_call
+from repro.kernels.logit_argmax import fused_logit_argmax_call
+from repro.kernels.select_pack import head_score_call
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def fused_logit_argmax(h, w, *, softcap: float = 0.0, vocab_tile: int = 512,
+                       t_tile: int = 256, w_layout: str = "dv"):
+    """h: [T, D]; w: [D, V] ("dv") or [V, D] ("vd", tied-embedding table).
+    Returns (ids [T] i32, conf [T] f32). Paper C1, fused."""
+    T = h.shape[0]
+    V = w.shape[1] if w_layout == "dv" else w.shape[0]
+    t_tile = min(t_tile, max(8, T))
+    hp, _ = _pad_to(h, t_tile, 0)
+    # vocab tile must divide V (all assigned vocabs are 8-divisible); zero
+    # padding would fabricate logit-0 columns, so fall back to ref instead.
+    vt = vocab_tile
+    while V % vt:
+        vt //= 2
+        if vt < 8:
+            wd = w if w_layout == "dv" else w.T
+            return ref.fused_logit_argmax(h, wd, softcap=softcap)
+    ids, m, s = fused_logit_argmax_call(
+        hp, w, softcap=softcap, t_tile=t_tile, v_tile=vt,
+        interpret=_interpret(), w_layout=w_layout)
+    conf = 1.0 / jnp.maximum(s, 1e-30)
+    return ids[:T], conf[:T]
+
+
+def packed_flash_attention_stats(qr, k_all, v_all, ok, *, softcap: float = 0.0,
+                                 t_tile: int = 512):
+    """Raw flash statistics for exact split-attention merging.
+
+    qr: [B, K, R, dh] (rows = Sb·G); returns (o_unnorm f32 [B,K,R,dh],
+    m [B,K,R], s [B,K,R]).
+    """
+    T = k_all.shape[2]
+    tt = min(t_tile, T)
+    while T % tt:
+        tt //= 2
+    return packed_flash_attention_call(
+        qr, k_all, v_all, ok, softcap=softcap, t_tile=tt,
+        interpret=_interpret())
+
+
+def packed_flash_attention(q, k_all, v_all, ok, *, softcap: float = 0.0,
+                           t_tile: int = 512):
+    """Model-layer contract (see ``transformer._attend_packed``):
+
+    q: [B, Sb, H, dh]; k_all/v_all: [B, K, T, dh]; ok: [B, K, Sb, T] bool.
+    Returns [B, Sb, H, dh].
+    """
+    B, Sb, H, dh = q.shape
+    K, T = k_all.shape[1], k_all.shape[2]
+    G = H // K
+    qr = (q.reshape(B, Sb, K, G, dh).transpose(0, 2, 1, 3, 4)
+          .reshape(B, K, Sb * G, dh))
+    tt = min(t_tile, T)
+    while T % tt:
+        tt //= 2
+    out, m, s = packed_flash_attention_call(
+        qr, k_all, v_all, ok, softcap=softcap, t_tile=tt,
+        interpret=_interpret())
+    out = out / jnp.maximum(s, 1e-30)[..., None]
+    out = (out.reshape(B, K, Sb, G, dh).transpose(0, 2, 1, 3, 4)
+           .reshape(B, Sb, H, dh))
+    return out.astype(q.dtype)
+
+
+def flash_refresh_attention(q, k, v, *, q_pos, kv_pos, kv_valid, mask_mode,
+                            window, is_local, softcap, q_tile: int = 256,
+                            kv_tile: int = 512):
+    """Refresh-phase flash attention (model-layer contract).
+
+    q: [B, S, H, dh]; k/v: [B, S, K, dh]; returns [B, S, H, dh].
+    Under an active mesh the call is shard_mapped: batch over the data axes
+    and heads over 'model' when H divides it (each shard slices its KV-head
+    range locally; KV stays replicated over 'model' — GQA KV heads below the
+    TP degree are replicated anyway).
+    """
+    import numpy as np
+    from repro.kernels.flash_refresh import flash_refresh_call
+
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    causal = mask_mode == "causal"
+    loc = jnp.asarray(is_local, bool).reshape(1)
+
+    qh = q.transpose(0, 2, 1, 3)        # [B, H, S, dh]
+    kh = k.transpose(0, 2, 1, 3)        # [B, K, S, dh]
+    vh = v.transpose(0, 2, 1, 3)
+
+    def local_call(q_l, k_l, v_l, qp, kp, kv, lc, *, h_shards: int = 1):
+        H_loc, Sq = q_l.shape[1], q_l.shape[2]
+        if h_shards > 1:
+            idx = jax.lax.axis_index("model")
+            K_eff = max(1, H_loc // G)
+            kv_start = (idx * H_loc) // G
+            k_l = jax.lax.dynamic_slice_in_dim(k_l, kv_start, K_eff, axis=1)
+            v_l = jax.lax.dynamic_slice_in_dim(v_l, kv_start, K_eff, axis=1)
+        else:
+            K_eff = K
+        G_eff = H_loc // K_eff
+        Bl = q_l.shape[0]
+        qr = (q_l.reshape(Bl, K_eff, G_eff, Sq, dh).transpose(0, 1, 3, 2, 4)
+              .reshape(Bl, K_eff, Sq * G_eff, dh))
+        out = flash_refresh_call(
+            qr, k_l, v_l, qp, kp, kv, lc, softcap=softcap, causal=causal,
+            window=window, q_tile=min(q_tile, Sq),
+            kv_tile=min(kv_tile, k_l.shape[2]),
+            interpret=_interpret())
+        out = (out.reshape(Bl, K_eff, Sq, G_eff, dh).transpose(0, 1, 3, 2, 4)
+               .reshape(Bl, H_loc, Sq, dh))
+        return out.astype(q_l.dtype)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        out = local_call(qh, kh, vh, q_pos, kv_pos, kv_valid, loc)
+    else:
+        from jax.sharding import PartitionSpec as P
+        m = mesh.shape["model"]
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        import functools as ft
+        if H % m == 0:
+            # TP over heads; each shard slices its KV-head range locally
+            fn = ft.partial(local_call, h_shards=m)
+            q_spec = out_spec = P(dp, "model", None, None)
+            qp_spec = P(dp, None)
+        elif S % m == 0:
+            # heads don't divide the TP axis (e.g. H=40 on 16): shard the
+            # QUERY sequence axis instead — every query row's output is
+            # complete against the replicated KV, so no psum is needed.
+            # §Perf iteration C2: engages idle TP compute for refresh.
+            fn = local_call
+            q_spec = out_spec = P(dp, None, "model", None)
+            qp_spec = P(dp, "model")
+        else:
+            fn = local_call
+            q_spec = out_spec = P(dp, None, None, None)
+            qp_spec = P(dp, None)
+        out = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(q_spec, P(dp, None, None, None),
+                      P(dp, None, None, None), qp_spec, P(dp, None),
+                      P(dp, None), P(None)),
+            out_specs=out_spec,
+            check_vma=False,
+        )(qh, kh, vh, q_pos, kv_pos, kv_valid, loc)
+    return out.transpose(0, 2, 1, 3)    # back to [B, S, H, dh]
+
+
+def head_score(q_block, k_full, *, s_tile: int = 512):
+    """q_block: [B, Sb, H, dh]; k_full: [B, S, K, dh] -> [B, K, S] f32 raw
+    (pre-maxpool) importance scores — kernel side of paper C3 eq.(6)."""
+    B, Sb, H, dh = q_block.shape
+    K, S = k_full.shape[2], k_full.shape[1]
+    G = H // K
+    qr = (q_block.reshape(B, Sb, K, G, dh).transpose(0, 2, 1, 3, 4)
+          .reshape(B, K, Sb * G, dh))
+    kr = k_full.transpose(0, 2, 1, 3)
+    st = min(s_tile, S)
+    while S % st:
+        st //= 2
+    return head_score_call(qr, kr, s_tile=st, interpret=_interpret())

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_logit_argmax(h, w, *, softcap: float = 0.0):
+    """h: [T, D]; w: [D, V] -> (ids [T] i32, conf [T] f32)."""
+    # f32 accumulation to match the kernel's MXU preferred_element_type —
+    # bf16-rounded logits would flip argmax winners on near-ties.
+    z = jnp.einsum("td,dv->tv", h, w,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        z = softcap * jnp.tanh(z / softcap)
+    ids = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    conf = jnp.exp(jnp.max(z, -1) - jax.nn.logsumexp(z, -1))
+    return ids, conf
+
+
+def packed_flash_attention(q, k, v, mask, *, softcap: float = 0.0):
+    """q: [B,K,R,dh]; k/v: [B,K,T,dh]; mask: [B,K,Sb,T] -> [B,K,R,dh]."""
+    B, K, R, dh = q.shape
+    Sb = mask.shape[2]
+    g = R // Sb
+    z = jnp.einsum("bkrd,bktd->bkrt", q, k).astype(jnp.float32) * dh ** -0.5
+    if softcap:
+        z = softcap * jnp.tanh(z / softcap)
+    zm = z.reshape(B, K, Sb, g, -1)
+    zm = jnp.where(mask[:, :, :, None, :], zm, -1e30)
+    p = jax.nn.softmax(zm.reshape(B, K, R, -1), axis=-1)
+    return jnp.einsum("bkrt,bktd->bkrd", p.astype(v.dtype), v)
+
+
+def head_score(q, k):
+    """q: [B,K,R,dh]; k: [B,K,S,dh] -> raw scores [B,K,S] f32."""
+    z = jnp.einsum("bkrd,bksd->bkrs", q, k).astype(jnp.float32)
+    return z.max(axis=2)

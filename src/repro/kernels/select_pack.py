@@ -1,0 +1,52 @@
+"""Per-head importance scoring kernel — the Refresh-phase side of paper C3.
+
+Computes the raw per-KV-head alignment scores
+``raw[b, k, s] = max_{q in block, g in group} (Q_{b,q,k,g} · K_{b,s,k})``
+— the inner product of paper eq.(6) before local max-pooling. The pooling
+(kernel size w, a [B,K,S] stencil) and the top-k + single gather run as
+cheap XLA ops in ``ops.py``; the O(S·Sb·G·dh) matmul is the hot part and
+lives here.
+
+Grid ``(B, K, S//S_tile)``; each step is a ``[S_tile, dh] × [dh, R]`` MXU
+matmul followed by a row max — no cross-step state, fully parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, s_ref):
+    q = q_ref[0, 0]        # [R, dh] block queries (Sb·G rows)
+    k = k_ref[0, 0]        # [S_tile, dh]
+    z = jnp.dot(k, q.T, preferred_element_type=jnp.float32)   # [S_tile, R]
+    s_ref[0, 0] = jnp.max(z, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("s_tile", "interpret"))
+def head_score_call(
+    q: jax.Array,     # [B, K, R, dh]  block queries, groups flattened
+    k: jax.Array,     # [B, K, S, dh]  full-sequence keys, head-major
+    *,
+    s_tile: int = 512,
+    interpret: bool = True,
+):
+    B, K, R, dh = q.shape
+    S = k.shape[2]
+    s_tile = min(s_tile, S)
+    assert S % s_tile == 0, (S, s_tile)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(B, K, S // s_tile),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s_tile, dh), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s_tile), lambda b, h, j: (b, h, j)),
+        out_shape=jax.ShapeDtypeStruct((B, K, S), jnp.float32),
+        interpret=interpret,
+    )(q, k)
+    return out

@@ -1,0 +1,2 @@
+# Launch layer: production mesh, sharding rules, multi-pod dry-run,
+# train/serve drivers.

@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# --- multi-pod dry-run: lower + compile every (arch × shape × mesh) cell ---
+#
+# The two lines above run before ANY other import (jax locks the device count
+# on first init). 512 placeholder host devices back the production meshes:
+# single-pod (16,16)=(data,model) and multi-pod (2,16,16)=(pod,data,model).
+#
+# For each cell this driver:
+#   1. builds the arch's step function for the shape kind
+#      (train_4k -> train_step; prefill_32k -> serve_refresh + C1 decode;
+#       decode_32k / long_500k -> serve_reuse + C1 decode),
+#   2. builds ShapeDtypeStruct inputs with production shardings (no
+#      allocation),
+#   3. .lower().compile()s under the mesh — success proves the distribution
+#      config is coherent,
+#   4. records memory_analysis / cost_analysis / HLO collective bytes into a
+#      JSON roofline record (EXPERIMENTS.md §Dry-run and §Roofline read it).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+#   python -m repro.launch.dryrun --all --multipod --out results/dryrun.json
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES_BY_NAME, get_config
+from repro.configs.base import ModelConfig, ServeConfig, ShapeConfig, TrainConfig
+from repro.launch.mesh import axis_size, data_axes, make_production_mesh
+from repro.launch.sharding import Rules
+from repro.models import backbone as BB
+from repro.models import lm_head as LM
+from repro.models import transformer as T
+from repro.models.sparse_select import PackedKV
+from repro.roofline.analysis import analyze_compiled
+
+BLOCK = 32                 # dLLM active block (paper Table 3)
+RETENTION = 0.5            # paper default r
+MAX_NUM_LOGITS = 2048      # paper Table 3
+Q_CHUNK = 1024             # refresh attention query tile
+
+
+def sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=jax.sharding.NamedSharding(mesh, spec))
+
+
+def param_structs(cfg: ModelConfig, mesh, rules: Rules):
+    shapes = jax.eval_shape(partial(BB.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    specs = rules.params(shapes)
+    return jax.tree.map(
+        lambda l, s: sds(l.shape, l.dtype, mesh, s), shapes, specs), shapes
+
+
+def serve_ctx(cfg: ModelConfig, shape: ShapeConfig, *, block: int,
+              retention: float, selection: str) -> T.ServeContext:
+    retain = max(block, int(shape.seq_len * retention))
+    # keep SSD chunking + retained length block-aligned
+    retain = -(-retain // block) * block
+    # prefill at 32k: a [B, H, q_chunk, S] f32 score tile must stay ≲2 GiB
+    # per device -> shrink the query tile for long refreshes
+    qc = Q_CHUNK if shape.seq_len <= 8192 else 256
+    return T.ServeContext(block_size=block, retain=retain, kernel_size=3,
+                          selection=selection, q_chunk=qc)
+
+
+def text_len(cfg: ModelConfig, S: int) -> int:
+    return S - (cfg.frontend_len if cfg.frontend_dim else 0)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D for training; 2·N_active·D for forward-only serving."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    # decode: one active block of 1 token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# cell builders: (fn, example_args) per shape kind
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                tc: TrainConfig):
+    from repro.train.optimizer import init_opt_state
+    from repro.train.train_loop import make_train_step
+
+    rules = Rules(cfg, mesh, train=True)
+    params, pshapes = param_structs(cfg, mesh, rules)
+    oshape = jax.eval_shape(init_opt_state, pshapes)
+    ospecs = rules.opt_state(pshapes)
+    opt = jax.tree.map(lambda l, s: sds(l.shape, l.dtype, mesh, s),
+                       oshape, ospecs)
+    G, S = shape.global_batch, text_len(cfg, shape.seq_len)
+    tokens = sds((G, S), jnp.int32, mesh, rules.tokens(G))
+    rng = sds((), jnp.uint32, mesh, jax.sharding.PartitionSpec())
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    step = make_train_step(cfg, tc)
+    args = (params, opt, tokens, rng)
+    if cfg.frontend_dim:
+        fe = sds((G, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16, mesh,
+                 rules.frontend())
+        args = args + (fe,)
+    return step, args
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  selection: str, retention: float, logit_mode: str,
+                  flash_refresh: bool = False):
+    rules = Rules(cfg, mesh, train=False)
+    params, _ = param_structs(cfg, mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    St = text_len(cfg, S)
+    ctx = serve_ctx(cfg, shape, block=BLOCK, retention=retention,
+                    selection=selection)
+    if flash_refresh:
+        ctx = dataclasses.replace(ctx, use_flash_refresh=True)
+
+    def step(params, tokens, block_start, token_valid, frontend=None):
+        out = BB.serve_refresh(params, cfg, tokens, block_start, ctx,
+                               frontend=frontend, token_valid=token_valid)
+        h = out.block_hidden.reshape(-1, cfg.d_model)
+        ids, conf = LM.decode_tokens(params["embed"], cfg, h,
+                                     max_num_logits=MAX_NUM_LOGITS,
+                                     mode=logit_mode)
+        return ids, conf, out.cache
+
+    dp = rules.tokens(B)
+    args = (params,
+            sds((B, St), jnp.int32, mesh, dp),
+            sds((B,), jnp.int32, mesh,
+                jax.sharding.PartitionSpec(dp[0] if B % axis_size(mesh, rules.dp) == 0 else None)),
+            sds((B, S), jnp.bool_, mesh, dp))
+    if cfg.frontend_dim:
+        args = args + (sds((B, cfg.frontend_len, cfg.frontend_dim),
+                           jnp.bfloat16, mesh, rules.frontend()),)
+    return step, args
+
+
+def cache_structs(cfg: ModelConfig, mesh, rules: Rules, batch: int,
+                  retain: int):
+    """ShapeDtypeStructs for the serving cache of each family."""
+    dt = jnp.dtype(cfg.dtype)
+    spec = rules.cache(batch, retain)
+    dh = cfg.resolved_head_dim if cfg.n_heads else 0
+    K = cfg.n_kv_heads
+
+    def kv_struct(n_layers, sp: PackedKV):
+        kshape = (n_layers, batch, K, retain, dh)
+        mshape = (n_layers, batch, K, retain)
+        return PackedKV(
+            k=sds(kshape, dt, mesh, sp.k), v=sds(kshape, dt, mesh, sp.v),
+            pos=sds(mshape, jnp.int32, mesh, sp.pos),
+            valid=sds(mshape, jnp.bool_, mesh, sp.valid))
+
+    if cfg.family == "ssm":
+        from repro.models.ssm import SSMCache, conv_channels
+        st = (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+              cfg.ssm_state)
+        cv = (cfg.n_layers, batch, cfg.ssm_conv_kernel - 1,
+              conv_channels(cfg))
+        return SSMCache(state=sds(st, jnp.float32, mesh, spec.state),
+                        conv=sds(cv, dt, mesh, spec.conv))
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridCache, group_shape
+        from repro.models.ssm import conv_channels
+        n_groups, _, _ = group_shape(cfg)
+        st = (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+              cfg.ssm_state)
+        cv = (cfg.n_layers, batch, cfg.ssm_conv_kernel - 1,
+              conv_channels(cfg))
+        return HybridCache(
+            ssm_state=sds(st, jnp.float32, mesh, spec.ssm_state),
+            conv=sds(cv, dt, mesh, spec.conv),
+            kv=kv_struct(n_groups, spec.kv))
+    return kv_struct(cfg.n_layers, spec)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 selection: str, retention: float, logit_mode: str):
+    rules = Rules(cfg, mesh, train=False)
+    params, _ = param_structs(cfg, mesh, rules)
+    B, S = shape.global_batch, shape.seq_len
+    Sb = 1   # decode shapes: one new token over a seq_len KV cache
+    ctx = dataclasses.replace(
+        serve_ctx(cfg, shape, block=BLOCK, retention=retention,
+                  selection=selection), block_size=Sb)
+    retain = max(BLOCK, int(S * retention))
+    retain = -(-retain // BLOCK) * BLOCK
+    cache = cache_structs(cfg, mesh, rules, B, retain)
+
+    def step(params, btok, bpos, cache):
+        h = BB.serve_reuse(params, cfg, btok, bpos, cache, ctx)
+        ids, conf = LM.decode_tokens(params["embed"], cfg,
+                                     h.reshape(-1, cfg.d_model),
+                                     max_num_logits=MAX_NUM_LOGITS,
+                                     mode=logit_mode)
+        return ids, conf
+
+    dpn = axis_size(mesh, rules.dp)
+    bspec = rules.dp if B % dpn == 0 and B >= dpn else None
+    args = (params,
+            sds((B, Sb), jnp.int32, mesh, jax.sharding.PartitionSpec(bspec, None)),
+            sds((B, Sb), jnp.int32, mesh, jax.sharding.PartitionSpec(bspec, None)),
+            cache)
+    return step, args
+
+
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             selection: str = "head", retention: float = RETENTION,
+             logit_mode: str = "chunked", moe_impl: str = "gather",
+             microbatches: int = 8, grad_compression: str = "none",
+             opt_loss: bool = False, flash_refresh: bool = False,
+             pad_vocab: bool = False, loss_chunk: int = MAX_NUM_LOGITS,
+             verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    from jax.sharding import PartitionSpec as P
+    from repro.models import layers as Lmod
+    dp = data_axes(mesh)
+    policy = {"act3d": P(dp, None, None)}
+    if opt_loss:
+        # §Perf "CE reshard": vocab-parallel head weight at the point of use
+        # + chunk tokens spread over data (one hoisted weight all-gather
+        # instead of per-chunk [chunk, V] partial-product all-reduces)
+        policy.update({
+            "logit_w": P(None, "model"),
+            "logit_w_tied": P("model", None),
+            "loss_h3": P(None, dp, None),
+        })
+    Lmod.set_sharding_policy(policy)
+    cfg = get_config(arch)
+    if cfg.is_moe and moe_impl != cfg.moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if pad_vocab and cfg.vocab_size % 128:
+        # Megatron-style vocab padding: shardability for CE/logits
+        v = -(-cfg.vocab_size // 128) * 128
+        cfg = dataclasses.replace(cfg, vocab_size=v)
+    shape = SHAPES_BY_NAME[shape_name]
+    name = f"{arch}×{shape_name}×{'2x16x16' if multi_pod else '16x16'}"
+    t0 = time.time()
+    if shape.kind == "train":
+        tc = TrainConfig(microbatches=microbatches, remat=True,
+                         loss_chunk=loss_chunk,
+                         grad_compression=grad_compression)
+        fn, args = build_train(cfg, shape, mesh, tc)
+    elif shape.kind == "prefill":
+        fn, args = build_prefill(cfg, shape, mesh, selection, retention,
+                                 logit_mode, flash_refresh=flash_refresh)
+    else:
+        fn, args = build_decode(cfg, shape, mesh, selection, retention,
+                                logit_mode)
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn).lower(*args)
+        compiled = lowered.compile()
+    # per-device bf16 argument bytes: XLA:CPU upcasts every bf16 weight/cache
+    # operand to f32 (2x its size) — a backend artifact absent on TPU. Used
+    # to bound the TPU-side temp estimate.
+    import numpy as _np
+    bf16_args = 0
+    for leaf in jax.tree.leaves(args):
+        if getattr(leaf, "dtype", None) == jnp.bfloat16 and leaf.sharding:
+            sh = leaf.sharding.shard_shape(leaf.shape)
+            bf16_args += int(_np.prod(sh)) * 2
+    from repro.roofline.flops import analytic_cost
+    dp_n = axis_size(mesh, data_axes(mesh))
+    tp_n = axis_size(mesh, "model")
+    analytic = analytic_cost(cfg, shape, dp=dp_n, tp=tp_n,
+                             retention=retention, microbatches=microbatches,
+                             remat=True, q_chunk=Q_CHUNK,
+                             flash_refresh=flash_refresh)
+    roof = analyze_compiled(name, compiled, chips, model_flops(cfg, shape),
+                            analytic=analytic)
+    roof.f32_upcast_bytes = 2 * bf16_args
+    rec = roof.to_dict()
+    rec.update(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               selection=selection, retention=retention,
+               logit_mode=logit_mode, moe_impl=moe_impl,
+               opt_loss=opt_loss, flash_refresh=flash_refresh,
+               pad_vocab=pad_vocab,
+               compile_s=round(time.time() - t0, 1), ok=True)
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[ok] {name}  compile={rec['compile_s']}s")
+        print(f"     mem/device: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"(tpu-est {roof.temp_bytes_tpu_estimate/2**30:.2f}GiB) "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB")
+        print("     " + roof.row())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--selection", default="head")
+    ap.add_argument("--retention", type=float, default=RETENTION)
+    ap.add_argument("--logit-mode", default="chunked")
+    ap.add_argument("--moe-impl", default="gather")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--opt-loss", action="store_true",
+                    help="CE reshard optimization (hillclimb)")
+    ap.add_argument("--flash-refresh", action="store_true",
+                    help="Pallas flash kernel for Refresh attention")
+    ap.add_argument("--pad-vocab", action="store_true",
+                    help="pad vocab to a 128 multiple for shardability")
+    ap.add_argument("--loss-chunk", type=int, default=MAX_NUM_LOGITS)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ASSIGNED) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if args.all or not args.shape \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    # activation budget: the two 80-layer dense archs need deeper grad
+    # accumulation to keep per-layer remat residuals under 16 GiB/chip
+    DEEP_ACCUM = {"qwen2-72b", "internvl2-76b"}
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mb = 16 if arch in DEEP_ACCUM and shape == "train_4k" \
+                    else args.microbatches
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   selection=args.selection,
+                                   retention=args.retention,
+                                   logit_mode=args.logit_mode,
+                                   moe_impl=args.moe_impl,
+                                   microbatches=mb,
+                                   grad_compression=args.grad_compression,
+                                   opt_loss=args.opt_loss,
+                                   flash_refresh=args.flash_refresh,
+                                   pad_vocab=args.pad_vocab,
+                                   loss_chunk=args.loss_chunk)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = dict(arch=arch, shape=shape,
+                               mesh="2x16x16" if mp else "16x16",
+                               ok=False, error=f"{type(e).__name__}: {e}")
+                    print(f"[FAIL] {arch}×{shape}: {e}")
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+    n_ok = sum(r["ok"] for r in records)
+    print(f"\n{n_ok}/{len(records)} cells compiled successfully")
+    return 0 if n_ok == len(records) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Production mesh definitions (single-pod 16×16, multi-pod 2×16×16).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (required so smoke tests see 1 device while the dry-run sees
+512 placeholder devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import os
+    override = os.environ.get("REPRO_MESH")  # e.g. "2,4" (CI-scale tests)
+    if override:
+        dims = tuple(int(x) for x in override.split(","))
+        axes = (("pod", "data", "model") if len(dims) == 3
+                else ("data", "model"))
+        return jax.make_mesh(dims, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes batches shard over (pods fold into data parallelism)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= axis_size(mesh, n)
+        return out
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def small_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Tiny mesh for CPU subprocess tests (requires host device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

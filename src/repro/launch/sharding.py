@@ -1,0 +1,167 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs for any arch.
+
+Strategy (DESIGN.md §4):
+  * **TP** over the ``model`` axis: attention heads, FFN hidden, MoE experts,
+    vocab (vocab-parallel embedding + LM head).
+  * **FSDP** over the ``data`` axis in training: every weight's d_model-like
+    dim additionally sharded so params+grads+Adam moments scale 1/(data·model)
+    (the pod axis stays pure DP — cross-pod FSDP would gather over slow ICI).
+  * Divisibility rule: a dim is sharded only if its size divides the axis
+    size; otherwise replicated (e.g. gemma-2b's 8 heads on a 16-way model
+    axis stay replicated, its 16384 FFN shards).
+
+Serving caches: KV slots shard batch over data, heads over model when
+divisible else the *retained-length* axis over model (engaging idle TP
+capacity for decode); long-context (batch=1) shards retained length over
+every axis — the sequence-parallel sparse decode of DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import axis_size, data_axes
+
+
+class Rules:
+    def __init__(self, cfg: ModelConfig, mesh, train: bool):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.train = train
+        self.m = axis_size(mesh, "model")
+        self.d = axis_size(mesh, "data")
+        self.dp = data_axes(mesh)             # ('pod','data') or ('data',)
+
+    def div(self, n: int, axis: str = "model") -> Optional[str]:
+        sz = axis_size(self.mesh, axis)
+        return axis if n and n % sz == 0 and n >= sz else None
+
+    def fsdp(self, n: int) -> Optional[str]:
+        if not self.train:
+            return None
+        return "data" if n % self.d == 0 and n >= self.d else None
+
+    def fsdp_always(self, n: int) -> Optional[str]:
+        """Storage sharding applied even at serve time (MoE expert stacks:
+        qwen3-235b would need 29 GiB/chip under TP-only)."""
+        return "data" if n % self.d == 0 and n >= self.d else None
+
+    # ------------------------------------------------------------------
+    def leaf_spec(self, path: str, shape) -> P:
+        cfg = self.cfg
+        name = path.split("/")[-1]
+        D, V = cfg.d_model, cfg.vocab_size
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        F, E = cfg.d_ff, cfg.n_experts
+        Hs = cfg.ssm_heads if cfg.ssm_state else 0
+
+        def pad(*trailing):
+            lead = len(shape) - len(trailing)
+            return P(*([None] * lead), *trailing)
+
+        if name == "table":
+            return pad(self.div(V), self.fsdp(D))
+        if name == "lm_head":
+            return pad(self.fsdp(D), self.div(V))
+        if name == "wq":
+            return pad(self.fsdp(D), self.div(H), None)
+        if name in ("wk", "wv"):
+            return pad(self.fsdp(D), self.div(K), None)
+        if name == "bq":
+            return pad(self.div(H), None)
+        if name in ("bk", "bv"):
+            return pad(self.div(K), None)
+        if name == "wo":
+            return pad(self.div(H), None, self.fsdp(D))
+        if name in ("w_gate", "w_up"):
+            if E and len(shape) >= 3 and shape[-3] == E:
+                return pad(self.div(E), self.fsdp_always(D), None)
+            return pad(self.fsdp(D), self.div(F))
+        if name == "w_down":
+            if E and len(shape) >= 3 and shape[-3] == F:
+                return pad(self.div(E), None, self.fsdp_always(D))
+            return pad(self.div(F), self.fsdp(D))
+        if name == "w_z":
+            inner = self.div(cfg.d_inner) if Hs and Hs % self.m == 0 else None
+            return pad(self.fsdp(D), inner)
+        if name in ("w_xbc", "w_dt"):
+            return pad(self.fsdp(D), None)
+        if name == "out_proj":
+            inner = self.div(cfg.d_inner) if Hs and Hs % self.m == 0 else None
+            return pad(inner, self.fsdp(D))
+        if name == "proj":   # modality frontend
+            return pad(None, self.fsdp(D))
+        return P(*([None] * len(shape)))   # norms, scalars, conv, router
+
+    # ------------------------------------------------------------------
+    def params(self, params_shape) -> dict:
+        def spec(path, leaf):
+            keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            return self.leaf_spec(keys, leaf.shape)
+        return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+    def opt_state(self, params_shape) -> dict:
+        """ZeRO-1: Adam moments follow param sharding (FSDP already shards
+        them over data in train mode); step counter replicated."""
+        ps = self.params(params_shape)
+        return {"m": ps, "v": ps, "step": P()}
+
+    # -- batches ----------------------------------------------------------
+    def tokens(self, batch: int) -> P:
+        if batch % axis_size(self.mesh, self.dp) == 0:
+            return P(self.dp, None)
+        return P(None, None)
+
+    def frontend(self) -> P:
+        return P(self.dp, None, None)
+
+    # -- serving cache ------------------------------------------------------
+    def packed_kv(self, batch: int, retain: int) -> object:
+        """PackedKV specs: [L, B, K, R, dh] (+pos/valid [L, B, K, R])."""
+        from repro.models.sparse_select import PackedKV
+        cfg = self.cfg
+        dpn = axis_size(self.mesh, self.dp)
+        if batch % dpn == 0 and batch >= dpn:
+            b_ax, seq_axes = self.dp, ()
+        else:
+            b_ax, seq_axes = None, self.dp    # batch=1: sequence parallelism
+        k_ax = self.div(cfg.n_kv_heads)
+        r_axes = tuple(seq_axes)
+        if k_ax is None:
+            r_axes = r_axes + ("model",)      # engage idle TP on retained len
+        r_ax = r_axes if r_axes else None
+        kv = P(None, b_ax, k_ax, r_ax, None)
+        meta = P(None, b_ax, k_ax, r_ax)
+        return PackedKV(k=kv, v=kv, pos=meta, valid=meta)
+
+    def ssm_cache(self, batch: int) -> object:
+        from repro.models.ssm import SSMCache
+        cfg = self.cfg
+        dpn = axis_size(self.mesh, self.dp)
+        b_ax = self.dp if batch % dpn == 0 and batch >= dpn else None
+        h_ax = self.div(cfg.ssm_heads)
+        return SSMCache(state=P(None, b_ax, h_ax, None, None),
+                        conv=P(None, b_ax, None, None))
+
+    def hybrid_cache(self, batch: int, retain: int) -> object:
+        from repro.models.hybrid import HybridCache
+        sc = self.ssm_cache(batch)
+        return HybridCache(ssm_state=sc.state, conv=sc.conv,
+                           kv=self.packed_kv(batch, retain))
+
+    def cache(self, batch: int, retain: int):
+        fam = self.cfg.family
+        if fam == "ssm":
+            return self.ssm_cache(batch)
+        if fam == "hybrid":
+            return self.hybrid_cache(batch, retain)
+        return self.packed_kv(batch, retain)
+
+    # ------------------------------------------------------------------
+    def named(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))

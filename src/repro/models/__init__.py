@@ -1,0 +1,2 @@
+# Subpackage for model definitions. Import submodules explicitly, e.g.
+# ``from repro.models import backbone`` — kept lazy to avoid import cycles.

@@ -1,0 +1,195 @@
+"""Unified per-family model API used by the engine, trainer, and dry-run.
+
+  * :func:`init_params`   — build the param pytree for any assigned arch.
+  * :func:`train_forward` — full-sequence forward for the masked-diffusion
+    training loss. Returns (normed hidden, moe aux loss).
+  * :func:`serve_refresh` — the paper's **Refresh** phase: full forward,
+    capture the serving cache (packed sparse KV / SSM state), return the
+    active block's hidden states.
+  * :func:`serve_reuse`   — the paper's **Reuse** phase: active-block forward
+    over the cached context.
+
+VLM (`internvl2-76b`) and audio (`musicgen-medium`) archs take a stub
+frontend: precomputed patch/frame embeddings occupying the first
+``frontend_len`` positions (projected by a learned matrix); the LM backbone
+is real. Diffusion decoding operates on the text region.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as HY
+from repro.models import layers as L
+from repro.models import lm_head as LM
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.sparse_select import PackedKV
+
+ATTN_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def mask_mode(cfg: ModelConfig) -> str:
+    """Diffusion LMs are bidirectional; SSM-bearing archs are causal."""
+    return "causal" if cfg.family in ("ssm", "hybrid") else "bidirectional"
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_s, k_f = jax.random.split(key, 3)
+    params = {
+        "embed": LM.init_embed(cfg, k_e, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.family in ATTN_FAMILIES:
+        params["stack"] = T.init_layer_stack(cfg, k_s, dtype)
+    elif cfg.family == "ssm":
+        params["stack"] = S.init_ssm_stack(cfg, k_s, dtype)
+    elif cfg.family == "hybrid":
+        params["stack"] = HY.init_hybrid_params(cfg, k_s, dtype)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.frontend_dim:
+        params["frontend"] = {
+            "proj": L.dense_init(k_f, (cfg.frontend_dim, cfg.d_model), dtype)}
+    return params
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 frontend: Optional[jax.Array] = None) -> jax.Array:
+    """tokens: [B, S_text]; frontend: [B, F, F_dim] or None -> [B, S, D]."""
+    x = LM.embed_tokens(params["embed"], tokens)
+    if cfg.frontend_dim:
+        assert frontend is not None, f"{cfg.name} needs frontend embeddings"
+        fe = jnp.einsum("bfe,ed->bfd", frontend.astype(x.dtype),
+                        params["frontend"]["proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return L.constrain(x, "act3d")
+
+
+def _final(params, cfg, h):
+    return L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+
+
+def _serve_chunk_cfg(cfg: ModelConfig, block_size: int) -> ModelConfig:
+    """SSM chunk must divide block boundaries for state capture."""
+    if cfg.family in ("ssm", "hybrid"):
+        c = math.gcd(cfg.ssm_chunk, block_size)
+        if c != cfg.ssm_chunk:
+            return dataclasses.replace(cfg, ssm_chunk=c)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+def train_forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    frontend: Optional[jax.Array] = None,
+    *,
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    x = embed_inputs(params, cfg, tokens, frontend)
+    B, Sq, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    aux = jnp.float32(0.0)
+    if cfg.family in ATTN_FAMILIES:
+        h, _, aux = T.forward_full(
+            params["stack"], cfg, x, positions,
+            mask_mode=mask_mode(cfg), remat=remat)
+    elif cfg.family == "ssm":
+        body = lambda c, p: (S.mamba_block(p, c, cfg), None)
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, x, params["stack"])
+    else:  # hybrid
+        h, _ = HY.forward_full(params["stack"], cfg, x, positions, remat=remat)
+    return _final(params, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# serving: Refresh
+# ---------------------------------------------------------------------------
+
+class RefreshOut(NamedTuple):
+    block_hidden: jax.Array      # [B, Sb, D] (final-normed)
+    cache: object                # PackedKV | SSMCache | HybridCache
+
+
+def _slice_block(h: jax.Array, block_start: jax.Array, Sb: int) -> jax.Array:
+    return jax.vmap(
+        lambda hi, st: jax.lax.dynamic_slice_in_dim(hi, st, Sb, axis=0)
+    )(h, block_start)
+
+
+def serve_refresh(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,               # [B, S_text]
+    block_start: jax.Array,          # [B] int32 (position in the FULL sequence)
+    serve: T.ServeContext,
+    frontend: Optional[jax.Array] = None,
+    token_valid: Optional[jax.Array] = None,   # [B, S_total]
+) -> RefreshOut:
+    x = embed_inputs(params, cfg, tokens, frontend)
+    B, Sq, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    if token_valid is None:
+        token_valid = jnp.ones((B, Sq), bool)
+    if cfg.family in ATTN_FAMILIES:
+        h, packed, _ = T.forward_full(
+            params["stack"], cfg, x, positions, token_valid=token_valid,
+            mask_mode=mask_mode(cfg), serve=serve, block_start=block_start)
+        cache = packed
+    elif cfg.family == "ssm":
+        ccfg = _serve_chunk_cfg(cfg, serve.block_size)
+
+        def body(c, p):
+            out, st, hi = S.mamba_block(p, c, ccfg, capture_at=block_start)
+            return out, (st, hi)
+
+        h, (st, hi) = jax.lax.scan(body, x, params["stack"])
+        cache = S.SSMCache(state=st, conv=hi)
+    else:  # hybrid
+        ccfg = _serve_chunk_cfg(cfg, serve.block_size)
+        h, cache = HY.forward_full(
+            params["stack"], ccfg, x, positions, token_valid=token_valid,
+            serve=serve, block_start=block_start)
+    bh = _slice_block(_final(params, cfg, h), block_start, serve.block_size)
+    return RefreshOut(block_hidden=bh, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# serving: Reuse
+# ---------------------------------------------------------------------------
+
+def serve_reuse(
+    params: dict,
+    cfg: ModelConfig,
+    block_tokens: jax.Array,     # [B, Sb]
+    block_positions: jax.Array,  # [B, Sb] absolute positions
+    cache,
+    serve: T.ServeContext,
+) -> jax.Array:
+    xb = LM.embed_tokens(params["embed"], block_tokens)
+    if cfg.family in ATTN_FAMILIES:
+        h = T.forward_block(params["stack"], cfg, xb, block_positions, cache,
+                            serve=serve, mask_mode=mask_mode(cfg))
+    elif cfg.family == "ssm":
+        def body(c, scanned):
+            p, st, hi = scanned
+            return S.mamba_decode_block(p, c, cfg, st, hi), None
+        h, _ = jax.lax.scan(body, xb,
+                            (params["stack"], cache.state, cache.conv))
+    else:  # hybrid
+        h = HY.forward_block(params["stack"], cfg, xb, block_positions, cache,
+                             serve=serve)
+    return _final(params, cfg, h)

@@ -1,0 +1,156 @@
+"""Zamba2-style hybrid backbone: Mamba2 stack + one *shared* attention block.
+
+``n_layers`` Mamba2 layers are organized into groups of
+``shared_attn_interval``; after each group the single weight-tied attention+
+MLP block runs (Zamba2's global shared transformer block). Remaining layers
+form a tail. The model is causal (the Mamba stack forces causality), so
+diffusion serving runs in block-causal mode.
+
+Serving caches (per paper phase split):
+  * per-Mamba-layer recurrent state + conv history at ``block_start``
+    (constant-size — C3 inapplicable to these, see DESIGN.md §5),
+  * per-shared-invocation head-centric packed KV (C3 applies here).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.sparse_select import PackedKV
+
+
+class HybridCache(NamedTuple):
+    ssm_state: jax.Array   # [Lm, B, H, P, N]
+    conv: jax.Array        # [Lm, B, ck-1, ch]
+    kv: PackedKV           # leading [n_invocations] axis
+
+
+def group_shape(cfg: ModelConfig) -> Tuple[int, int, int]:
+    itv = cfg.shared_attn_interval
+    n_groups = cfg.n_layers // itv
+    tail = cfg.n_layers - n_groups * itv
+    return n_groups, itv, tail
+
+
+def init_hybrid_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    mamba = S.init_ssm_stack(cfg, k1, dtype)
+    # one shared transformer layer (unstacked): reuse the dense layer init
+    import dataclasses
+    one = dataclasses.replace(cfg, n_layers=1, n_experts=0, family="dense")
+    shared = jax.tree.map(lambda a: a[0], T.init_layer_stack(one, k2, dtype))
+    return {"mamba": mamba, "shared": shared}
+
+
+def _split_groups(stack: dict, cfg: ModelConfig):
+    n_groups, itv, tail = group_shape(cfg)
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * itv].reshape((n_groups, itv) + a.shape[1:]), stack)
+    tail_p = jax.tree.map(lambda a: a[n_groups * itv:], stack)
+    return grouped, tail_p
+
+
+def forward_full(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,              # [B, S, D]
+    positions: jax.Array,      # [B, S]
+    *,
+    token_valid: Optional[jax.Array] = None,
+    serve: Optional[T.ServeContext] = None,
+    block_start: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Optional[HybridCache]]:
+    B, Sq, D = x.shape
+    if token_valid is None:
+        token_valid = jnp.ones((B, Sq), bool)
+    cos, sin = L.rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    grouped, tail_p = _split_groups(params["mamba"], cfg)
+    n_groups, itv, tail = group_shape(cfg)
+    capture = block_start if serve is not None else None
+    not_local = jnp.asarray(False)
+
+    def mamba_body(carry, p):
+        if capture is not None:
+            out, st, hi = S.mamba_block(p, carry, cfg, capture_at=capture)
+            return out, (st, hi)
+        return S.mamba_block(p, carry, cfg), None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    def group_body(carry, pg):
+        h, ys = jax.lax.scan(mamba_body, carry, pg)
+        h, packed, _aux = T._layer_full(
+            params["shared"], h, cfg, positions, cos, sin, not_local,
+            token_valid, "causal", serve, capture)
+        return h, (ys, packed)
+
+    if remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+
+    x, (g_ys, packed) = jax.lax.scan(group_body, x, grouped)
+    t_ys = None
+    if tail:
+        x, t_ys = jax.lax.scan(mamba_body, x, tail_p)
+
+    if serve is None:
+        return x, None
+
+    states = jax.tree.map(
+        lambda a: a.reshape((n_groups * itv,) + a.shape[2:]), g_ys)
+    if tail:
+        states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), states, t_ys)
+    cache = HybridCache(ssm_state=states[0], conv=states[1], kv=packed)
+    return x, cache
+
+
+def forward_block(
+    params: dict,
+    cfg: ModelConfig,
+    xb: jax.Array,              # [B, Sb, D]
+    block_positions: jax.Array,
+    cache: HybridCache,
+    *,
+    serve: T.ServeContext,
+) -> jax.Array:
+    cos, sin = L.rope_tables(block_positions, cfg.resolved_head_dim, cfg.rope_theta)
+    n_groups, itv, tail = group_shape(cfg)
+    grouped, tail_p = _split_groups(params["mamba"], cfg)
+    st = cache.ssm_state.reshape((n_groups, itv) + cache.ssm_state.shape[1:]) \
+        if not tail else cache.ssm_state[: n_groups * itv].reshape(
+            (n_groups, itv) + cache.ssm_state.shape[1:])
+    cv = cache.conv[: n_groups * itv].reshape(
+        (n_groups, itv) + cache.conv.shape[1:])
+    not_local = jnp.asarray(False)
+
+    def mamba_body(carry, scanned):
+        p, state, hist = scanned
+        return S.mamba_decode_block(p, carry, cfg, state, hist), None
+
+    def group_body(carry, scanned):
+        pg, stg, cvg, ck, cvv, cpos, cval = scanned
+        h, _ = jax.lax.scan(mamba_body, carry, (pg, stg, cvg))
+        h = T.reuse_attention_layer(
+            params["shared"], h, cfg, cos, sin, block_positions, not_local,
+            ck, cvv, cpos, cval, "causal", use_kernel=serve.use_flash_kernel,
+            concat=serve.reuse_concat)
+        h2 = L.rms_norm(h, params["shared"]["mlp_norm"], cfg.rms_eps)
+        y, _ = T._mlp(params["shared"], h2, cfg)
+        return h + y, None
+
+    kv = cache.kv
+    xb, _ = jax.lax.scan(
+        group_body, xb, (grouped, st, cv, kv.k, kv.v, kv.pos, kv.valid))
+    if tail:
+        t_st = cache.ssm_state[n_groups * itv:]
+        t_cv = cache.conv[n_groups * itv:]
+        xb, _ = jax.lax.scan(mamba_body, xb, (tail_p, t_st, t_cv))
+    return xb

@@ -1,0 +1,208 @@
+"""Shared layer primitives: RMSNorm, RoPE, GQA attention, gated MLPs, softcap.
+
+Conventions
+-----------
+* Activations: ``[B, S, D]``; attention heads kept 4-D ``[B, S, H, dh]``.
+* GQA: ``H = K * G`` query heads over ``K`` KV heads; scores einsum groups G.
+* All softmax/normalization math in float32, cast back to the working dtype.
+* Attention is *bidirectional* (diffusion LM). Causal masking is available for
+  the SSM/audio-AR paths via ``mask_mode``.
+* The full-sequence ("Refresh") path uses query-blocked attention
+  (``lax.map`` over query chunks) so the score tensor never exceeds
+  ``[B, heads, q_chunk, Sk]`` — the TPU-side analogue of IO-aware tiling,
+  and the thing that makes 32k-token refresh steps lowerable at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# Query-chunk size for blocked (Refresh-phase) attention.
+DEFAULT_Q_CHUNK = 1024
+
+# ---------------------------------------------------------------------------
+# Activation-sharding policy. The launch layer installs PartitionSpecs here
+# (under an active mesh) and model code pins activations at layer boundaries;
+# without a policy (engine/smoke tests on one device) these are no-ops.
+# Pinning matters: XLA's SPMD propagation otherwise picks degenerate layouts
+# downstream of the vocab-sharded embedding gather (observed: involuntary
+# full rematerialization + 49 GiB/device temps on gemma-2b×train_4k).
+# ---------------------------------------------------------------------------
+_SHARDING_POLICY: dict = {}
+
+
+def set_sharding_policy(policy: dict) -> None:
+    """policy: name -> PartitionSpec, e.g. {"act3d": P(('pod','data'),None,None)}."""
+    _SHARDING_POLICY.clear()
+    _SHARDING_POLICY.update(policy)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    spec = _SHARDING_POLICY.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterization keeps init at identity
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for given integer positions. positions: [...]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, dh]; cos/sin: [B, S, half] (or [S, half])."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x32[..., :half], x32[..., half:]
+    if cos.ndim == 2:  # [S, half] -> broadcast over batch
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[..., None, :]  # [B, S, 1, half]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jax.Array,              # [B, Sq, H, dh]
+    k: jax.Array,              # [B, Sk, K, dh]
+    v: jax.Array,              # [B, Sk, K, dh]
+    *,
+    q_pos: jax.Array,          # [B, Sq]
+    kv_pos: jax.Array,         # [B, Sk]
+    kv_valid: Optional[jax.Array] = None,  # [B, Sk] bool (padding mask)
+    mask_mode: str = "bidirectional",
+    window: int = 0,           # static window size (0 = no local masking)
+    is_local: jax.Array | bool = False,    # runtime flag (gemma2 alt layers)
+    attn_softcap: float = 0.0,
+    q_chunk: int = DEFAULT_Q_CHUNK,
+    use_kernel: bool = False,              # Pallas flash-refresh kernel
+) -> jax.Array:
+    """Query-blocked exact attention. Returns [B, Sq, H, dh].
+
+    Masks are built *per query chunk* ([B, c, Sk] bool) — never a full
+    [B, Sq, Sk] bias — which is what keeps 32k/500k refresh steps lowerable.
+    ``use_kernel`` dispatches to the flash-refresh Pallas kernel (forward
+    only — the serving path; training keeps the differentiable jnp path).
+    """
+    if use_kernel and q.shape[1] == k.shape[1]:
+        from repro.kernels import ops as kops
+        B, Sq = q.shape[:2]
+        return kops.flash_refresh_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+            kv_valid=(kv_valid if kv_valid is not None
+                      else jnp.ones((B, Sq), bool)),
+            mask_mode=mask_mode, window=window, is_local=is_local,
+            softcap=attn_softcap)
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = dh ** -0.5
+    qg = q.reshape(B, Sq, K, G, dh)
+    needs_mask = (mask_mode == "causal") or window or (kv_valid is not None)
+
+    def chunk_mask(qp):            # qp: [B, c] -> [B, c, Sk] bool | None
+        if not needs_mask:
+            return None
+        ok = jnp.ones((B, qp.shape[1], kv_pos.shape[1]), bool)
+        if kv_valid is not None:
+            ok &= kv_valid[:, None, :]
+        if mask_mode == "causal":
+            ok &= qp[:, :, None] >= kv_pos[:, None, :]
+        if window:
+            dist = jnp.abs(qp[:, :, None] - kv_pos[:, None, :])
+            ok &= jnp.where(is_local, dist <= window, True)
+        return ok
+
+    # remat'd: the backward pass recomputes this chunk's [*, c, Sk] scores/
+    # probs instead of the q-chunk map stacking them as f32 residuals
+    # (without this, train_4k peaks at [nq, B, H, c, S] f32 — 20+ GiB/device).
+    @jax.checkpoint
+    def block(args):
+        qb, qp = args              # qb: [B, c, K, G, dh]; qp: [B, c]
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k).astype(jnp.float32) * scale
+        if attn_softcap:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        ok = chunk_mask(qp)
+        if ok is not None:
+            s = jnp.where(ok[:, None, None, :, :], s, -1e30)  # [B,K,G,c,Sk]
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+    if Sq <= q_chunk:
+        out = block((qg, q_pos))
+    else:
+        pad = (-Sq) % q_chunk
+        qp_pad = qg
+        pos_pad = q_pos
+        if pad:   # vlm/audio: frontend offsets make Sq non-divisible
+            qp_pad = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            pos_pad = jnp.pad(q_pos, ((0, 0), (0, pad)))
+        Sp = Sq + pad
+        nq = Sp // q_chunk
+        qc = qp_pad.reshape(B, nq, q_chunk, K, G, dh).transpose(1, 0, 2, 3, 4, 5)
+        pc = pos_pad.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+        out = jax.lax.map(block, (qc, pc))          # [nq, B, c, K, G, dh]
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, K, G, dh)[:, :Sq]
+    return out.reshape(B, Sq, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, activation: str) -> jax.Array:
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    g = act(jnp.einsum("bsd,df->bsf", x, w_gate))
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    return jnp.einsum("bsf,fd->bsd", g * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def layer_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer is_local flag for alt_local_global patterns. [L] bool."""
+    if cfg.layer_pattern == "alt_local_global":
+        # gemma2: even layers local (sliding window), odd layers global
+        return jnp.arange(cfg.n_layers) % 2 == 0
+    return jnp.zeros((cfg.n_layers,), bool)

@@ -1,0 +1,174 @@
+"""Embedding + output head with Logit-Aware Activation Budgeting (paper C1).
+
+The paper's §3.2 "logit memory boom": a monolithic ``[B, L, V]`` logit tensor
+(8.3 GB for LLaDA-8B at B=16, L=2048) sets peak activation memory. dLLM-Serve
+bounds it by splitting the output projection into serial token-axis
+sub-batches of ``max_num_logits`` tokens (§4.3). On TPU we go one step
+further: within a sub-batch the *fused* path (``repro.kernels``) tiles the
+vocab axis through VMEM with an online argmax/logsumexp, so peak activation is
+``[chunk, V_tile]`` — the full ``[N, V]`` never exists even transiently.
+
+Three decode modes (``ServeConfig.logit_mode``):
+  * ``monolithic`` — materialize ``[N, V]`` (the baseline the paper attacks),
+  * ``chunked``    — paper-faithful serial sub-batches (jnp),
+  * ``fused``      — sub-batches + Pallas online-argmax kernel (ours).
+
+The same decomposition is applied to the *training* loss: the chunked
+masked-diffusion CE never materializes more than ``[chunk, V]`` logits.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_embed(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    p = {"table": L.dense_init(key, (cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["lm_head"] = L.dense_init(k2, (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def _logits(params: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """h: [..., D] -> [..., V] (float32, softcapped).
+
+    The optional "logit_w*" sharding-policy constraints (installed by the
+    launch layer) pin the head weight to a pure vocab-parallel layout at the
+    point of use: the FSDP'd D axis is all-gathered ONCE (hoisted out of the
+    chunk scan) instead of the matmul emitting a partial-product
+    [chunk, V]-sized all-reduce per chunk — the §Perf "CE reshard" iteration.
+    """
+    if cfg.tie_embeddings:
+        w = L.constrain(params["table"], "logit_w_tied")
+        z = jnp.einsum("...d,vd->...v", h, w)
+    else:
+        w = L.constrain(params["lm_head"], "logit_w")
+        z = jnp.einsum("...d,dv->...v", h, w)
+    z = z.astype(jnp.float32)
+    if cfg.final_softcap:
+        z = cfg.final_softcap * jnp.tanh(z / cfg.final_softcap)
+    return z
+
+
+def logits_monolithic(params, cfg, h):
+    """The un-budgeted baseline: full [N, V] materialization."""
+    return _logits(params, cfg, h)
+
+
+def _decode_chunk_jnp(params, cfg, h_chunk) -> Tuple[jax.Array, jax.Array]:
+    z = _logits(params, cfg, h_chunk)                  # [c, V] f32
+    ids = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    lse = jax.nn.logsumexp(z, axis=-1)
+    conf = jnp.exp(jnp.max(z, axis=-1) - lse)          # prob of argmax
+    return ids, conf
+
+
+def decode_tokens(
+    params: dict,
+    cfg: ModelConfig,
+    h: jax.Array,              # [N, D] hidden states needing logits
+    *,
+    max_num_logits: int,
+    mode: str = "chunked",     # monolithic | chunked | fused
+    vocab_tile: int = 1024,
+) -> Tuple[jax.Array, jax.Array]:
+    """ArgMax decode + confidence under the C1 budget. Returns ([N], [N])."""
+    N = h.shape[0]
+    if mode == "monolithic" or N <= max_num_logits and mode != "fused":
+        return _decode_chunk_jnp(params, cfg, h)
+
+    chunk = min(max_num_logits, N)
+    pad = (-N) % chunk
+    hp = jnp.pad(h, ((0, pad), (0, 0)))
+    hc = hp.reshape(-1, chunk, h.shape[1])
+
+    if mode == "fused":
+        from repro.kernels import ops as kops
+        if cfg.tie_embeddings:
+            w, layout = params["table"], "vd"      # [V, D], no transpose
+        else:
+            w, layout = params["lm_head"], "dv"    # [D, V]
+        fn = lambda hb: kops.fused_logit_argmax(
+            hb, w, softcap=cfg.final_softcap, vocab_tile=vocab_tile,
+            w_layout=layout)
+    else:
+        fn = lambda hb: _decode_chunk_jnp(params, cfg, hb)
+
+    ids, conf = jax.lax.map(fn, hc)
+    return ids.reshape(-1)[:N], conf.reshape(-1)[:N]
+
+
+def diffusion_loss(
+    params: dict,
+    cfg: ModelConfig,
+    h: jax.Array,          # [B, S, D]
+    labels: jax.Array,     # [B, S] int32
+    weights: jax.Array,    # [B, S] float (1.0 on masked/supervised positions)
+    *,
+    chunk: int = 2048,
+) -> jax.Array:
+    """Masked-diffusion CE, token-axis chunked (C1 applied to training).
+
+    Never materializes more than [chunk, V] logits; with the vocab axis
+    sharded over 'model' this lowers to a local matmul + reduce-scatter.
+    """
+    B, S, D = h.shape
+    hf = h.reshape(B * S, D)
+    lf = labels.reshape(-1)
+    wf = weights.reshape(-1).astype(jnp.float32)
+    N = B * S
+    chunk = min(chunk, N)
+    pad = (-N) % chunk
+    if pad:
+        hf = jnp.pad(hf, ((0, pad), (0, 0)))
+        lf = jnp.pad(lf, (0, pad))
+        wf = jnp.pad(wf, (0, pad))
+    nch = hf.shape[0] // chunk
+
+    # Hoist the head-weight layout constraint OUT of the (remat'd) scan —
+    # inside it, the FSDP all-gather would re-run fwd+recompute+bwd per
+    # chunk (measured: +54 GiB/device of all-gather on gemma-2b×train_4k).
+    params = dict(params)
+    if cfg.tie_embeddings:
+        params["table"] = L.constrain(params["table"], "logit_w_tied")
+    elif "lm_head" in params:
+        params["lm_head"] = L.constrain(params["lm_head"], "logit_w")
+
+    # Stride-chunk the token axis: chunk b takes tokens {a·nch + b}, so every
+    # chunk spans all data shards (contiguous chunking would place each whole
+    # chunk on one shard and serialize the scan; CE is token-permutation
+    # invariant so this is free).
+    if nch > 1:
+        hf = hf.reshape(chunk, nch, D).transpose(1, 0, 2)
+        lf = lf.reshape(chunk, nch).T
+        wf = wf.reshape(chunk, nch).T
+        hf = L.constrain(hf, "loss_h3")
+        xs = (hf, lf, wf)
+    else:
+        xs = (hf.reshape(nch, chunk, D), lf.reshape(nch, chunk),
+              wf.reshape(nch, chunk))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # remat'd: backward recomputes the [chunk, V] logits instead of the
+        # scan saving them as residuals — without this the residual stack
+        # would reconstitute the full [T, V] tensor and defeat C1.
+        hc, lc, wc = xs
+        z = _logits(params, cfg, hc)                    # [chunk, V] f32
+        lse = jax.nn.logsumexp(z, axis=-1)
+        gold = jnp.take_along_axis(z, lc[:, None].astype(jnp.int32), axis=-1)[:, 0]
+        nll = (lse - gold) * wc
+        return (carry[0] + nll.sum(), carry[1] + wc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,170 @@
+"""Top-k routed Mixture-of-Experts FFN with two distribution strategies.
+
+* ``gather`` (baseline): pure-pjit capacity-slot dispatch. Tokens are routed
+  to ``[E, C]`` expert slots via an inverse-index gather, experts run as one
+  batched einsum, and a combine gather weights results back. XLA partitions
+  this automatically; the combine gather across the expert-sharded activation
+  costs an all-gather over the model axis — measured and attacked in
+  EXPERIMENTS.md §Perf.
+* ``ep`` (optimized): explicit expert parallelism under ``shard_map``. Expert
+  weights are sharded over the model axis; every model shard routes its
+  (model-replicated) tokens to its local experts only and the combine is a
+  single ``psum`` of activation-sized partials — the TPU-native analogue of
+  the all-to-all EP exchange.
+
+Routing uses softmax-then-top-k with renormalized gates and the standard
+load-balance auxiliary loss (Switch/GShard form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_moe_stack(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    nl, D, F, E = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (nl, D, E), dtype),
+        "w_gate": L.dense_init(ks[1], (nl, E, D, F), dtype),
+        "w_up": L.dense_init(ks[2], (nl, E, D, F), dtype),
+        "w_down": L.dense_init(ks[3], (nl, E, F, D), dtype),
+    }
+
+
+def _route(p, x2d, cfg: ModelConfig):
+    """Router: returns (gates [T,k], expert_idx [T,k], aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x2d, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux: E * sum_e f_e * p_e
+    E = cfg.n_experts
+    me = probs.mean(axis=0)                                    # [E]
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)   # top-1 fraction
+    ce = onehot.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates.astype(x2d.dtype), idx, aux
+
+
+def _capacity(T: int, cfg: ModelConfig) -> int:
+    c = int(T * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _dispatch_indices(idx, T: int, E: int, C: int):
+    """Capacity-slot assignment. Returns (slot [T,k], keep [T,k], inv [E*C])."""
+    k = idx.shape[1]
+    flat = idx.reshape(-1)                                     # [T*k]
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                        # pos within expert
+    pos = (pos * onehot).sum(-1)                                # [T*k]
+    keep = pos < C
+    slot = jnp.where(keep, flat * C + pos, E * C)               # E*C = drop bin
+    token_of = jnp.arange(T, dtype=jnp.int32).repeat(k)
+    inv = jnp.full((E * C + 1,), -1, jnp.int32).at[slot].set(token_of)[:-1]
+    return slot.reshape(-1, k), keep.reshape(-1, k), inv
+
+
+def _expert_ffn(p, x_disp, cfg: ModelConfig):
+    """x_disp: [E, C, D] -> [E, C, D]."""
+    act = jax.nn.gelu if cfg.activation == "gelu" else jax.nn.silu
+    g = act(jnp.einsum("ecd,edf->ecf", x_disp, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", x_disp, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# baseline: pjit capacity-slot dispatch
+# ---------------------------------------------------------------------------
+
+def _moe_gather(p, x2d, cfg: ModelConfig):
+    T, D = x2d.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = _capacity(T, cfg)
+    gates, idx, aux = _route(p, x2d, cfg)
+    slot, keep, inv = _dispatch_indices(idx, T, E, C)
+    x_disp = jnp.where((inv >= 0)[:, None], x2d[jnp.maximum(inv, 0)], 0)
+    x_disp = x_disp.reshape(E, C, D)
+    y = _expert_ffn(p, x_disp, cfg).reshape(E * C, D)
+    y = jnp.concatenate([y, jnp.zeros((1, D), y.dtype)], axis=0)  # drop bin
+    y_tok = y[jnp.where(keep, slot, E * C)]                       # [T, k, D]
+    out = jnp.einsum("tkd,tk->td", y_tok, gates * keep)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# optimized: shard_map expert parallelism over the model axis
+# ---------------------------------------------------------------------------
+
+def _moe_ep(p, x2d, cfg: ModelConfig):
+    """Expert-parallel MoE. Requires an active mesh with a 'model' axis;
+    token activations replicated over 'model', expert weights sharded on E."""
+    mesh = jax.sharding.get_abstract_mesh()
+    m = mesh.shape["model"]
+    E = cfg.n_experts
+    assert E % m == 0, (E, m)
+    E_loc = E // m
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def shard(f_axes):
+        return P(*f_axes)
+
+    def body(router, wg, wu, wd, x_loc):
+        # x_loc: [T_loc, D] (sharded over data axes, replicated over model)
+        T_loc, D = x_loc.shape
+        my = jax.lax.axis_index("model")
+        pl = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        gates, idx, aux = _route({"router": router}, x_loc, cfg)
+        # keep only assignments routed to my expert shard
+        local = (idx // E_loc) == my
+        idx_loc = jnp.where(local, idx - my * E_loc, E_loc)  # E_loc = drop
+        C = _capacity(T_loc, cfg)  # same formula, local tokens
+        k = cfg.experts_per_token
+        flat = idx_loc.reshape(-1)
+        onehot = jax.nn.one_hot(flat, E_loc + 1, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - 1 * jnp.ones_like(onehot)) * onehot
+        pos = pos.sum(-1)
+        keep = (flat < E_loc) & (pos < C)
+        slot = jnp.where(keep, flat * C + pos, E_loc * C)
+        token_of = jnp.arange(T_loc, dtype=jnp.int32).repeat(k)
+        inv = jnp.full((E_loc * C + 1,), -1, jnp.int32).at[slot].set(token_of)[:-1]
+        x_disp = jnp.where((inv >= 0)[:, None], x_loc[jnp.maximum(inv, 0)], 0)
+        x_disp = x_disp.reshape(E_loc, C, D)
+        y = _expert_ffn({"w_gate": wg, "w_up": wu, "w_down": wd}, x_disp, cfg)
+        y = jnp.concatenate([y.reshape(E_loc * C, D),
+                             jnp.zeros((1, D), y.dtype)], axis=0)
+        y_tok = y[jnp.where(keep.reshape(-1, k), slot.reshape(-1, k), E_loc * C)]
+        part = jnp.einsum("tkd,tk->td", y_tok,
+                          gates * keep.reshape(-1, k))
+        # combine in bf16: halves the per-layer activation all-reduce (the
+        # EP design's only per-layer collective); §Perf iteration A2
+        out = jax.lax.psum(part.astype(jnp.bfloat16), "model")
+        aux = jax.lax.pmean(aux, "model")
+        return out.astype(x_loc.dtype), aux
+
+    tok_spec = P(data_axes if data_axes else None, None)
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None), tok_spec),
+        out_specs=(tok_spec, P()),
+        check_vma=False,
+    )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x2d)
+    return out, aux
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> ([B, S, D], aux_loss)."""
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D)
+    if cfg.moe_impl == "ep":
+        out, aux = _moe_ep(p, x2d, cfg)
+    else:
+        out, aux = _moe_gather(p, x2d, cfg)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,141 @@
+"""Head-centric vs uniform sparse KV selection (paper §2.4 eq.5, §4.5 eq.6).
+
+This is the algorithmic core of contribution C3. During a Refresh step the
+layer scan calls :func:`select_and_pack` with the freshly computed full-seq
+K/V and the active-block queries; it returns a *physically dense* packed cache
+``[B, K, R, dh]`` (head-major, contiguous — the paper's "Static Allocation and
+Contiguous Storage"). The index map is transient: it is used once here and
+never stored, so Reuse-phase attention reads the cache sequentially with zero
+gathers.
+
+GQA note: selection operates at KV-head granularity. Per-head scores from the
+G query heads of a group are max-aggregated onto their KV head, so "head-
+centric" means one independent token set per *KV head* (the finest granularity
+at which a packed KV layout can differ). With MQA (K=1, gemma-2b) this
+degenerates to a single shared set — documented in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PackedKV(NamedTuple):
+    k: jax.Array        # [B, K, R, dh]  post-RoPE keys, densely packed
+    v: jax.Array        # [B, K, R, dh]
+    pos: jax.Array      # [B, K, R] int32  original token positions
+    valid: jax.Array    # [B, K, R] bool
+
+
+def head_scores(
+    q_block: jax.Array,   # [B, Sb, H, dh] active-block queries
+    k_full: jax.Array,    # [B, S, K, dh]  full-sequence keys (post-RoPE)
+    kernel_size: int,
+    s_chunk: int = 4096,
+) -> jax.Array:
+    """Per-KV-head importance scores, eq.(6):  S_{h,j} = maxpool_w(Q_b · K_j).
+
+    Returns [B, K, S] float32. The K-axis is processed in ``s_chunk`` tiles
+    so the [B, K, G, Sb, S] alignment tensor never materializes (at 32k
+    prefill it would be multiple GiB/device).
+    """
+    B, Sb, H, dh = q_block.shape
+    K = k_full.shape[2]
+    G = H // K
+    qg = q_block.reshape(B, Sb, K, G, dh)
+
+    def tile(kc):  # kc: [B, c, K, dh] -> [B, K, c]
+        r = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc).astype(jnp.float32)
+        return r.max(axis=(2, 3))
+
+    S = k_full.shape[1]
+    if S > s_chunk and S % s_chunk == 0:
+        kc = k_full.reshape(B, S // s_chunk, s_chunk, K, dh)
+        raw = jax.lax.map(tile, kc.transpose(1, 0, 2, 3, 4))
+        raw = raw.transpose(1, 2, 0, 3).reshape(B, K, S)
+    else:
+        raw = tile(k_full)  # [B, K, S]
+    # local max-pooling with window w (captures neighbourhood relevance)
+    w = kernel_size
+    if w > 1:
+        pads = [raw]
+        for off in range(1, w // 2 + 1):
+            pads.append(jnp.pad(raw[..., off:], ((0, 0), (0, 0), (0, off)),
+                                constant_values=-jnp.inf))
+            pads.append(jnp.pad(raw[..., :-off], ((0, 0), (0, 0), (off, 0)),
+                                constant_values=-jnp.inf))
+        raw = jnp.stack(pads).max(axis=0)
+    return raw
+
+
+def select_indices(
+    scores: jax.Array,       # [B, K, S] float32
+    retain: int,
+    *,
+    mode: str,               # "head" (ours) | "uniform" (Sparse-dLLM)
+    exclude: jax.Array,      # [B, S] bool — active block / invalid positions
+) -> jax.Array:
+    """Top-k token indices per KV head. Returns [B, K, R] int32 (sorted)."""
+    neg = jnp.float32(-1e30)
+    scores = jnp.where(exclude[:, None, :], neg, scores)
+    if mode == "uniform":
+        # Sparse-dLLM eq.(5): aggregate across heads -> one shared index set
+        shared = scores.sum(axis=1, keepdims=True)          # [B, 1, S]
+        shared = jnp.broadcast_to(shared, scores.shape)
+        scores = shared
+    _, idx = jax.lax.top_k(scores, retain)                   # [B, K, R]
+    # sort selected indices so the packed cache preserves sequence order
+    return jnp.sort(idx, axis=-1).astype(jnp.int32)
+
+
+def pack(
+    idx: jax.Array,        # [B, K, R]
+    k_full: jax.Array,     # [B, S, K, dh]
+    v_full: jax.Array,     # [B, S, K, dh]
+    token_valid: jax.Array,  # [B, S] bool
+) -> PackedKV:
+    """Gather the retained tokens into the dense head-major layout.
+
+    The single gather here is the *only* indirection in the whole C3 pipeline;
+    it runs once per Refresh, after which Reuse reads contiguously.
+    """
+    kh = k_full.transpose(0, 2, 1, 3)   # [B, K, S, dh]
+    vh = v_full.transpose(0, 2, 1, 3)
+    pk = jnp.take_along_axis(kh, idx[..., None], axis=2)
+    pv = jnp.take_along_axis(vh, idx[..., None], axis=2)
+    val = jnp.take_along_axis(
+        jnp.broadcast_to(token_valid[:, None, :], idx.shape[:2] + token_valid.shape[1:]),
+        idx, axis=2)
+    return PackedKV(pk, pv, idx, val)
+
+
+def select_and_pack(
+    q_block: jax.Array,
+    k_full: jax.Array,
+    v_full: jax.Array,
+    *,
+    retain: int,
+    kernel_size: int,
+    mode: str,
+    exclude: jax.Array,
+    token_valid: jax.Array,
+) -> PackedKV:
+    if mode == "none":
+        # dense retention (r = 1.0): keep everything outside the block, packed
+        # to `retain` slots by score so shapes stay static.
+        scores = jnp.zeros(k_full.shape[:2], jnp.float32)[:, None, :]
+        scores = jnp.broadcast_to(scores, (k_full.shape[0], k_full.shape[2], k_full.shape[1]))
+        scores = scores - jnp.arange(k_full.shape[1], dtype=jnp.float32)[None, None, :] * 1e-6
+        idx = select_indices(scores, retain, mode="uniform", exclude=exclude)
+    else:
+        scores = head_scores(q_block, k_full, kernel_size)
+        idx = select_indices(scores, retain, mode=mode, exclude=exclude)
+    packed = pack(idx, k_full, v_full, token_valid)
+    # positions excluded (block/invalid) may still be picked when fewer than
+    # `retain` candidates exist; mark them invalid so attention masks them.
+    excl = jnp.take_along_axis(
+        jnp.broadcast_to(exclude[:, None, :], idx.shape[:2] + exclude.shape[1:]),
+        idx, axis=2)
+    return PackedKV(packed.k, packed.v, packed.pos, packed.valid & ~excl)

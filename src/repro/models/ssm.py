@@ -1,0 +1,237 @@
+"""Mamba2 — SSD (state-space duality) layers, chunked scan + recurrent decode.
+
+Implements the discrete SSD forward of the Mamba2 paper (arXiv:2405.21060):
+intra-chunk quadratic term + inter-chunk state recurrence, all in einsums so
+XLA/TPU lowers to MXU matmuls. Serving splits into:
+
+* ``ssm_prefix_state`` — consume a prefix, return the recurrent state at its
+  end (the Refresh-phase "cache": constant size, the SSM analogue of KV).
+* ``ssm_decode_block`` — recurrently process the active block from a cached
+  state (the Reuse phase). O(block) per denoising step, O(1) in context len —
+  this is what makes the long_500k cell trivially sub-quadratic for SSM archs.
+
+The paper's head-centric sparse KV (C3) is inapplicable here (no KV to
+sparsify) — see DESIGN.md §5; C1 (logit budgeting) and C2 (phase scheduling)
+still apply unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array     # [Lm, B, H, P, N]
+    conv: jax.Array      # [Lm, B, ck-1, conv_ch]
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm_stack(cfg: ModelConfig, key: jax.Array, dtype, n_layers=None) -> dict:
+    nl = cfg.n_layers if n_layers is None else n_layers
+    D, Din = cfg.d_model, cfg.d_inner
+    G, N, Hs = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ch = conv_channels(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.zeros((nl, D), dtype),
+        "w_z": L.dense_init(ks[0], (nl, D, Din), dtype),
+        "w_xbc": L.dense_init(ks[1], (nl, D, ch), dtype),
+        "w_dt": L.dense_init(ks[2], (nl, D, Hs), dtype),
+        "dt_bias": jnp.zeros((nl, Hs), dtype),
+        "conv_w": L.dense_init(ks[3], (nl, cfg.ssm_conv_kernel, ch), dtype, scale=0.2),
+        "conv_b": jnp.zeros((nl, ch), dtype),
+        "A_log": jnp.zeros((nl, Hs), dtype),          # A = -exp(A_log) = -1 at init
+        "D_skip": jnp.ones((nl, Hs), dtype),
+        "gate_norm": jnp.zeros((nl, Din), dtype),
+        "out_proj": L.dense_init(ks[4], (nl, Din, D), dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., T] -> [..., T, T]; out[i,j] = sum_{j < m <= i} x[m], -inf above diag."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]  (post-softplus, > 0)
+    A: jax.Array,      # [H]        (negative)
+    Bm: jax.Array,     # [B, S, N]  (G=1 squeezed)
+    Cm: jax.Array,     # [B, S, N]
+    chunk: int,
+    init_state=None,   # [B, H, P, N] | None
+    return_chunk_states: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    With ``return_chunk_states`` the second element is instead
+    ``states_in [B, nc, H, P, N]`` — the state *entering* each chunk, which
+    serving uses to read off the recurrent state at a block boundary.
+    """
+    Bb, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(Bb, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bb, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bb, nc, chunk, N).astype(f32)
+    dA = dtc * A.astype(f32)[None, None, None, :]        # [B, nc, l, H]
+    dA = dA.transpose(0, 3, 1, 2)                        # [B, H, nc, l]
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    xdt = xc.astype(f32) * dtc[..., None]                # [B, nc, l, H, P]
+
+    # 1) intra-chunk (diagonal blocks)
+    Ldec = jnp.exp(_segsum(dA))                          # [B, H, nc, l, l]
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)       # [B, nc, l, s]
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp",
+                        scores, Ldec, xdt)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)      # [B, H, nc, l]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # 3) inter-chunk recurrence (include initial state as chunk -1)
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, Pd, N), f32)
+    chunk_decay = dA_cs[..., -1]                         # [B, H, nc]
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    dec = jnp.exp(_segsum(padded))                       # [B, H, nc+1, nc+1]
+    dec = jnp.where(jnp.isfinite(dec), dec, 0.0)
+    all_states = jnp.concatenate(
+        [init_state.astype(f32)[:, None], states], axis=1)
+    # all_states: [B, nc+1, H, P, N]; states entering chunk z:
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dec, all_states)
+    states_in = new_states[:, :-1]                       # [B, nc, H, P, N]
+    final_state = new_states[:, -1]                      # [B, H, P, N]
+
+    # 4) state -> output within each chunk
+    out_decay = jnp.exp(dA_cs)                           # [B, H, nc, l]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, states_in, out_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, Pd).astype(x.dtype)
+    if return_chunk_states:
+        return y, states_in
+    return y, final_state.astype(f32)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None):
+    """Depthwise causal conv over [B, S, ch]; w: [k, ch].
+
+    Returns (out [B, S, ch], new_history [B, k-1, ch]).
+    """
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xin = jnp.concatenate([history, xbc], axis=1)
+    out = sum(xin[:, i:i + xbc.shape[1], :] * w[i][None, None] for i in range(k))
+    out = jax.nn.silu(out + b[None, None])
+    return out, xin[:, -(k - 1):, :]
+
+
+def _project(p, h, cfg: ModelConfig):
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"])
+    xbc = jnp.einsum("bsd,de->bse", h, p["w_xbc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg: ModelConfig):
+    Din, GN = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    xin = xbc[..., :Din]
+    Bm = xbc[..., Din:Din + GN]
+    Cm = xbc[..., Din + GN:]
+    return xin, Bm, Cm
+
+
+def mamba_block(p, x, cfg: ModelConfig, conv_hist=None, init_state=None,
+                return_state: bool = False, capture_at=None):
+    """One Mamba2 block (residual included). x: [B, S, D].
+
+    ``capture_at`` ([B] int32 positions, multiples of ``cfg.ssm_chunk``):
+    additionally returns the recurrent state and conv history *at* that
+    position — the serving cache captured during a Refresh pass.
+    """
+    x = L.constrain(x, "act3d")
+    h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+    z, xbc_pre, dt = _project(p, h, cfg)
+    xbc, new_hist = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"], conv_hist)
+    xin, Bm, Cm = _split_xbc(xbc, cfg)
+    Bb, S = x.shape[:2]
+    xh = xin.reshape(Bb, S, cfg.ssm_heads, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    chunk = min(cfg.ssm_chunk, S)
+    want_chunks = capture_at is not None
+    y, state_out = ssd_scan(xh, dt, A, Bm, Cm, chunk, init_state,
+                            return_chunk_states=want_chunks)
+    y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bb, S, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   p["gate_norm"], cfg.rms_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if capture_at is not None:
+        c0 = capture_at // chunk                                  # [B]
+        state_at = jax.vmap(lambda s, c: s[c])(state_out, c0)     # [B,H,P,N]
+        ck = cfg.ssm_conv_kernel
+        padded = jnp.pad(xbc_pre, ((0, 0), (ck - 1, 0), (0, 0)))
+        hist_at = jax.vmap(
+            lambda xb, st: jax.lax.dynamic_slice_in_dim(xb, st, ck - 1, axis=0)
+        )(padded, capture_at)                                      # [B,ck-1,ch]
+        return out, state_at, hist_at
+    if return_state:
+        return out, state_out, new_hist
+    return out
+
+
+def mamba_decode_block(p, xb, cfg: ModelConfig, state, conv_hist):
+    """Reuse-phase: process the active block recurrently from a cached state.
+
+    xb: [B, Sb, D]; state: [B, H, P, N]; conv_hist: [B, ck-1, ch].
+    The cache is NOT advanced (diffusion re-denoises the same block); the
+    caller commits the state via ``ssm_prefix_state`` at the next Refresh.
+    """
+    h = L.rms_norm(xb, p["norm"], cfg.rms_eps)
+    z, xbc, dt = _project(p, h, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_hist)
+    xin, Bm, Cm = _split_xbc(xbc, cfg)
+    Bb, Sb = xb.shape[:2]
+    xh = xin.reshape(Bb, Sb, cfg.ssm_heads, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    def step(carry, t):
+        x_t, dt_t, B_t, C_t = t          # [B,H,P], [B,H], [B,N], [B,N]
+        dA = jnp.exp(dt_t * A[None])     # [B, H]
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+        new = carry * dA[..., None, None] + dBx
+        y_t = jnp.einsum("bn,bhpn->bhp", C_t, new)
+        return new, y_t
+
+    xs = (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3).astype(xb.dtype)       # [B, Sb, H, P]
+    y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bb, Sb, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   p["gate_norm"], cfg.rms_eps)
+    return xb + jnp.einsum("bse,ed->bsd", y, p["out_proj"])

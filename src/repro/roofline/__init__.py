@@ -1,0 +1,1 @@
+from repro.roofline.analysis import Roofline, analyze_compiled  # noqa: F401

@@ -1,0 +1,2 @@
+# Training substrate: masked-diffusion loss, AdamW + ZeRO-1, checkpointing,
+# fault-tolerant train loop. Built from scratch (no optax/orbax available).

@@ -1,0 +1,101 @@
+"""Sharded, mesh-independent checkpointing with async save + elastic restore.
+
+Format: one directory per step —
+  ``ckpt_<step>/manifest.json``  — tree structure, shapes, dtypes, step
+  ``ckpt_<step>/arr_<i>.npy``    — one file per leaf (host-gathered)
+
+Properties needed at 1000-node scale and implemented here:
+  * **step-atomic**: written to a tmp dir, ``os.rename``d on completion, so a
+    crash mid-save never corrupts the latest checkpoint;
+  * **async**: device→host transfer happens on the caller thread (cheap,
+    avoids racing donated buffers), file I/O on a background thread;
+  * **elastic**: arrays are stored unsharded, so restore accepts *any* mesh /
+    sharding layout — scaling from 256 to 512 chips (or to 1 CPU in tests)
+    is a restore-time re-shard, no conversion step;
+  * **GC**: keep the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def save(path: str, step: int, state: dict, keep: int = 3,
+         async_io: bool = True) -> threading.Thread | None:
+    """state: any pytree (params/opt/rng/...). Returns the writer thread."""
+    leaves, treedef = jax.tree.flatten(state)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    manifest = {
+        "step": int(step),
+        "treedef": pickle.dumps(treedef).hex(),
+        "n_leaves": len(host),
+        "shapes": [list(a.shape) for a in host],
+        "dtypes": [str(a.dtype) for a in host],
+    }
+
+    def write():
+        final = os.path.join(path, f"ckpt_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        for i, a in enumerate(host):
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(path, keep)
+
+    if async_io:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _gc(path: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(path) if d.startswith("ckpt_")
+                   and not d.endswith(".tmp"))
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    ckpts = sorted(d for d in os.listdir(path) if d.startswith("ckpt_")
+                   and not d.endswith(".tmp"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].split("_")[1])
+
+
+def restore(path: str, step: Optional[int] = None, shardings=None):
+    """Load a checkpoint; optionally re-shard onto a (new) mesh.
+
+    ``shardings``: a pytree of Sharding matching the state (elastic restore),
+    or None for host/default placement.
+    """
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"ckpt_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    treedef = pickle.loads(bytes.fromhex(manifest["treedef"]))
+    leaves = [np.load(os.path.join(d, f"arr_{i}.npy"))
+              for i in range(manifest["n_leaves"])]
+    state = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), state, shardings)
+    return int(manifest["step"]), state

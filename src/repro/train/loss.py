@@ -1,0 +1,50 @@
+"""Masked-diffusion training loss (LLaDA objective) with C1 chunking.
+
+For each sequence a mask ratio u ~ U(lo, hi) is drawn; tokens are masked
+i.i.d. with probability u and the cross-entropy on masked positions is
+weighted by 1/u — the discrete-diffusion ELBO estimator. The CE itself runs
+through ``lm_head.diffusion_loss``: token-axis chunks of ``loss_chunk`` so
+the ``[T, V]`` logit tensor never materializes (the paper's C1 applied to
+training).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.diffusion import mask_token_id
+from repro.models import backbone as BB
+from repro.models import lm_head as LM
+
+AUX_COEF = 0.01
+
+
+def corrupt(tokens: jax.Array, rng: jax.Array, cfg: ModelConfig,
+            tc: TrainConfig) -> Tuple[jax.Array, jax.Array]:
+    """Sample per-sequence mask ratios and mask tokens. Returns
+    (corrupted [B,S], weights [B,S])."""
+    B, S = tokens.shape
+    k1, k2 = jax.random.split(rng)
+    u = jax.random.uniform(k1, (B, 1), minval=tc.mask_ratio_min,
+                           maxval=tc.mask_ratio_max)
+    mask = jax.random.uniform(k2, (B, S)) < u
+    corrupted = jnp.where(mask, mask_token_id(cfg.vocab_size), tokens)
+    weights = mask.astype(jnp.float32) / u      # 1/t ELBO weighting
+    return corrupted, weights
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tc: TrainConfig,
+            tokens: jax.Array, rng: jax.Array,
+            frontend: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+    corrupted, weights = corrupt(tokens, rng, cfg, tc)
+    h, aux = BB.train_forward(params, cfg, corrupted, frontend,
+                              remat=tc.remat)
+    if cfg.frontend_dim:
+        h = h[:, cfg.frontend_len:]             # supervise the text region only
+    ce = LM.diffusion_loss(params["embed"], cfg, h, tokens, weights,
+                           chunk=tc.loss_chunk)
+    loss = ce + AUX_COEF * aux
+    return loss, {"ce": ce, "aux": aux}

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src/ onto the path so `pytest tests/` works without an install.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# must see 1 device. Dry-run tests spawn subprocesses with their own flags.

@@ -1,0 +1,137 @@
+"""Per-kernel allclose validation against the pure-jnp oracles (interpret
+mode), with shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# ---------------------------------------------------------------------------
+# fused logit argmax (C1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D,V", [(32, 64, 512), (100, 128, 1024),
+                                   (256, 96, 2048), (8, 256, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_logit_argmax_matches_ref(T, D, V, dtype, softcap):
+    k1, k2 = keys(2)
+    h = jax.random.normal(k1, (T, D), dtype)
+    w = (jax.random.normal(k2, (D, V), jnp.float32) * 0.05).astype(dtype)
+    ids, conf = ops.fused_logit_argmax(h, w, softcap=softcap,
+                                       vocab_tile=256, t_tile=32)
+    ids_r, conf_r = ref.fused_logit_argmax(h, w, softcap=softcap)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids_r))
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(conf_r),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 64), logv=st.integers(3, 7), seed=st.integers(0, 99))
+def test_logit_argmax_property(t, logv, seed):
+    """Argmax invariance: any (T, V) grid, any tile split, same winner."""
+    V = 2 ** logv * 8
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    h = jax.random.normal(k1, (t, 32))
+    w = jax.random.normal(k2, (32, V)) * 0.1
+    ids, conf = ops.fused_logit_argmax(h, w, vocab_tile=8, t_tile=8)
+    ids_r, _ = ref.fused_logit_argmax(h, w)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids_r))
+    assert np.all(np.asarray(conf) > 0) and np.all(np.asarray(conf) <= 1.0 + 1e-5)
+
+
+def test_logit_argmax_vs_monolithic_decode():
+    """The budgeted decode path (C1) must equal the monolithic baseline."""
+    from repro.configs import ARCHS, reduced
+    from repro.models import backbone as BB
+    from repro.models import lm_head as LM
+    cfg = reduced(ARCHS["llada-8b"])
+    params = BB.init_params(cfg, KEY)
+    h = jax.random.normal(keys(1)[0], (96, cfg.d_model))
+    outs = {}
+    for mode in ("monolithic", "chunked", "fused"):
+        ids, conf = LM.decode_tokens(params["embed"], cfg, h,
+                                     max_num_logits=32, mode=mode,
+                                     vocab_tile=64)
+        outs[mode] = (np.asarray(ids), np.asarray(conf))
+    assert np.array_equal(outs["monolithic"][0], outs["chunked"][0])
+    assert np.array_equal(outs["monolithic"][0], outs["fused"][0])
+    np.testing.assert_allclose(outs["monolithic"][1], outs["fused"][1],
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# packed flash attention (C3 reuse path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,K,G,Sb,T,dh", [
+    (2, 2, 2, 8, 64, 16), (1, 4, 1, 4, 128, 32), (3, 1, 8, 16, 96, 64),
+])
+@pytest.mark.parametrize("softcap", [0.0, 50.0])
+def test_flash_attention_matches_ref(B, K, G, Sb, T, dh, softcap):
+    H = K * G
+    k1, k2, k3, k4 = keys(4)
+    q = jax.random.normal(k1, (B, Sb, H, dh))
+    k = jax.random.normal(k2, (B, K, T, dh))
+    v = jax.random.normal(k3, (B, K, T, dh))
+    mask = jax.random.bernoulli(k4, 0.75, (B, K, Sb, T)).at[..., 0].set(True)
+    out = ops.packed_flash_attention(q, k, v, mask, softcap=softcap, t_tile=32)
+    qr = q.reshape(B, Sb, K, G, dh).transpose(0, 2, 1, 3, 4).reshape(B, K, Sb * G, dh)
+    out_r = ref.packed_flash_attention(qr, k, v, mask, softcap=softcap)
+    out_r = out_r.reshape(B, K, Sb, G, dh).transpose(0, 2, 1, 3, 4).reshape(B, Sb, H, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), t_tile=st.sampled_from([16, 32, 64]))
+def test_flash_attention_tile_invariance(seed, t_tile):
+    """Online-softmax accumulation must be invariant to KV tile size."""
+    r = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(r, 3)
+    q = jax.random.normal(k1, (1, 4, 4, 16))
+    k = jax.random.normal(k2, (1, 2, 64, 16))
+    v = jax.random.normal(k3, (1, 2, 64, 16))
+    mask = jnp.ones((1, 2, 4, 64), bool)
+    a = ops.packed_flash_attention(q, k, v, mask, t_tile=t_tile)
+    b = ops.packed_flash_attention(q, k, v, mask, t_tile=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# head-score kernel (C3 refresh path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,K,G,Sb,S,dh", [(2, 3, 2, 8, 96, 16),
+                                           (1, 8, 1, 32, 256, 32)])
+def test_head_score_matches_ref(B, K, G, Sb, S, dh):
+    H = K * G
+    k1, k2 = keys(2)
+    q = jax.random.normal(k1, (B, Sb, H, dh))
+    kf = jax.random.normal(k2, (B, S, K, dh))
+    sc = ops.head_score(q, kf, s_tile=32)
+    qr = q.reshape(B, Sb, K, G, dh).transpose(0, 2, 1, 3, 4).reshape(B, K, Sb * G, dh)
+    sc_r = ref.head_score(qr, kf.transpose(0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_r), atol=1e-5)
+
+
+def test_head_score_kernel_matches_model_scoring():
+    """Kernel scores == the model-side jnp scoring used by select_and_pack."""
+    from repro.models.sparse_select import head_scores
+    B, Sb, K, G, S, dh = 2, 8, 4, 2, 64, 16
+    H = K * G
+    k1, k2 = keys(2)
+    q = jax.random.normal(k1, (B, Sb, H, dh))
+    kf = jax.random.normal(k2, (B, S, K, dh))
+    raw_kernel = ops.head_score(q, kf)
+    raw_model = head_scores(q, kf, kernel_size=1)
+    np.testing.assert_allclose(np.asarray(raw_kernel), np.asarray(raw_model),
+                               atol=1e-5)

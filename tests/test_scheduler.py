@@ -1,0 +1,153 @@
+"""Phase-Multiplexed Scheduler invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ServeConfig
+from repro.core.request import Phase, Request, State
+from repro.core.scheduler import (PhaseMultiplexedScheduler,
+                                  RequestLevelScheduler)
+
+
+def mk_cfg(**kw):
+    base = dict(max_num_batched_tokens=256, block_size=8, steps_per_block=8,
+                max_seq_len=128, max_slots=8, max_refresh_per_iter=2,
+                refresh_interval=4)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def mk_req(rid, cfg, plen=16, glen=16, arrival=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32), gen_len=glen,
+                   arrival=arrival, cfg=cfg, mask_id=255)
+
+
+def drain(sched, cfg, max_iters=500):
+    """Run the scheduler state machine with a fake executor.
+
+    Snapshots query_tokens at plan time (the property reads live request
+    state, which mutates as the fake executor advances)."""
+    plans = []
+    it = 0
+    while sched.has_work and it < max_iters:
+        plan = sched.plan(now=1e9)
+        plan.query_tokens_snapshot = plan.query_tokens
+        plans.append(plan)
+        for r in plan.refresh + plan.reuse:
+            blk = r.block_tokens().copy()
+            masked = np.where(blk == r.mask_id)[0]
+            if masked.size:
+                blk[masked[0]] = 1    # commit one token per step
+            r.advance(blk, now=it)
+            if r.state == State.FINISHED:
+                sched.finish(r)
+        it += 1
+        if not plan.refresh and not plan.reuse:
+            break
+    return plans
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 12), plen=st.integers(4, 60),
+       glen=st.integers(8, 40), budget=st.integers(64, 512),
+       seed=st.integers(0, 99))
+def test_token_budget_invariant(n, plen, glen, budget, seed):
+    """Σ query tokens in any packed iteration ≤ max_num_batched_tokens,
+    provided the budget admits at least one request."""
+    cfg = mk_cfg(max_num_batched_tokens=budget)
+    if plen + glen + 8 > cfg.max_seq_len:
+        plen = cfg.max_seq_len - glen - 8
+    sched = PhaseMultiplexedScheduler(cfg)
+    rng = np.random.default_rng(seed)
+    reqs = [mk_req(i, cfg, plen=max(1, int(rng.integers(1, plen + 1))),
+                   glen=glen) for i in range(n)]
+    if any(r.total_len > budget for r in reqs):
+        return  # request can never fit; admission correctly starves
+    for r in reqs:
+        sched.submit(r)
+    plans = drain(sched, cfg)
+    for p in plans:
+        assert p.query_tokens_snapshot <= budget
+    assert all(r.state == State.FINISHED for r in reqs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 99))
+def test_fcfs_admission_order(n, seed):
+    cfg = mk_cfg()
+    sched = PhaseMultiplexedScheduler(cfg)
+    reqs = [mk_req(i, cfg, plen=8, glen=8, arrival=0.0) for i in range(n)]
+    for r in reqs:
+        sched.submit(r)
+    drain(sched, cfg)
+    admits = [r.t_admitted for r in reqs]
+    assert all(a >= 0 for a in admits)
+    assert admits == sorted(admits)    # FCFS: earlier submit admitted no later
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 20), seed=st.integers(0, 99))
+def test_slots_never_oversubscribed(n, seed):
+    cfg = mk_cfg(max_slots=4)
+    sched = PhaseMultiplexedScheduler(cfg)
+    for i in range(n):
+        sched.submit(mk_req(i, cfg, plen=8, glen=8))
+    it = 0
+    while sched.has_work and it < 500:
+        plan = sched.plan(now=1e9)
+        slots = [r.slot for r in sched.running]
+        assert len(slots) <= 4
+        assert len(set(slots)) == len(slots)   # unique
+        for r in plan.refresh + plan.reuse:
+            blk = r.block_tokens().copy()
+            blk[:] = 1
+            r.advance(blk, now=it)
+            if r.state == State.FINISHED:
+                sched.finish(r)
+        it += 1
+
+
+def test_phase_machine_cadence():
+    cfg = mk_cfg(refresh_interval=4, steps_per_block=8)
+    r = mk_req(0, cfg, plen=8, glen=16)
+    phases = []
+    for step in range(16):
+        phases.append(r.phase)
+        blk = r.block_tokens().copy()
+        masked = np.where(blk == r.mask_id)[0]
+        blk[masked[:2]] = 1
+        r.advance(blk, now=step)
+    # step 0 of each block refreshes; step 4 (interval) refreshes
+    assert phases[0] == Phase.REFRESH
+    assert phases[1] == Phase.REUSE
+    assert phases[4] == Phase.REFRESH
+
+
+def test_phase_scheduler_admits_more_than_request_level():
+    """The paper's core scheduling claim: multiplexing Refresh/Reuse admits
+    more concurrent work under the same token budget."""
+    def peak_concurrency(klass):
+        cfg = mk_cfg(max_num_batched_tokens=128, max_slots=8,
+                     refresh_interval=0)
+        sched = klass(cfg)
+        for i in range(8):
+            sched.submit(mk_req(i, cfg, plen=40, glen=16))
+        peak = 0
+        it = 0
+        while sched.has_work and it < 400:
+            plan = sched.plan(now=1e9)
+            peak = max(peak, len(sched.running))
+            for r in plan.refresh + plan.reuse:
+                blk = r.block_tokens().copy()
+                masked = np.where(blk == r.mask_id)[0]
+                if masked.size:
+                    blk[masked[0]] = 1
+                r.advance(blk, now=it)
+                if r.state == State.FINISHED:
+                    sched.finish(r)
+            it += 1
+        return peak
+
+    p_phase = peak_concurrency(PhaseMultiplexedScheduler)
+    p_req = peak_concurrency(RequestLevelScheduler)
+    assert p_phase > p_req, (p_phase, p_req)

@@ -1,0 +1,115 @@
+"""Head-centric sparse KV selection (C3): correctness + properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.models import backbone as BB
+from repro.models import transformer as T
+from repro.models.sparse_select import (head_scores, pack, select_and_pack,
+                                        select_indices)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def test_full_retention_equals_dense():
+    """selection='none' with retain == everything-outside-the-block must give
+    byte-identical reuse attention to recomputing over the full context."""
+    cfg = reduced(ARCHS["llada-8b"])
+    params = BB.init_params(cfg, KEY)
+    B, S, Sb = 2, 64, 8
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    bs = jnp.array([24, 40], dtype=jnp.int32)
+    dense_ctx = T.ServeContext(block_size=Sb, retain=S - Sb,
+                               selection="none", q_chunk=S)
+    out = BB.serve_refresh(params, cfg, tokens, bs, dense_ctx)
+    # reuse with the SAME block tokens -> hidden must equal refresh's block
+    btoks = jax.vmap(lambda t, s: jax.lax.dynamic_slice_in_dim(t, s, Sb))(
+        tokens, bs)
+    bpos = bs[:, None] + jnp.arange(Sb)[None]
+    hb = BB.serve_reuse(params, cfg, btoks, bpos, out.cache, dense_ctx)
+    np.testing.assert_allclose(np.asarray(hb, np.float32),
+                               np.asarray(out.block_hidden, np.float32),
+                               atol=2e-3)
+
+
+def test_head_vs_uniform_indices_differ():
+    B, Sb, K, G, S, dh = 1, 4, 4, 2, 64, 8
+    q = jax.random.normal(KEY, (B, Sb, K * G, dh))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, dh))
+    scores = head_scores(q, k, kernel_size=3)
+    excl = jnp.zeros((B, S), bool)
+    ih = select_indices(scores, 8, mode="head", exclude=excl)
+    iu = select_indices(scores, 8, mode="uniform", exclude=excl)
+    # uniform: all heads share one set
+    assert np.all(np.asarray(iu) == np.asarray(iu)[:, :1])
+    # head: at least one head deviates (random data)
+    assert not np.all(np.asarray(ih) == np.asarray(ih)[:, :1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999), retain=st.integers(1, 16),
+       mode=st.sampled_from(["head", "uniform"]))
+def test_pack_property(seed, retain, mode):
+    """Packed cache entries must be exact copies of the selected tokens'
+    K/V, and selected indices must avoid excluded positions when possible."""
+    r = jax.random.PRNGKey(seed)
+    B, Sb, K, G, S, dh = 1, 2, 2, 2, 24, 4
+    ks = jax.random.split(r, 4)
+    q = jax.random.normal(ks[0], (B, Sb, K * G, dh))
+    kf = jax.random.normal(ks[1], (B, S, K, dh))
+    vf = jax.random.normal(ks[2], (B, S, K, dh))
+    excl = jnp.zeros((B, S), bool).at[:, 4:8].set(True)
+    packed = select_and_pack(q, kf, vf, retain=retain, kernel_size=3,
+                             mode=mode, exclude=excl,
+                             token_valid=jnp.ones((B, S), bool))
+    idx = np.asarray(packed.pos)
+    kh = np.asarray(kf.transpose(0, 2, 1, 3))
+    vh = np.asarray(vf.transpose(0, 2, 1, 3))
+    for b in range(B):
+        for h in range(K):
+            np.testing.assert_allclose(np.asarray(packed.k)[b, h],
+                                       kh[b, h, idx[b, h]], atol=0)
+            np.testing.assert_allclose(np.asarray(packed.v)[b, h],
+                                       vh[b, h, idx[b, h]], atol=0)
+            # indices sorted (sequence order preserved)
+            assert np.all(np.diff(idx[b, h]) >= 0)
+    # excluded positions are marked invalid
+    val = np.asarray(packed.valid)
+    for b in range(B):
+        for h in range(K):
+            in_excl = (idx[b, h] >= 4) & (idx[b, h] < 8)
+            assert not np.any(val[b, h][in_excl])
+
+
+def test_retention_quality_ordering():
+    """Head-centric selection approximates dense attention at least as well
+    as uniform at equal retention (attention-output fidelity proxy, the
+    basis of benchmark fig6)."""
+    cfg = reduced(ARCHS["llada-8b"])
+    params = BB.init_params(cfg, KEY)
+    B, S, Sb = 2, 96, 8
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    bs = jnp.array([48, 64], dtype=jnp.int32)
+    btoks = jax.vmap(lambda t, s: jax.lax.dynamic_slice_in_dim(t, s, Sb))(
+        tokens, bs)
+    bpos = bs[:, None] + jnp.arange(Sb)[None]
+
+    def reuse_err(selection, retain):
+        ctx = T.ServeContext(block_size=Sb, retain=retain,
+                             selection=selection, q_chunk=S)
+        out = BB.serve_refresh(params, cfg, tokens, bs, ctx)
+        hb = BB.serve_reuse(params, cfg, btoks, bpos, out.cache, ctx)
+        dense = T.ServeContext(block_size=Sb, retain=S - Sb,
+                               selection="none", q_chunk=S)
+        outd = BB.serve_refresh(params, cfg, tokens, bs, dense)
+        hd = BB.serve_reuse(params, cfg, btoks, bpos, outd.cache, dense)
+        return float(jnp.mean(jnp.abs(hb - hd)))
+
+    e_head = reuse_err("head", 24)
+    e_unif = reuse_err("uniform", 24)
+    assert e_head <= e_unif * 1.25, (e_head, e_unif)

@@ -1,0 +1,41 @@
+"""Synthetic workload traces: statistical/structural properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.workloads import WORKLOADS, make_trace, trace_prompts
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_trace_basics(name):
+    tr = make_trace(name, 50, rps=2.0, seed=1)
+    arr = [t.arrival for t in tr]
+    assert arr == sorted(arr)
+    assert all(t.prompt_len >= 4 and t.gen_len >= 4 for t in tr)
+    prompts = trace_prompts(tr, vocab_size=1000, seed=1)
+    assert all(len(p) == t.prompt_len for p, t in zip(prompts, tr))
+    assert all(p.max() < 999 for p in prompts)
+
+
+def test_burst_is_burstier_than_poisson():
+    lb = make_trace("livebench", 200, rps=1.0, seed=2)
+    bu = make_trace("burst", 200, rps=1.0, seed=2)
+    cv = lambda t: np.std(np.diff([x.arrival for x in t])) / \
+        np.mean(np.diff([x.arrival for x in t]))
+    assert cv(bu) > cv(lb)
+
+
+def test_osc_prompts_longer_than_livebench():
+    lb = make_trace("livebench", 100, rps=1.0, seed=3)
+    osc = make_trace("osc", 100, rps=1.0, seed=3)
+    assert np.mean([t.prompt_len for t in osc]) > \
+        np.mean([t.prompt_len for t in lb])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), rps=st.floats(0.2, 5.0))
+def test_scaling_property(seed, rps):
+    tr = make_trace("burst", 30, rps=rps, seed=seed, scale=0.1)
+    assert all(t.prompt_len >= 4 for t in tr)
+    full = make_trace("burst", 30, rps=rps, seed=seed, scale=1.0)
+    assert sum(t.prompt_len for t in tr) < sum(t.prompt_len for t in full)
