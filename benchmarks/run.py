@@ -14,6 +14,7 @@ MODULES = [
     "footprint",         # Table 1
     "quality",           # Fig. 6
     "throughput",        # Fig. 3 + Table 4
+    "packing",           # §4.1 flattened engine: padded vs token-packed
     "latency",           # Fig. 4
     "jitter",            # Fig. 5
     "sensitivity",       # Fig. 7

@@ -21,4 +21,22 @@ def run(quick: bool = True):
         speedup = ours(rows, wl, hi_rps) / best_baseline(rows, wl, hi_rps)
         out.append((f"throughput/{wl}/speedup_vs_best_baseline", 0.0,
                     f"{speedup:.2f}x(paper:1.61-1.81x)"))
+        # padded-vs-packed Refresh token accounting (§4.1 flattened engine):
+        # dllm-serve runs the token-packed path, baselines pay the padded
+        # [batch_bucket × max_seq_len] rectangle
+        us = [r for r in rows
+              if r["workload"] == wl and r["rps"] == hi_rps
+              and r["system"] == "dllm-serve"][0]
+        base = [r for r in rows
+                if r["workload"] == wl and r["rps"] == hi_rps
+                and r["system"] == "fast-dllm"][0]
+        if "refresh_waste" in us:
+            out.append((f"throughput/{wl}/refresh_exec_tokens_packed", 0.0,
+                        f"{us['refresh_tokens_exec']}exec/"
+                        f"{us['refresh_tokens_real']}real="
+                        f"{us['refresh_waste']:.3f}x"))
+            out.append((f"throughput/{wl}/refresh_exec_tokens_padded", 0.0,
+                        f"{base['refresh_tokens_exec']}exec/"
+                        f"{base['refresh_tokens_real']}real="
+                        f"{base['refresh_waste']:.3f}x"))
     return out

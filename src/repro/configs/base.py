@@ -142,7 +142,13 @@ class ServeConfig:
     scheduler: str = "phase"             # phase | request (baseline)
     logit_mode: str = "fused"            # fused (pallas) | chunked | monolithic
     varlen_pack: bool = False            # flatten inputs (no padding waste);
-    # the paper's custom-engine contribution (§6.6 "Inference Engine")
+    # the paper's custom-engine contribution (§6.6 "Inference Engine"):
+    # Refresh executes over ONE ragged token stream instead of a padded
+    # [B, max_seq_len] batch (real path for attention families; SSM/hybrid
+    # fall back to the padded oracle)
+    token_bucket: int = 128              # packed-stream size granularity
+    # (rounds Σ Lᵢ up — bounds jit cache entries at budget/token_bucket while
+    # keeping waste < one bucket, vs up-to-2× for power-of-two padding)
     use_flash_kernel: bool = False        # pallas attention in engine steps
     vocab_tile: int = 1024               # V-tile for the fused logit kernel
     dtype: str = "float32"

@@ -63,11 +63,49 @@ def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
     return kv + meta + st
 
 
+def can_pack_tokens(cfg: ModelConfig) -> bool:
+    """True when the engine's token-packed Refresh path applies to ``cfg``:
+    attention families without a modality frontend. SSM/hybrid state scans
+    and frontend archs fall back to the padded oracle, so they must be
+    provisioned (and billed) for the padded rectangle even under
+    ``varlen_pack=True``. Single source of truth for the engine gate and
+    the profiler's activation accounting."""
+    return cfg.family not in ("ssm", "hybrid") and not cfg.frontend_dim
+
+
+def pow2_bucket(n: int, lo: int = 1) -> int:
+    """Smallest power-of-two multiple of ``lo`` that is ≥ n (the static-shape
+    bucketing policy shared by the engine's jit caches and this profiler)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def max_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
+    """Worst-case tokens one Refresh dispatch materializes activations for.
+
+    Token-packed engines round the real token sum up to ``token_bucket``
+    (bounded by the scheduler budget); padded engines — including the
+    SSM/hybrid/frontend fallback that runs padded even under
+    ``varlen_pack=True`` — pay the full ``batch_bucket × max_seq_len``
+    rectangle regardless of true lengths.
+    """
+    if serve.varlen_pack and can_pack_tokens(cfg):
+        tb = max(1, serve.token_bucket)
+        return -(-serve.max_num_batched_tokens // tb) * tb
+    return max(serve.max_num_batched_tokens,
+               pow2_bucket(max(1, serve.max_refresh_per_iter))
+               * serve.max_seq_len)
+
+
 def backbone_activation_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
-    """Workspace for attention/MLP over one packed batch (query-token scaled,
-    the §4.4 'scheduling currency' assumption)."""
+    """Workspace for attention/MLP over one packed batch. Scaled by *executed*
+    tokens: the query-token budget under varlen packing (§4.4 'scheduling
+    currency'), the padded refresh rectangle otherwise — the packed engine's
+    smaller reservation is converted into KV slots by :func:`plan_memory`."""
     b = dtype_bytes(serve.dtype)
-    T = serve.max_num_batched_tokens
+    T = max_exec_tokens(serve, cfg)
     width = max(cfg.d_ff, cfg.n_heads * cfg.resolved_head_dim,
                 3 * cfg.d_model)
     return T * width * b * 2  # double-buffered

@@ -10,16 +10,26 @@ One engine iteration (§4.1 workflow):
      (C1: serial ``max_num_logits`` sub-batches / fused Pallas kernel),
   5. commits are applied host-side and request state machines advance.
 
-Static-shape policy (TPU/XLA port of the paper's varlen packing): sub-batches
-are bucketed to powers of two and padded with a scratch slot; sequences are
-padded to ``max_seq_len``. Every jitted entry point is cached per bucket.
+Static-shape policy: two Refresh execution paths.
+
+* padded (oracle): sub-batches bucketed to powers of two, sequences padded to
+  ``max_seq_len`` — up to ~2× wasted FLOPs/HBM per step. Kept as the
+  correctness oracle and the fallback for SSM/hybrid families.
+* token-packed (``varlen_pack=True``, the paper's §4.1 flattened engine): the
+  Refresh set is flattened into ONE ragged ``[T_total, ...]`` stream bucketed
+  on *total tokens* (``token_bucket`` granularity — few jit entries, high
+  occupancy), with in-kernel segment masking. Real compute pays for real
+  tokens; no ``[B, max_seq_len]`` refresh call ever happens on this path.
+
+Every jitted entry point is cached per bucket (padded: batch bucket;
+packed: (token bucket, request bucket)).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,19 +37,14 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import diffusion
+from repro.core.budgeting import can_pack_tokens, pow2_bucket as _bucket
+from repro.kernels import flash_varlen as FV
 from repro.core.kv_pool import KVPool
 from repro.core.request import Phase, Request, State
 from repro.core.scheduler import make_scheduler
 from repro.models import backbone as BB
 from repro.models import lm_head as LM
 from repro.models import transformer as T
-
-
-def _bucket(n: int, lo: int = 1) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
 
 
 @dataclass(frozen=True)
@@ -77,7 +82,19 @@ class EngineStats:
     deferred_steps: int = 0
     peak_query_tokens: int = 0
     wall_time: float = 0.0
+    # padded-vs-packed Refresh accounting: `real` is Σ total_len over refreshed
+    # requests; `exec` is what the device actually consumed (padded bucket ×
+    # max_seq_len on the oracle path, the token bucket on the packed path).
+    refresh_tokens_real: int = 0
+    refresh_tokens_exec: int = 0
+    packed_refresh_calls: int = 0
+    padded_refresh_calls: int = 0
     iter_log: List[dict] = field(default_factory=list)
+
+    @property
+    def refresh_waste(self) -> float:
+        """exec/real token ratio (1.0 = zero padding waste)."""
+        return self.refresh_tokens_exec / max(self.refresh_tokens_real, 1)
 
     @property
     def throughput(self) -> float:
@@ -105,11 +122,17 @@ class Engine:
             block_size=serve.block_size, retain=retain,
             kernel_size=serve.kernel_size, selection=serve.selection,
             q_chunk=min(T.L.DEFAULT_Q_CHUNK, serve.max_seq_len),
-            use_flash_kernel=serve.use_flash_kernel)
+            use_flash_kernel=serve.use_flash_kernel,
+            max_seq_len=serve.max_seq_len)
         self.scheduler = make_scheduler(serve)
         self.pool = KVPool(serve.max_slots)
         self.stats = EngineStats()
+        # real token-packed execution needs the segment-masked attention path;
+        # SSM/hybrid state scans stay on the padded oracle (same predicate
+        # the offline profiler bills activations by).
+        self._use_packed = serve.varlen_pack and can_pack_tokens(cfg)
         self._refresh_jit: Dict[int, callable] = {}
+        self._refresh_packed_jit: Dict[tuple, callable] = {}
         self._reuse_jit: Dict[int, callable] = {}
         self._decode_jit: Dict[int, callable] = {}
         self._rng = np.random.default_rng(seed)
@@ -128,6 +151,25 @@ class Engine:
 
             self._refresh_jit[n] = fn
         return self._refresh_jit[n]
+
+    def _token_bucket(self, n_tokens: int) -> int:
+        """Round a real token count up to the packed-buffer granularity."""
+        tb = max(1, self.serve.token_bucket)
+        return max(tb, -(-n_tokens // tb) * tb)
+
+    def _refresh_packed_fn(self, tp: int, rp: int):
+        if (tp, rp) not in self._refresh_packed_jit:
+            ctx = self.ctx
+
+            @jax.jit
+            def fn(params, flat_tokens, positions, seg_ids, token_valid,
+                   cu_seqlens, seq_lens, block_start):
+                return BB.serve_refresh_packed(
+                    params, self.cfg, flat_tokens, positions, seg_ids,
+                    token_valid, cu_seqlens, seq_lens, block_start, ctx)
+
+            self._refresh_packed_jit[(tp, rp)] = fn
+        return self._refresh_packed_jit[(tp, rp)]
 
     def _reuse_fn(self, n: int):
         if n not in self._reuse_jit:
@@ -165,11 +207,29 @@ class Engine:
         Returns the compile wall-time so harnesses can report it."""
         t0 = time.perf_counter()
         S, Sb = self.serve.max_seq_len, self.serve.block_size
+        if self._use_packed:
+            # packed path: warm the worst-case (token bucket, request bucket)
+            # per refresh sub-batch size; smaller buckets compile lazily.
+            b = 1
+            while b <= max(1, self.serve.max_refresh_per_iter):
+                tp = self._token_bucket(
+                    min(b * S, self.serve.max_num_batched_tokens))
+                out = self._refresh_packed_fn(tp, b)(
+                    self.params, jnp.zeros((tp,), jnp.int32),
+                    jnp.zeros((tp,), jnp.int32),
+                    jnp.zeros((tp,), jnp.int32),
+                    jnp.ones((tp,), bool),
+                    jnp.zeros((b,), jnp.int32),
+                    jnp.full((b,), min(tp, S), jnp.int32),
+                    jnp.zeros((b,), jnp.int32))
+                self.pool.ensure(out.cache)
+                b *= 2
         toks = jnp.zeros((1, S), jnp.int32)
         valid = jnp.ones((1, S), bool)
         bs = jnp.zeros((1,), jnp.int32)
         b = 1
-        while b <= max(1, self.serve.max_refresh_per_iter):
+        while not self._use_packed and \
+                b <= max(1, self.serve.max_refresh_per_iter):
             out = self._refresh_fn(b)(
                 self.params, jnp.broadcast_to(toks, (b, S)),
                 jnp.broadcast_to(valid, (b, S)),
@@ -240,8 +300,17 @@ class Engine:
             return
         cfg = self.cfg
         # varlen packing (the paper's flattened engine) pays for real tokens
-        # only; static-shape engines pay the padded bucket
-        tokens = (actual_tokens if self.serve.varlen_pack
+        # only; static-shape engines pay the padded bucket. Refresh follows
+        # what actually executed: SSM/hybrid fall back to the padded oracle
+        # even under varlen_pack, so they pay the padded rectangle. Reuse and
+        # decode deliberately keep the flattened-engine model regardless —
+        # the paper's engine packs those stages too, and the modeled clock
+        # tracks the target design, not the CPU stand-in (see DeviceModel);
+        # ROADMAP lists packing their real execution as the next step.
+        varlen = self.serve.varlen_pack
+        if kind == "refresh":
+            varlen = varlen and self._use_packed
+        tokens = (actual_tokens if varlen
                   and actual_tokens is not None else padded_tokens)
         padded_tokens = tokens
         flops = 2.0 * self._n_params * padded_tokens
@@ -269,15 +338,25 @@ class Engine:
 
         # ---- Refresh sub-batches (chunked to the per-iter cap) ----
         cap = max(1, self.serve.max_refresh_per_iter)
+        iter_real = iter_exec = 0
         for i in range(0, len(plan.refresh), cap):
             chunk = plan.refresh[i: i + cap]
-            bh = self._run_refresh(chunk)
+            t_real = sum(r.total_len for r in chunk)
+            if self._use_packed:
+                bh, exec_tokens = self._run_refresh_packed(chunk)
+                # packed attention pays Σ Sᵢ²: effective kv length is the
+                # token-weighted mean sequence length, not max_seq_len
+                kv_len = sum(r.total_len ** 2 for r in chunk) // max(t_real, 1)
+            else:
+                bh, exec_tokens = self._run_refresh(chunk)
+                kv_len = self.serve.max_seq_len
             hidden_rows.append(bh)
             decoded.extend(chunk)
             self.stats.refresh_steps += len(chunk)
-            self._charge("refresh", _bucket(len(chunk)) * self.serve.max_seq_len,
-                         kv_len=self.serve.max_seq_len,
-                         actual_tokens=sum(r.total_len for r in chunk))
+            iter_real += t_real
+            iter_exec += exec_tokens
+            self._charge("refresh", exec_tokens, kv_len=kv_len,
+                         actual_tokens=t_real)
 
         # ---- Reuse sub-batch ----
         if plan.reuse:
@@ -286,7 +365,8 @@ class Engine:
             decoded.extend(plan.reuse)
             self.stats.reuse_steps += len(plan.reuse)
             self._charge("reuse", _bucket(len(plan.reuse)) * self.serve.block_size,
-                         kv_len=self.ctx.retain + self.serve.block_size)
+                         kv_len=self.ctx.retain + self.serve.block_size,
+                         actual_tokens=len(plan.reuse) * self.serve.block_size)
 
         # ---- budgeted logit stage (C1) over every active block ----
         if decoded:
@@ -297,27 +377,35 @@ class Engine:
             if b != N:
                 h = jnp.pad(h, ((0, b - N), (0, 0)))
             ids, conf = self._decode_fn(b)(self.params, h)
-            ids = np.asarray(ids)[:N]
-            conf = np.asarray(conf)[:N]
+            # one blocking transfer instead of two per-array host syncs
+            ids, conf = jax.device_get((ids, conf))
+            ids = ids[:N]
+            conf = conf[:N]
             # C1: serial sub-batches serialize on device; monolithic runs one
             # big call (launch amortized, memory unbounded)
             if self.serve.logit_mode == "monolithic":
-                self._charge("decode", b)
+                self._charge("decode", b, actual_tokens=N)
             else:
-                n_sub = -(-b // self.serve.max_num_logits)
-                for _ in range(n_sub):
-                    self._charge("decode", min(b, self.serve.max_num_logits))
+                sub = self.serve.max_num_logits
+                for off in range(0, b, sub):
+                    act = max(0, min(sub, N - off))
+                    if act == 0 and self.serve.varlen_pack:
+                        break   # a packed engine never launches all-pad chunks
+                    self._charge("decode", min(sub, b - off),
+                                 actual_tokens=act)
             self._commit(decoded, ids, conf,
                          self.vtime if self.clock == "modeled" else now)
 
         self.stats.iter_log.append(dict(
             t=now, q_tokens=plan.query_tokens,
             n_refresh=len(plan.refresh), n_reuse=len(plan.reuse),
-            n_logits=len(decoded) * self.serve.block_size))
+            n_logits=len(decoded) * self.serve.block_size,
+            refresh_tokens_real=iter_real, refresh_tokens_exec=iter_exec))
         return True
 
     # ------------------------------------------------------------------
-    def _run_refresh(self, chunk: List[Request]) -> jax.Array:
+    def _run_refresh(self, chunk: List[Request]) -> Tuple[jax.Array, int]:
+        """Padded-oracle Refresh. Returns (block hidden, executed tokens)."""
         n = len(chunk)
         b = _bucket(n)
         S = self.serve.max_seq_len
@@ -333,7 +421,51 @@ class Engine:
         slots = [r.slot for r in chunk] + \
                 [self.pool.scratch_slot] * (b - n)
         self.pool.write(slots, out.cache)
-        return out.block_hidden[:n]
+        self.stats.padded_refresh_calls += 1
+        self.stats.refresh_tokens_real += sum(r.total_len for r in chunk)
+        self.stats.refresh_tokens_exec += b * S
+        return out.block_hidden[:n], b * S
+
+    def _run_refresh_packed(self, chunk: List[Request]) -> Tuple[jax.Array, int]:
+        """Token-packed Refresh (§4.1): flatten the chunk into one ragged
+        stream bucketed on total tokens — real compute pays for real tokens,
+        never a ``[B, max_seq_len]`` padded call. Returns (block hidden,
+        executed tokens = the token bucket)."""
+        n = len(chunk)
+        rp = _bucket(n)
+        t_real = sum(r.total_len for r in chunk)
+        tp = self._token_bucket(t_real)
+        tokens = np.zeros((tp,), np.int32)
+        pos = np.zeros((tp,), np.int32)
+        seg = np.full((tp,), FV.PAD_SEG, np.int32)
+        valid = np.zeros((tp,), bool)
+        # padding requests point at the (invalid) tail so their gathers are
+        # in-bounds; their caches land in the scratch slot.
+        cu = np.full((rp,), max(0, tp - 1), np.int32)
+        lens = np.zeros((rp,), np.int32)
+        bstart = np.zeros((rp,), np.int32)
+        off = 0
+        for j, r in enumerate(chunk):
+            ln = r.total_len
+            tokens[off: off + ln] = r.tokens[:ln]
+            pos[off: off + ln] = np.arange(ln, dtype=np.int32)
+            seg[off: off + ln] = j
+            valid[off: off + ln] = True
+            cu[j] = off
+            lens[j] = ln
+            bstart[j] = r.block_start
+            off += ln
+        out = self._refresh_packed_fn(tp, rp)(
+            self.params, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(valid), jnp.asarray(cu),
+            jnp.asarray(lens), jnp.asarray(bstart))
+        slots = [r.slot for r in chunk] + \
+                [self.pool.scratch_slot] * (rp - n)
+        self.pool.write(slots, out.cache)
+        self.stats.packed_refresh_calls += 1
+        self.stats.refresh_tokens_real += t_real
+        self.stats.refresh_tokens_exec += tp
+        return out.block_hidden[:n], tp
 
     def _run_reuse(self, reqs: List[Request]) -> jax.Array:
         n = len(reqs)

@@ -12,6 +12,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List
 
+import numpy as np
+
 from repro.configs.base import ServeConfig
 from repro.core.request import Phase, Request, State
 
@@ -31,6 +33,25 @@ class IterationPlan:
     def n_logit_tokens(self) -> int:
         # every scheduled request decodes its active block this step
         return sum(r.cfg.block_size for r in self.refresh + self.reuse)
+
+    # -- token-packed (varlen) Refresh layout (§4.1 flattened engine) -------
+    @property
+    def refresh_token_counts(self) -> List[int]:
+        """True per-request token counts of the Refresh set."""
+        return [r.total_len for r in self.refresh]
+
+    @property
+    def refresh_total_tokens(self) -> int:
+        return sum(self.refresh_token_counts)
+
+    def refresh_cu_seqlens(self) -> np.ndarray:
+        """[n_refresh + 1] int32 exclusive prefix offsets of the plan-level
+        packed stream. The engine re-derives per-chunk offsets after slicing
+        the Refresh set by ``max_refresh_per_iter``; this whole-plan view is
+        the scheduler's packed-layout contract — property-tested today,
+        intended for single-dispatch whole-plan execution later."""
+        return np.concatenate(
+            [[0], np.cumsum(self.refresh_token_counts)]).astype(np.int32)
 
 
 class PhaseMultiplexedScheduler:

@@ -1,0 +1,146 @@
+"""Ragged (varlen) flash attention over a token-packed stream.
+
+The paper's flattened engine (§4.1) packs every Refresh request of an
+iteration into one ragged ``[T_total, ...]`` token stream so compute scales
+with *actual* tokens instead of ``batch_bucket × max_seq_len`` padding. This
+kernel is the attention side of that contract: one flat stream, per-token
+segment ids (request index, ascending; padding uses a large sentinel), and
+in-kernel segment masking — a query attends to a key iff both tokens belong
+to the same request. No cross-request attention, and no ``[S, S]`` bias is
+ever materialized.
+
+Grid ``(K, n_q, n_kv)`` (KV innermost), flash online-softmax accumulation as
+in :mod:`flash_refresh`, plus a **tile-skip**: segment ids are ascending
+along the stream, so a KV tile whose segment range does not intersect the
+query tile's range is skipped entirely (only the init/normalize bookkeeping
+runs). That is what makes packed-attention FLOPs track ``Σ S_i²`` rather
+than ``T_total²`` at tile granularity.
+
+Masking inputs are per-token 1-D arrays: ``pos`` (position *within* the
+request — drives causal and sliding-window masks), ``seg`` (request id),
+``valid`` (False on bucket padding). GQA rows are token-major flattened
+(row = t·G + g) exactly like the refresh kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Segment id for bucket-padding tokens. Must sort after every real request id
+# so the ascending-stream tile-skip stays valid.
+PAD_SEG = (1 << 30)
+
+
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+            kvalid_ref, loc_ref, o_ref, m_ref, s_ref,
+            *, scale: float, softcap: float, g: int, causal: bool,
+            window: int, n_kv: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    qs = qseg_ref[...]             # [q_tile]
+    ks = kseg_ref[...]             # [Tk]
+    # tile-skip: streams are segment-ascending, so disjoint id ranges cannot
+    # share a request — skip the matmul + softmax update entirely.
+    overlap = (jnp.min(qs) <= jnp.max(ks)) & (jnp.min(ks) <= jnp.max(qs))
+
+    @pl.when(overlap)
+    def _compute():
+        q = q_ref[0]               # [R, dh]  (R = q_tile * G)
+        k = k_ref[0]               # [Tk, dh]
+        v = v_ref[0]
+        qp = qpos_ref[...]         # [q_tile]
+        kp = kpos_ref[...]         # [Tk]
+        kv = kvalid_ref[...]       # [Tk]
+
+        z = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            z = softcap * jnp.tanh(z / softcap)
+        ok = kv[None, :] & (qs[:, None] == ks[None, :])
+        if causal:
+            ok = ok & (qp[:, None] >= kp[None, :])
+        if window:
+            loc = loc_ref[0]
+            ok = ok & ((jnp.abs(qp[:, None] - kp[None, :]) <= window) | ~loc)
+        R, Tk = z.shape
+        zm = jnp.where(ok[:, None, :], z.reshape(R // g, g, Tk), -1e30)
+        z = zm.reshape(R, Tk)
+
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, jnp.max(z, axis=1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(z - m_new[:, None])
+        s_ref[0] = s_ref[0] * alpha + jnp.sum(p, axis=1)
+        o_ref[0] = (o_ref[0] * alpha[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+        m_ref[0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(s_ref[0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "softcap", "causal", "window", "q_tile", "kv_tile", "interpret"))
+def flash_varlen_call(
+    q: jax.Array,         # [K, T*G, dh] row-flat GQA layout (token-major)
+    k: jax.Array,         # [K, T, dh]
+    v: jax.Array,         # [K, T, dh]
+    pos: jax.Array,       # [T] int32 position within the owning request
+    seg: jax.Array,       # [T] int32 ascending request id (PAD_SEG on pad)
+    kv_valid: jax.Array,  # [T] bool
+    is_local: jax.Array,  # [1] bool (gemma2 alternating local layers)
+    *,
+    softcap: float = 0.0,
+    causal: bool = False,
+    window: int = 0,
+    q_tile: int = 256,
+    kv_tile: int = 512,
+    interpret: bool = True,
+):
+    K, RG, dh = q.shape
+    T = k.shape[1]
+    g = RG // T
+    q_tile = min(q_tile, T)
+    kv_tile = min(kv_tile, T)
+    assert T % q_tile == 0 and T % kv_tile == 0, (T, q_tile, kv_tile)
+    n_q, n_kv = T // q_tile, T // kv_tile
+    kern = functools.partial(
+        _kernel, scale=dh ** -0.5, softcap=softcap, g=g, causal=causal,
+        window=window, n_kv=n_kv)
+    out, m, s = pl.pallas_call(
+        kern,
+        grid=(K, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_tile * g, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kv_tile, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, kv_tile, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((q_tile,), lambda h, i, j: (i,)),
+            pl.BlockSpec((kv_tile,), lambda h, i, j: (j,)),
+            pl.BlockSpec((q_tile,), lambda h, i, j: (i,)),
+            pl.BlockSpec((kv_tile,), lambda h, i, j: (j,)),
+            pl.BlockSpec((kv_tile,), lambda h, i, j: (j,)),
+            pl.BlockSpec((1,), lambda h, i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_tile * g, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, q_tile * g), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, q_tile * g), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, RG, dh), jnp.float32),
+            jax.ShapeDtypeStruct((K, RG), jnp.float32),
+            jax.ShapeDtypeStruct((K, RG), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, pos, pos, seg, seg, kv_valid, is_local)
+    return out

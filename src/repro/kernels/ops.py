@@ -176,6 +176,43 @@ def flash_refresh_attention(q, k, v, *, q_pos, kv_pos, kv_valid, mask_mode,
     return out.transpose(0, 2, 1, 3)    # back to [B, S, H, dh]
 
 
+def flash_varlen_attention(q, k, v, *, seg_ids, positions, kv_valid,
+                           window: int = 0, is_local=False,
+                           softcap: float = 0.0, causal: bool = False,
+                           q_tile: int = 256, kv_tile: int = 512):
+    """Ragged flash attention over a token-packed stream (model contract).
+
+    q: [T, H, dh]; k/v: [T, K, dh]; seg_ids/positions: [T] int32 (segment id
+    ascending, position within the owning request); kv_valid: [T] bool.
+    Returns [T, H, dh]. One flat dispatch replaces the padded [B, S] batch;
+    cross-request attention is masked in-kernel via segment ids and
+    non-intersecting tiles are skipped (FLOPs ~ Σ Sᵢ², not T²).
+    """
+    from repro.kernels.flash_varlen import flash_varlen_call
+
+    T, H, dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    qr = (q.reshape(T, K, G, dh).transpose(1, 0, 2, 3)
+          .reshape(K, T * G, dh))
+    kh = k.transpose(1, 0, 2)
+    vh = v.transpose(1, 0, 2)
+    qt = min(q_tile, T)
+    while T % qt:
+        qt //= 2
+    kt = min(kv_tile, T)
+    while T % kt:
+        kt //= 2
+    loc = jnp.asarray(is_local, bool).reshape(1)
+    out = flash_varlen_call(
+        qr, kh, vh, positions.astype(jnp.int32), seg_ids.astype(jnp.int32),
+        kv_valid, loc, softcap=softcap, causal=causal, window=window,
+        q_tile=qt, kv_tile=kt, interpret=_interpret())
+    out = (out.reshape(K, T, G, dh).transpose(1, 0, 2, 3)
+           .reshape(T, H, dh))
+    return out.astype(q.dtype)
+
+
 def head_score(q_block, k_full, *, s_tile: int = 512):
     """q_block: [B, Sb, H, dh]; k_full: [B, S, K, dh] -> [B, K, S] f32 raw
     (pre-maxpool) importance scores — kernel side of paper C3 eq.(6)."""

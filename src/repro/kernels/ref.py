@@ -32,6 +32,31 @@ def packed_flash_attention(q, k, v, mask, *, softcap: float = 0.0):
     return jnp.einsum("bkrt,bktd->bkrd", p.astype(v.dtype), v)
 
 
+def varlen_attention(q, k, v, seg, pos, valid, *, softcap: float = 0.0,
+                     causal: bool = False, window: int = 0, is_local=False):
+    """q: [T, H, dh]; k/v: [T, K, dh]; seg/pos: [T] i32; valid: [T] bool.
+
+    Oracle only — materializes the full [T, T] mask the kernel never builds.
+    """
+    T, H, dh = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(T, K, G, dh)
+    z = jnp.einsum("tkgd,skd->kgts", qg, k).astype(jnp.float32) * dh ** -0.5
+    if softcap:
+        z = softcap * jnp.tanh(z / softcap)
+    ok = (seg[:, None] == seg[None, :]) & valid[None, :]
+    if causal:
+        ok = ok & (pos[:, None] >= pos[None, :])
+    if window:
+        dist = jnp.abs(pos[:, None] - pos[None, :])
+        ok = ok & jnp.where(jnp.asarray(is_local, bool), dist <= window, True)
+    z = jnp.where(ok[None, None], z, -1e30)
+    p = jax.nn.softmax(z, axis=-1).astype(v.dtype)
+    out = jnp.einsum("kgts,skd->tkgd", p, v)
+    return out.reshape(T, H, dh)
+
+
 def head_score(q, k):
     """q: [B,K,R,dh]; k: [B,K,S,dh] -> raw scores [B,K,S] f32."""
     z = jnp.einsum("bkrd,bksd->bkrs", q, k).astype(jnp.float32)

@@ -74,6 +74,11 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         reuse_steps=stats.reuse_steps,
         deferred=stats.deferred_steps,
         peak_query_tokens=stats.peak_query_tokens,
+        refresh_tokens_real=stats.refresh_tokens_real,
+        refresh_tokens_exec=stats.refresh_tokens_exec,
+        refresh_waste=stats.refresh_waste,
+        packed_refresh_calls=stats.packed_refresh_calls,
+        padded_refresh_calls=stats.padded_refresh_calls,
         warmup_s=warmup_s,
         max_slots=serve.max_slots,
     )

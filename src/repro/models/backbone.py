@@ -167,6 +167,40 @@ def serve_refresh(
     return RefreshOut(block_hidden=bh, cache=cache)
 
 
+def serve_refresh_packed(
+    params: dict,
+    cfg: ModelConfig,
+    flat_tokens: jax.Array,      # [T] int32 ragged token-packed stream
+    positions: jax.Array,        # [T] int32 position within owning request
+    seg_ids: jax.Array,          # [T] int32 ascending request id
+    token_valid: jax.Array,      # [T] bool (False on bucket padding)
+    cu_seqlens: jax.Array,       # [R] int32 flat start offset per request
+    seq_lens: jax.Array,         # [R] int32 true length per request
+    block_start: jax.Array,      # [R] int32 block offset within the request
+    serve: T.ServeContext,
+) -> RefreshOut:
+    """Token-packed Refresh (§4.1 flattened engine): one flat ``[T, ...]``
+    stream replaces the padded ``[B, S]`` batch, so compute scales with real
+    tokens. Emits the identical per-request ``RefreshOut`` contract as
+    :func:`serve_refresh` (block hidden [R, Sb, D] + per-slot packed cache),
+    which is kept as the correctness oracle for this path."""
+    if cfg.family not in ATTN_FAMILIES or cfg.frontend_dim:
+        raise NotImplementedError(
+            f"packed refresh supports text attention families, not "
+            f"{cfg.name} ({cfg.family})")
+    x = LM.embed_tokens(params["embed"], flat_tokens[None])   # [1, T, D]
+    x = L.constrain(x, "act3d")
+    h, packed, _ = T.forward_full_packed(
+        params["stack"], cfg, x, positions[None], seg_ids[None],
+        token_valid[None], cu_seqlens, seq_lens, block_start, serve)
+    hn = _final(params, cfg, h)[0]                            # [T, D]
+    Sb = serve.block_size
+    rows = jnp.clip(
+        cu_seqlens[:, None] + block_start[:, None]
+        + jnp.arange(Sb, dtype=jnp.int32)[None], 0, hn.shape[0] - 1)
+    return RefreshOut(block_hidden=hn[rows], cache=packed)
+
+
 # ---------------------------------------------------------------------------
 # serving: Reuse
 # ---------------------------------------------------------------------------

@@ -104,6 +104,8 @@ def attention(
     q_pos: jax.Array,          # [B, Sq]
     kv_pos: jax.Array,         # [B, Sk]
     kv_valid: Optional[jax.Array] = None,  # [B, Sk] bool (padding mask)
+    q_seg: Optional[jax.Array] = None,     # [B, Sq] int32 segment (varlen)
+    kv_seg: Optional[jax.Array] = None,    # [B, Sk] int32 segment (varlen)
     mask_mode: str = "bidirectional",
     window: int = 0,           # static window size (0 = no local masking)
     is_local: jax.Array | bool = False,    # runtime flag (gemma2 alt layers)
@@ -117,8 +119,12 @@ def attention(
     [B, Sq, Sk] bias — which is what keeps 32k/500k refresh steps lowerable.
     ``use_kernel`` dispatches to the flash-refresh Pallas kernel (forward
     only — the serving path; training keeps the differentiable jnp path).
+    ``q_seg``/``kv_seg`` restrict attention to same-segment tokens — the
+    token-packed (varlen) Refresh path, where one flat stream carries many
+    requests (the Pallas varlen kernel is dispatched by the packed layer
+    directly; this jnp path is its correctness oracle).
     """
-    if use_kernel and q.shape[1] == k.shape[1]:
+    if use_kernel and q.shape[1] == k.shape[1] and q_seg is None:
         from repro.kernels import ops as kops
         B, Sq = q.shape[:2]
         return kops.flash_refresh_attention(
@@ -132,14 +138,20 @@ def attention(
     G = H // K
     scale = dh ** -0.5
     qg = q.reshape(B, Sq, K, G, dh)
-    needs_mask = (mask_mode == "causal") or window or (kv_valid is not None)
+    has_seg = q_seg is not None
+    needs_mask = (mask_mode == "causal") or window or \
+        (kv_valid is not None) or has_seg
+    if not has_seg:
+        q_seg = q_pos              # dummy thread-through, never consulted
 
-    def chunk_mask(qp):            # qp: [B, c] -> [B, c, Sk] bool | None
+    def chunk_mask(qp, qs):        # qp/qs: [B, c] -> [B, c, Sk] bool | None
         if not needs_mask:
             return None
         ok = jnp.ones((B, qp.shape[1], kv_pos.shape[1]), bool)
         if kv_valid is not None:
             ok &= kv_valid[:, None, :]
+        if has_seg:
+            ok &= qs[:, :, None] == kv_seg[:, None, :]
         if mask_mode == "causal":
             ok &= qp[:, :, None] >= kv_pos[:, None, :]
         if window:
@@ -152,30 +164,33 @@ def attention(
     # (without this, train_4k peaks at [nq, B, H, c, S] f32 — 20+ GiB/device).
     @jax.checkpoint
     def block(args):
-        qb, qp = args              # qb: [B, c, K, G, dh]; qp: [B, c]
+        qb, qp, qs = args          # qb: [B, c, K, G, dh]; qp/qs: [B, c]
         s = jnp.einsum("bqkgd,bskd->bkgqs", qb, k).astype(jnp.float32) * scale
         if attn_softcap:
             s = attn_softcap * jnp.tanh(s / attn_softcap)
-        ok = chunk_mask(qp)
+        ok = chunk_mask(qp, qs)
         if ok is not None:
             s = jnp.where(ok[:, None, None, :, :], s, -1e30)  # [B,K,G,c,Sk]
         p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
 
     if Sq <= q_chunk:
-        out = block((qg, q_pos))
+        out = block((qg, q_pos, q_seg))
     else:
         pad = (-Sq) % q_chunk
         qp_pad = qg
         pos_pad = q_pos
+        seg_pad = q_seg
         if pad:   # vlm/audio: frontend offsets make Sq non-divisible
             qp_pad = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
             pos_pad = jnp.pad(q_pos, ((0, 0), (0, pad)))
+            seg_pad = jnp.pad(q_seg, ((0, 0), (0, pad)))
         Sp = Sq + pad
         nq = Sp // q_chunk
         qc = qp_pad.reshape(B, nq, q_chunk, K, G, dh).transpose(1, 0, 2, 3, 4, 5)
         pc = pos_pad.reshape(B, nq, q_chunk).transpose(1, 0, 2)
-        out = jax.lax.map(block, (qc, pc))          # [nq, B, c, K, G, dh]
+        sc = seg_pad.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+        out = jax.lax.map(block, (qc, pc, sc))      # [nq, B, c, K, G, dh]
         out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, K, G, dh)[:, :Sq]
     return out.reshape(B, Sq, H, dh)
 

@@ -34,12 +34,19 @@ def head_scores(
     k_full: jax.Array,    # [B, S, K, dh]  full-sequence keys (post-RoPE)
     kernel_size: int,
     s_chunk: int = 4096,
+    valid: jax.Array | None = None,   # [B, S] bool
 ) -> jax.Array:
     """Per-KV-head importance scores, eq.(6):  S_{h,j} = maxpool_w(Q_b · K_j).
 
     Returns [B, K, S] float32. The K-axis is processed in ``s_chunk`` tiles
     so the [B, K, G, Sb, S] alignment tensor never materializes (at 32k
     prefill it would be multiple GiB/device).
+
+    ``valid`` masks raw scores to -inf BEFORE the max-pool: invalid rows
+    (batch padding in the padded path, the *next request's* tokens in the
+    token-packed path) must not leak relevance into valid boundary tokens
+    through the pooling window — otherwise a request's retained set would
+    depend on what it happens to be batched with.
     """
     B, Sb, H, dh = q_block.shape
     K = k_full.shape[2]
@@ -57,6 +64,8 @@ def head_scores(
         raw = raw.transpose(1, 2, 0, 3).reshape(B, K, S)
     else:
         raw = tile(k_full)  # [B, K, S]
+    if valid is not None:
+        raw = jnp.where(valid[:, None, :], raw, -jnp.inf)
     # local max-pooling with window w (captures neighbourhood relevance)
     w = kernel_size
     if w > 1:
@@ -130,7 +139,7 @@ def select_and_pack(
         scores = scores - jnp.arange(k_full.shape[1], dtype=jnp.float32)[None, None, :] * 1e-6
         idx = select_indices(scores, retain, mode="uniform", exclude=exclude)
     else:
-        scores = head_scores(q_block, k_full, kernel_size)
+        scores = head_scores(q_block, k_full, kernel_size, valid=token_valid)
         idx = select_indices(scores, retain, mode=mode, exclude=exclude)
     packed = pack(idx, k_full, v_full, token_valid)
     # positions excluded (block/invalid) may still be picked when fewer than

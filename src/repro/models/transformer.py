@@ -38,6 +38,7 @@ class ServeContext:
     use_flash_kernel: bool = False  # Pallas packed-KV attention in Reuse steps
     reuse_concat: bool = False      # paper-naive single [cache;block] dispatch
     use_flash_refresh: bool = False  # Pallas flash kernel in Refresh steps
+    max_seq_len: int = 0            # per-request L cap (varlen-packed Refresh)
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +175,167 @@ def forward_full(
 
     x, (packed, aux) = jax.lax.scan(body, x, (stack, flags))
     # packed: PackedKV with leading [L] axis (or None); aux: mean over layers
+    return x, packed, jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# token-packed (varlen) Refresh forward — the paper's flattened engine (§4.1)
+# ---------------------------------------------------------------------------
+
+def _attend_packed_stream(
+    q: jax.Array,              # [1, T, H, dh]
+    k: jax.Array,              # [1, T, K, dh]
+    v: jax.Array,              # [1, T, K, dh]
+    positions: jax.Array,      # [1, T]
+    seg_ids: jax.Array,        # [1, T]
+    token_valid: jax.Array,    # [1, T]
+    cfg: ModelConfig,
+    is_local: jax.Array,
+    serve: ServeContext,
+) -> jax.Array:
+    """Segment-masked attention over the flat packed stream (jnp fallback to
+    the Pallas varlen kernel).
+
+    Requests are contiguous in the stream and at most ``max_seq_len`` long,
+    so a ``q_chunk`` query slab can only share a segment with tokens inside a
+    ``q_chunk + 2·max_seq_len`` window around it. Each chunk attends to that
+    window only — the XLA-level analogue of the kernel's tile-skip, keeping
+    fallback FLOPs ~ ``T·(c + 2L)`` instead of ``T²``.
+    """
+    _, T_len, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    c = min(serve.q_chunk, T_len)
+    win = min(T_len, c + 2 * serve.max_seq_len)
+    if T_len % c or win >= T_len:
+        # window covers everything (or ragged chunking): plain segment path
+        return L.attention(
+            q, k, v, q_pos=positions, kv_pos=positions,
+            kv_valid=token_valid, q_seg=seg_ids, kv_seg=seg_ids,
+            mask_mode="bidirectional", window=cfg.sliding_window,
+            is_local=is_local, attn_softcap=cfg.attn_softcap, q_chunk=c)
+    nq = T_len // c
+    scale = dh ** -0.5
+    # window start: the first token of the chunk's first segment, clamped so
+    # the static-size slice stays in bounds. seg start = chunk_start - pos.
+    starts = jnp.arange(nq, dtype=jnp.int32) * c
+    seg_start = starts - positions[0, starts]
+    w0 = jnp.clip(seg_start, 0, T_len - win)
+    qg = q[0].reshape(nq, c, K, G, dh)
+    qp = positions[0].reshape(nq, c)
+    qs = seg_ids[0].reshape(nq, c)
+
+    def chunk(args):
+        qc, qpc, qsc, w = args
+        kc = jax.lax.dynamic_slice_in_dim(k[0], w, win, axis=0)
+        vc = jax.lax.dynamic_slice_in_dim(v[0], w, win, axis=0)
+        kpc = jax.lax.dynamic_slice_in_dim(positions[0], w, win, axis=0)
+        ksc = jax.lax.dynamic_slice_in_dim(seg_ids[0], w, win, axis=0)
+        kvc = jax.lax.dynamic_slice_in_dim(token_valid[0], w, win, axis=0)
+        z = jnp.einsum("qkgd,skd->kgqs", qc, kc).astype(jnp.float32) * scale
+        if cfg.attn_softcap:
+            z = cfg.attn_softcap * jnp.tanh(z / cfg.attn_softcap)
+        ok = (qsc[:, None] == ksc[None, :]) & kvc[None, :]
+        if cfg.sliding_window:
+            dist = jnp.abs(qpc[:, None] - kpc[None, :])
+            ok = ok & jnp.where(is_local, dist <= cfg.sliding_window, True)
+        z = jnp.where(ok[None, None], z, -1e30)
+        p = jax.nn.softmax(z, axis=-1).astype(vc.dtype)
+        return jnp.einsum("kgqs,skd->qkgd", p, vc)
+
+    out = jax.lax.map(chunk, (qg, qp, qs, w0))     # [nq, c, K, G, dh]
+    return out.reshape(1, T_len, H, dh).astype(q.dtype)
+
+
+def _layer_full_packed(
+    p: dict,
+    x: jax.Array,              # [1, T, D] flat packed stream
+    cfg: ModelConfig,
+    positions: jax.Array,      # [1, T] position within the owning request
+    seg_ids: jax.Array,        # [1, T] ascending request id (sentinel on pad)
+    token_valid: jax.Array,    # [1, T]
+    cos, sin,
+    is_local: jax.Array,
+    serve: ServeContext,
+    gather_rows: jax.Array,    # [R, S_sel] flat row of request r's token s
+    valid_sel: jax.Array,      # [R, S_sel]
+    block_rows: jax.Array,     # [R, Sb] flat rows of each active block
+    in_block: jax.Array,       # [R, S_sel]
+) -> Tuple[jax.Array, PackedKV, jax.Array]:
+    x = L.constrain(x, "act3d")
+    h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _qkv(p, h, cfg, cos, sin)
+    if serve.use_flash_refresh or serve.use_flash_kernel:
+        from repro.kernels import ops as kops
+        attn_out = kops.flash_varlen_attention(
+            q[0], k[0], v[0], seg_ids=seg_ids[0], positions=positions[0],
+            kv_valid=token_valid[0], window=cfg.sliding_window,
+            is_local=is_local, softcap=cfg.attn_softcap)[None]
+    else:
+        attn_out = _attend_packed_stream(
+            q, k, v, positions, seg_ids, token_valid, cfg, is_local, serve)
+    x = x + jnp.einsum("bshe,hed->bsd", attn_out, p["wo"])
+    h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+    y, aux = _mlp(p, h2, cfg)
+    x = L.constrain(x + y, "act3d")
+
+    # head-centric select/pack still operates per request: gather ragged
+    # per-request K/V views out of the flat stream (memory traffic only — the
+    # O(T·D²) projections and O(ΣSᵢ²) attention above ran packed), then emit
+    # the same per-slot dense cache layout the padded path produces.
+    qb = q[0][block_rows]          # [R, Sb, H, dh]
+    kr = k[0][gather_rows]         # [R, S_sel, K, dh]
+    vr = v[0][gather_rows]
+    packed = select_and_pack(
+        qb, kr, vr, retain=serve.retain, kernel_size=serve.kernel_size,
+        mode=serve.selection, exclude=in_block | ~valid_sel,
+        token_valid=valid_sel)
+    return x, packed, aux
+
+
+def forward_full_packed(
+    stack: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                  # [1, T, D] embedded packed stream
+    positions: jax.Array,          # [1, T] int32
+    seg_ids: jax.Array,            # [1, T] int32
+    token_valid: jax.Array,        # [1, T] bool
+    cu_seqlens: jax.Array,         # [R] int32 flat start offset per request
+    seq_lens: jax.Array,           # [R] int32 true length per request
+    block_start: jax.Array,        # [R] int32 block offset within the request
+    serve: ServeContext,
+) -> Tuple[jax.Array, PackedKV, jax.Array]:
+    """Token-packed Refresh over the layer stack.
+
+    One ragged ``[T, ...]`` stream replaces the padded ``[B, S]`` batch;
+    requests are delimited by ``cu_seqlens``/``seg_ids`` and attention is
+    segment-masked (kernel or chunked-jnp — never an [S, S] bias). Returns
+    (flat hidden [1, T, D], per-request PackedKV with leading [L] axis, aux).
+    """
+    assert serve.max_seq_len > 0, "packed path needs ServeContext.max_seq_len"
+    _, T, _ = x.shape
+    S_sel = serve.max_seq_len
+    Sb = serve.block_size
+    cos, sin = L.rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    flags = L.layer_flags(cfg)
+
+    ar = jnp.arange(S_sel, dtype=jnp.int32)
+    gather_rows = jnp.clip(cu_seqlens[:, None] + ar[None], 0, T - 1)
+    valid_sel = ar[None] < seq_lens[:, None]
+    block_rows = jnp.clip(
+        cu_seqlens[:, None] + block_start[:, None]
+        + jnp.arange(Sb, dtype=jnp.int32)[None], 0, T - 1)
+    in_block = (ar[None] >= block_start[:, None]) & \
+               (ar[None] < block_start[:, None] + Sb)
+
+    def body(carry, scanned):
+        p, is_local = scanned
+        out, packed, aux = _layer_full_packed(
+            p, carry, cfg, positions, seg_ids, token_valid, cos, sin,
+            is_local, serve, gather_rows, valid_sel, block_rows, in_block)
+        return out, (packed, aux)
+
+    x, (packed, aux) = jax.lax.scan(body, x, (stack, flags))
     return x, packed, jnp.mean(aux)
 
 

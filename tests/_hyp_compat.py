@@ -1,0 +1,79 @@
+"""Hypothesis compatibility shim.
+
+Property-test modules import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly. When hypothesis is installed the real
+library is used unchanged; when it is absent (minimal containers ship only
+jax/numpy/pytest) the tests degrade to fixed-seed parametrized sampling —
+every ``@given`` test runs ``max_examples`` deterministic draws from the
+same strategy ranges, so collection never breaks and the invariants still
+get exercised.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # fixed-seed fallback
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+    _SEED = 0x5EED
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(_SEED)
+                for _ in range(n):
+                    draw = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **draw, **kwargs)
+            wrapper._is_given = True
+            # hide the drawn params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            keep = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -1,0 +1,391 @@
+"""Token-packed (varlen) Refresh path: kernel, model, engine, plan, budget.
+
+The padded ``serve_refresh`` is the correctness oracle throughout — the
+packed path must agree on block hidden states for random ragged batches and
+must never fall back to a ``[B, max_seq_len]`` padded refresh dispatch.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ServeConfig
+from repro.core.engine import Engine
+from repro.core.request import State
+from repro.core.scheduler import PhaseMultiplexedScheduler
+from repro.kernels import ops, ref
+from repro.kernels.flash_varlen import PAD_SEG
+from repro.models import backbone as BB
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(11)
+
+SERVE = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                    block_size=8, steps_per_block=8, max_seq_len=128,
+                    max_slots=8, max_refresh_per_iter=2,
+                    selection="head", scheduler="phase", logit_mode="chunked",
+                    varlen_pack=True, token_bucket=64)
+
+# reduced per-family configs exercised by the packed/padded agreement tests
+# (≥2 model families; moe capacity is made non-dropping so padded-batch pad
+# rows cannot perturb expert routing of real tokens)
+FAMS = {
+    "llada-8b": {},
+    "phi3.5-moe-42b-a6.6b": {"capacity_factor": 4.0},
+    "gemma2-27b": {},
+}
+
+
+def _ragged_stream(lens, max_seq_len, vocab, seed=0, bucket=64):
+    """Build padded-batch and packed-stream views of one ragged batch."""
+    rng = np.random.default_rng(seed)
+    B = len(lens)
+    toks = [rng.integers(0, vocab - 1, L).astype(np.int32) for L in lens]
+    tok_pad = np.zeros((B, max_seq_len), np.int32)
+    valid_pad = np.zeros((B, max_seq_len), bool)
+    for j, t in enumerate(toks):
+        tok_pad[j, : len(t)] = t
+        valid_pad[j, : len(t)] = True
+    t_real = int(sum(lens))
+    tp = -(-t_real // bucket) * bucket
+    flat = np.zeros(tp, np.int32)
+    pos = np.zeros(tp, np.int32)
+    seg = np.full(tp, PAD_SEG, np.int32)
+    val = np.zeros(tp, bool)
+    cu = np.full(B, max(0, tp - 1), np.int32)
+    sl = np.zeros(B, np.int32)
+    off = 0
+    for j, t in enumerate(toks):
+        L = len(t)
+        flat[off: off + L] = t
+        pos[off: off + L] = np.arange(L)
+        seg[off: off + L] = j
+        val[off: off + L] = True
+        cu[j] = off
+        sl[j] = L
+        off += L
+    return tok_pad, valid_pad, flat, pos, seg, val, cu, sl
+
+
+# ---------------------------------------------------------------------------
+# kernel: ragged flash attention vs the full-mask oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("softcap,window,is_local", [
+    (0.0, 0, False), (25.0, 0, False), (0.0, 8, True)])
+def test_flash_varlen_matches_ref(softcap, window, is_local):
+    rng = np.random.default_rng(3)
+    lens = rng.integers(5, 40, size=4)
+    t_real = int(lens.sum())
+    tp = -(-t_real // 64) * 64
+    seg = np.full(tp, PAD_SEG, np.int32)
+    pos = np.zeros(tp, np.int32)
+    valid = np.zeros(tp, bool)
+    off = 0
+    for i, L in enumerate(lens):
+        seg[off: off + L] = i
+        pos[off: off + L] = np.arange(L)
+        valid[off: off + L] = True
+        off += L
+    H, K, dh = 4, 2, 16
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (tp, H, dh))
+    k = jax.random.normal(kk, (tp, K, dh))
+    v = jax.random.normal(kv, (tp, K, dh))
+    out = ops.flash_varlen_attention(
+        q, k, v, seg_ids=jnp.asarray(seg), positions=jnp.asarray(pos),
+        kv_valid=jnp.asarray(valid), softcap=softcap, window=window,
+        is_local=is_local, q_tile=16, kv_tile=32)
+    out_r = ref.varlen_attention(
+        q, k, v, jnp.asarray(seg), jnp.asarray(pos), jnp.asarray(valid),
+        softcap=softcap, window=window, is_local=is_local)
+    np.testing.assert_allclose(np.asarray(out)[valid],
+                               np.asarray(out_r)[valid], atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999), q_tile=st.sampled_from([8, 16, 64]),
+       kv_tile=st.sampled_from([16, 32, 64]))
+def test_flash_varlen_tile_invariance(seed, q_tile, kv_tile):
+    """Online accumulation + tile-skip must be invariant to tiling."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(3, 30, size=int(rng.integers(1, 5)))
+    t_real = int(lens.sum())
+    tp = -(-t_real // 64) * 64
+    seg = np.full(tp, PAD_SEG, np.int32)
+    pos = np.zeros(tp, np.int32)
+    valid = np.zeros(tp, bool)
+    off = 0
+    for i, L in enumerate(lens):
+        seg[off: off + L] = i
+        pos[off: off + L] = np.arange(L)
+        valid[off: off + L] = True
+        off += L
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (tp, 4, 8))
+    k = jax.random.normal(kk, (tp, 2, 8))
+    v = jax.random.normal(kv, (tp, 2, 8))
+    kw = dict(seg_ids=jnp.asarray(seg), positions=jnp.asarray(pos),
+              kv_valid=jnp.asarray(valid))
+    a = ops.flash_varlen_attention(q, k, v, q_tile=q_tile, kv_tile=kv_tile,
+                                   **kw)
+    b = ops.flash_varlen_attention(q, k, v, q_tile=64, kv_tile=64, **kw)
+    np.testing.assert_allclose(np.asarray(a)[valid], np.asarray(b)[valid],
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# model: packed vs padded serve_refresh agreement (the oracle contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(FAMS))
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_packed_refresh_matches_padded(arch, use_kernel):
+    cfg = reduced(ARCHS[arch], **FAMS[arch])
+    params = BB.init_params(cfg, KEY)
+    # the padded oracle always runs the chunked-jnp path; the packed side
+    # optionally dispatches the Pallas varlen kernel (kernel-vs-jnp check)
+    ctx = T.ServeContext(block_size=8, retain=24, q_chunk=32, max_seq_len=96)
+    ctx_pk = dataclasses.replace(ctx, use_flash_refresh=use_kernel)
+    rng = np.random.default_rng(7)
+    for trial in range(2):
+        lens = [int(x) for x in rng.integers(12, 96, size=3)]
+        bstarts = np.array([max(0, L - 8 - int(rng.integers(0, max(1, L - 8))))
+                            for L in lens], np.int32)
+        bstarts = (bstarts // 8) * 8
+        tok_pad, valid_pad, flat, pos, seg, val, cu, sl = _ragged_stream(
+            lens, 96, cfg.vocab_size, seed=trial)
+        out_pad = BB.serve_refresh(
+            params, cfg, jnp.asarray(tok_pad), jnp.asarray(bstarts), ctx,
+            token_valid=jnp.asarray(valid_pad))
+        out_pk = BB.serve_refresh_packed(
+            params, cfg, jnp.asarray(flat), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(val), jnp.asarray(cu),
+            jnp.asarray(sl), jnp.asarray(bstarts), ctx_pk)
+        np.testing.assert_allclose(
+            np.asarray(out_pk.block_hidden, np.float32),
+            np.asarray(out_pad.block_hidden, np.float32), atol=1e-4)
+        # retained caches must agree too (pre-pool masking keeps selection
+        # independent of batch composition; rare fp-tie flips aside, the
+        # overwhelming majority of retained positions must match)
+        pos_eq = (np.asarray(out_pk.cache.pos)
+                  == np.asarray(out_pad.cache.pos)).mean()
+        assert pos_eq > 0.99, pos_eq
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(1, 4))
+def test_packed_refresh_property_random_ragged(seed, n):
+    """Property form: any ragged batch, any block offsets, dense family."""
+    cfg = reduced(ARCHS["llada-8b"])
+    params = BB.init_params(cfg, jax.random.PRNGKey(1))
+    ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
+    rng = np.random.default_rng(seed)
+    lens = [int(x) for x in rng.integers(9, 64, size=n)]
+    bstarts = np.array([int(rng.integers(0, L - 8)) for L in lens], np.int32)
+    tok_pad, valid_pad, flat, pos, seg, val, cu, sl = _ragged_stream(
+        lens, 64, cfg.vocab_size, seed=seed, bucket=32)
+    out_pad = BB.serve_refresh(
+        params, cfg, jnp.asarray(tok_pad), jnp.asarray(bstarts), ctx,
+        token_valid=jnp.asarray(valid_pad))
+    out_pk = BB.serve_refresh_packed(
+        params, cfg, jnp.asarray(flat), jnp.asarray(pos), jnp.asarray(seg),
+        jnp.asarray(val), jnp.asarray(cu), jnp.asarray(sl),
+        jnp.asarray(bstarts), ctx)
+    np.testing.assert_allclose(
+        np.asarray(out_pk.block_hidden, np.float32),
+        np.asarray(out_pad.block_hidden, np.float32), atol=1e-4)
+
+
+def test_selection_ignores_foreign_neighbours():
+    """A request's retained KV set must not depend on what it is packed
+    with: rows past seq_len in the per-request gather view belong to the
+    NEXT request, and the score max-pool must not leak their relevance into
+    valid boundary tokens (scores are masked to -inf pre-pool)."""
+    from repro.models.sparse_select import select_and_pack
+    B, Sb, K, G, S, dh = 1, 4, 2, 2, 24, 8
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Sb, K * G, dh))
+    kf = jax.random.normal(ks[1], (B, S, K, dh))
+    vf = jax.random.normal(ks[2], (B, S, K, dh))
+    valid = jnp.zeros((B, S), bool).at[:, :16].set(True)   # tokens ≥16 foreign
+    excl = ~valid
+    kw = dict(retain=8, kernel_size=3, mode="head", exclude=excl,
+              token_valid=valid)
+    p1 = select_and_pack(q, kf, vf, **kw)
+    # replace the foreign tail with adversarially-huge keys: selection of the
+    # valid region must be bit-identical
+    kf2 = kf.at[:, 16:].set(100.0 * jnp.abs(kf[:, 16:]) + 50.0)
+    p2 = select_and_pack(q, kf2, vf, **kw)
+    assert np.array_equal(np.asarray(p1.pos), np.asarray(p2.pos))
+    assert np.array_equal(np.asarray(p1.valid), np.asarray(p2.valid))
+
+
+def test_windowed_stream_attention_matches_plain():
+    """The windowed jnp fallback (KV window = q_chunk + 2L) must be exact:
+    build a stream long enough that windows genuinely truncate."""
+    cfg = reduced(ARCHS["llada-8b"])
+    rng = np.random.default_rng(9)
+    S_max, c = 24, 16
+    lens, total = [], 0
+    while total < 200:
+        L = int(rng.integers(6, S_max + 1))
+        lens.append(L)
+        total += L
+    tp = -(-total // c) * c
+    seg = np.full(tp, PAD_SEG, np.int32)
+    pos = np.zeros(tp, np.int32)
+    val = np.zeros(tp, bool)
+    off = 0
+    for i, L in enumerate(lens):
+        seg[off: off + L] = i
+        pos[off: off + L] = np.arange(L)
+        val[off: off + L] = True
+        off += L
+    H, K, dh = 4, 2, 16
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (1, tp, H, dh))
+    k = jax.random.normal(kk, (1, tp, K, dh))
+    v = jax.random.normal(kv, (1, tp, K, dh))
+    serve = T.ServeContext(block_size=8, retain=8, q_chunk=c,
+                           max_seq_len=S_max)
+    assert c + 2 * S_max < tp   # windows actually truncate
+    win = T._attend_packed_stream(
+        q, k, v, jnp.asarray(pos)[None], jnp.asarray(seg)[None],
+        jnp.asarray(val)[None], cfg, jnp.asarray(False), serve)
+    ref_out = ref.varlen_attention(
+        q[0], k[0], v[0], jnp.asarray(seg), jnp.asarray(pos),
+        jnp.asarray(val))
+    np.testing.assert_allclose(np.asarray(win)[0][val],
+                               np.asarray(ref_out)[val], atol=2e-5)
+
+
+def test_packed_refresh_rejects_ssm():
+    cfg = reduced(ARCHS["mamba2-130m"])
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
+    z = jnp.zeros((32,), jnp.int32)
+    with pytest.raises(NotImplementedError):
+        BB.serve_refresh_packed(params, cfg, z, z, z, jnp.ones((32,), bool),
+                                z[:1], z[:1], z[:1], ctx)
+
+
+# ---------------------------------------------------------------------------
+# engine: the packed fast path never issues a padded refresh
+# ---------------------------------------------------------------------------
+
+def _serve_engine(serve, n=5, seed=0, arch="llada-8b", forbid_padded=False):
+    cfg = reduced(ARCHS[arch])
+    eng = Engine(cfg, serve, seed=seed)
+    if forbid_padded:
+        def _boom(chunk):
+            raise AssertionError("padded [B, max_seq_len] refresh on the "
+                                 "packed path")
+        eng._run_refresh = _boom
+    rng = np.random.default_rng(seed)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                    int(rng.integers(8, 40))),
+                       gen_len=16, arrival=0.0, rid=i)
+            for i in range(n)]
+    stats = eng.run()
+    return eng, reqs, stats
+
+
+def test_engine_packed_no_padded_refresh_call():
+    eng, reqs, stats = _serve_engine(SERVE, forbid_padded=True)
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert all((r.output_tokens() != eng.mask_id).all() for r in reqs)
+    assert stats.padded_refresh_calls == 0
+    assert stats.packed_refresh_calls > 0
+    # executed tokens within one token-bucket of Σ total_len per dispatch
+    assert stats.refresh_tokens_exec >= stats.refresh_tokens_real
+    assert stats.refresh_tokens_exec < stats.refresh_tokens_real + \
+        SERVE.token_bucket * stats.packed_refresh_calls
+
+
+def test_engine_packed_padded_same_totals():
+    _, r_pk, s_pk = _serve_engine(SERVE, seed=3)
+    _, r_pd, s_pd = _serve_engine(
+        dataclasses.replace(SERVE, varlen_pack=False), seed=3)
+    assert s_pk.committed_tokens == s_pd.committed_tokens
+    assert all(r.state == State.FINISHED for r in r_pk + r_pd)
+    # the padded oracle pays strictly more executed tokens on ragged work
+    assert s_pk.refresh_tokens_exec < s_pd.refresh_tokens_exec
+    assert s_pk.refresh_tokens_real == s_pd.refresh_tokens_real
+
+
+def test_engine_packed_flash_kernel_path():
+    serve = dataclasses.replace(SERVE, use_flash_kernel=True)
+    _, reqs, stats = _serve_engine(serve, n=3, forbid_padded=True)
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.packed_refresh_calls > 0
+
+
+def test_engine_ssm_falls_back_to_padded_oracle():
+    _, reqs, stats = _serve_engine(SERVE, n=2, arch="mamba2-130m")
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.packed_refresh_calls == 0
+    assert stats.padded_refresh_calls > 0
+
+
+# ---------------------------------------------------------------------------
+# plan: packed layout + query-token invariant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 10), budget=st.integers(64, 512),
+       seed=st.integers(0, 99))
+def test_packed_plan_layout_and_invariant(n, budget, seed):
+    from repro.core.request import Request
+    cfg = dataclasses.replace(SERVE, max_num_batched_tokens=budget)
+    sched = PhaseMultiplexedScheduler(cfg)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        plen = int(rng.integers(4, 48))
+        if plen + 16 + 8 > cfg.max_seq_len or plen + 16 > budget:
+            plen = 8
+        sched.submit(Request(rid=i, prompt=np.zeros(plen, np.int32),
+                             gen_len=16, arrival=0.0, cfg=cfg, mask_id=255))
+    for _ in range(3):
+        plan = sched.plan(now=1e9)
+        cu = plan.refresh_cu_seqlens()
+        assert cu[0] == 0 and cu[-1] == plan.refresh_total_tokens
+        assert np.all(np.diff(cu) > 0) or len(plan.refresh) == 0
+        assert list(np.diff(cu)) == plan.refresh_token_counts
+        # query-token invariant holds for the packed layout too
+        assert plan.refresh_total_tokens <= plan.query_tokens <= budget
+        for r in plan.refresh + plan.reuse:
+            blk = r.block_tokens().copy()
+            blk[:] = 1
+            r.advance(blk, now=0.0)
+            if r.state == State.FINISHED:
+                sched.finish(r)
+
+
+# ---------------------------------------------------------------------------
+# budgeting: packed activation accounting buys KV slots
+# ---------------------------------------------------------------------------
+
+def test_budgeting_packed_tokens_buy_slots():
+    from repro.configs import get_config
+    from repro.core.budgeting import max_exec_tokens, plan_memory
+    cfg = get_config("llada-8b")
+    base = ServeConfig(max_num_batched_tokens=4000, max_num_logits=2048,
+                       max_seq_len=2048, max_slots=256, max_refresh_per_iter=4,
+                       logit_mode="chunked")
+    packed = dataclasses.replace(base, varlen_pack=True)
+    assert max_exec_tokens(packed, cfg) < max_exec_tokens(base, cfg)
+    # families the engine cannot pack keep the padded reservation even under
+    # varlen_pack (the padded-oracle fallback executes the full rectangle)
+    from repro.configs import get_config as _gc
+    ssm_cfg = _gc("mamba2-130m")
+    assert max_exec_tokens(packed, ssm_cfg) == max_exec_tokens(base, ssm_cfg)
+    p_pad = plan_memory(cfg, base, 24 << 30)
+    p_pk = plan_memory(cfg, packed, 24 << 30)
+    assert p_pk.activation_bytes < p_pad.activation_bytes
+    assert p_pk.max_slots >= p_pad.max_slots
+    assert p_pk.kv_pool_bytes > p_pad.kv_pool_bytes

@@ -1,7 +1,7 @@
 """Phase-Multiplexed Scheduler invariants (hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.configs.base import ServeConfig
 from repro.core.request import Phase, Request, State

@@ -1,7 +1,7 @@
 """Synthetic workload traces: statistical/structural properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.data.workloads import WORKLOADS, make_trace, trace_prompts
 
