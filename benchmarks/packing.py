@@ -1,17 +1,22 @@
-"""Token-packed vs padded Refresh execution (§4.1 flattened engine).
+"""Whole-iteration token-packed vs padded execution (§4.1 flattened engine).
 
-Runs the SAME ragged workload through both real execution paths and reports:
+Runs the SAME ragged workload through both real execution paths and reports
+per-stage token accounting — executed vs true tokens for Refresh, Reuse, and
+the logit stage. The packed pipeline must stay within one ``token_bucket``
+of the true token count per dispatch on every stage; the padded oracle pays
+pow2 rectangles (``batch_bucket × max_seq_len`` for Refresh, pow2 request
+batches for Reuse, pow2 row buckets for logits). Measured wall time per
+Refresh step is reported for this host (CPU: directionally useful only; the
+token ratios are the device-independent signal).
 
-  * token accounting — executed vs true Refresh tokens per path. The packed
-    path must stay within one ``token_bucket`` of ``Σ total_len`` per
-    dispatch (FLOPs within ~10% of the true-token sum for realistic chunk
-    sizes); the padded oracle pays ``batch_bucket × max_seq_len``.
-  * measured wall time per Refresh step on this host (CPU: directionally
-    useful only; the token ratio is the device-independent signal).
+``python -m benchmarks.packing --smoke --out packing_smoke.json`` runs the
+CI gate: asserts ``refresh_waste``/``reuse_waste``/``logit_waste`` of the
+packed engine are each ≤ the padded baseline and writes the JSON row.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 
 import numpy as np
@@ -45,26 +50,37 @@ def _run_one(varlen: bool, n: int, seed: int = 0) -> dict:
         stats = eng.run()
         return time.perf_counter() - t0, stats
 
+    def snap(s):
+        return dict(
+            calls=s.packed_refresh_calls + s.padded_refresh_calls,
+            refresh_real=s.refresh_tokens_real,
+            refresh_exec=s.refresh_tokens_exec,
+            reuse_real=s.reuse_tokens_real, reuse_exec=s.reuse_tokens_exec,
+            logit_real=s.logit_tokens_real, logit_exec=s.logit_tokens_exec,
+            committed=s.committed_tokens)
+
     # wave 1 triggers the lazy per-bucket compiles; wave 2 replays the same
     # length distribution and is the measured steady state (EngineStats is
     # engine-lifetime, so every reported number is a wave-2 delta)
     _, s1 = wave(0)
-    calls1 = s1.packed_refresh_calls + s1.padded_refresh_calls
-    real1, exec1 = s1.refresh_tokens_real, s1.refresh_tokens_exec
-    committed1 = s1.committed_tokens
+    w1 = snap(s1)
     wall, s2 = wave(n)
-    calls = (s2.packed_refresh_calls + s2.padded_refresh_calls) - calls1
-    real = s2.refresh_tokens_real - real1
-    exc = s2.refresh_tokens_exec - exec1
-    return dict(
-        real=real,
-        exec=exc,
-        waste=exc / max(real, 1),
-        calls=calls,
-        us_per_refresh=1e6 * wall / max(calls, 1),
-        committed=s2.committed_tokens - committed1,
+    w2 = snap(s2)
+    d = {k: w2[k] - w1[k] for k in w1}
+    out = dict(
+        real=d["refresh_real"],
+        exec=d["refresh_exec"],
+        refresh_waste=d["refresh_exec"] / max(d["refresh_real"], 1),
+        reuse_waste=d["reuse_exec"] / max(d["reuse_real"], 1),
+        logit_waste=d["logit_exec"] / max(d["logit_real"], 1),
+        calls=d["calls"],
+        us_per_refresh=1e6 * wall / max(d["calls"], 1),
+        committed=d["committed"],
         wall=wall,
     )
+    for k in ("reuse_real", "reuse_exec", "logit_real", "logit_exec"):
+        out[k] = d[k]
+    return out
 
 
 def run(quick: bool = True):
@@ -73,16 +89,70 @@ def run(quick: bool = True):
     padded = _run_one(False, n)
     out = [
         ("packing/packed/refresh_tokens_exec", packed["us_per_refresh"],
-         f"{packed['exec']}exec/{packed['real']}real={packed['waste']:.3f}x"),
+         f"{packed['exec']}exec/{packed['real']}real="
+         f"{packed['refresh_waste']:.3f}x"),
         ("packing/padded/refresh_tokens_exec", padded["us_per_refresh"],
-         f"{padded['exec']}exec/{padded['real']}real={padded['waste']:.3f}x"),
+         f"{padded['exec']}exec/{padded['real']}real="
+         f"{padded['refresh_waste']:.3f}x"),
+        ("packing/packed/reuse_waste", 0.0,
+         f"{packed['reuse_exec']}exec/{packed['reuse_real']}real="
+         f"{packed['reuse_waste']:.3f}x"),
+        ("packing/padded/reuse_waste", 0.0,
+         f"{padded['reuse_exec']}exec/{padded['reuse_real']}real="
+         f"{padded['reuse_waste']:.3f}x"),
+        ("packing/packed/logit_waste", 0.0,
+         f"{packed['logit_exec']}exec/{packed['logit_real']}real="
+         f"{packed['logit_waste']:.3f}x"),
+        ("packing/padded/logit_waste", 0.0,
+         f"{padded['logit_exec']}exec/{padded['logit_real']}real="
+         f"{padded['logit_waste']:.3f}x"),
         ("packing/exec_token_ratio_padded_over_packed", 0.0,
          f"{padded['exec'] / max(packed['exec'], 1):.2f}x"),
         ("packing/step_time_ratio_padded_over_packed", 0.0,
          f"{padded['us_per_refresh'] / max(packed['us_per_refresh'], 1e-9):.2f}x"),
         ("packing/packed_flops_within_10pct_of_true", 0.0,
-         str(packed["waste"] <= 1.10)),
+         str(packed["refresh_waste"] <= 1.10)),
     ]
     assert packed["committed"] == padded["committed"], \
         (packed["committed"], padded["committed"])
     return out
+
+
+def smoke(out_path: str | None = None) -> dict:
+    """CI gate: the packed engine's per-stage waste must never exceed the
+    padded baseline on the same ragged workload. Returns (and optionally
+    writes) the comparison row."""
+    packed = _run_one(True, 8)
+    padded = _run_one(False, 8)
+    row = dict(packed=packed, padded=padded)
+    assert packed["committed"] == padded["committed"], row
+    for stage in ("refresh_waste", "reuse_waste", "logit_waste"):
+        assert packed[stage] <= padded[stage] + 1e-9, (stage, row)
+    row["ok"] = True
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(row, f, indent=1)
+    return row
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert packed waste ≤ padded per stage, emit JSON")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        row = smoke(args.out)
+        p, d = row["packed"], row["padded"]
+        for stage in ("refresh_waste", "reuse_waste", "logit_waste"):
+            print(f"{stage}: packed={p[stage]:.3f}x padded={d[stage]:.3f}x")
+        print("smoke ok")
+        return
+    for name, us, derived in run(quick=not args.full):
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

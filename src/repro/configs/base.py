@@ -142,10 +142,14 @@ class ServeConfig:
     scheduler: str = "phase"             # phase | request (baseline)
     logit_mode: str = "fused"            # fused (pallas) | chunked | monolithic
     varlen_pack: bool = False            # flatten inputs (no padding waste);
-    # the paper's custom-engine contribution (§6.6 "Inference Engine"):
-    # Refresh executes over ONE ragged token stream instead of a padded
-    # [B, max_seq_len] batch (real path for attention families; SSM/hybrid
-    # fall back to the padded oracle)
+    # the paper's custom-engine contribution (§6.6 "Inference Engine"),
+    # applied to the WHOLE iteration: Refresh runs ONE ragged token stream
+    # instead of a padded [B, max_seq_len] batch, Reuse runs the active
+    # blocks as one ragged [R·Sb] stream instead of a pow2 request batch,
+    # and the logit stage decodes the real hidden rows at token_bucket
+    # granularity instead of a pow2 row bucket. Refresh/Reuse pack for
+    # attention families (SSM/hybrid fall back to the padded oracle); the
+    # logit stage packs for every family.
     token_bucket: int = 128              # packed-stream size granularity
     # (rounds Σ Lᵢ up — bounds jit cache entries at budget/token_bucket while
     # keeping waste < one bucket, vs up-to-2× for power-of-two padding)

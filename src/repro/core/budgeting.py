@@ -30,14 +30,28 @@ def dtype_bytes(dtype: str) -> int:
 # analytic accounting
 # ---------------------------------------------------------------------------
 
+def logit_exec_tokens(serve: ServeConfig, n_logit_tokens: int) -> int:
+    """Rows the engine's decode dispatch actually materializes for ``n``
+    real hidden rows: token-bucket rounding under the packed engine (exact
+    below one bucket — rows arrive in whole blocks), pow2 rounding on the
+    padded oracle. The logit stage packs for *every* family under
+    ``varlen_pack`` (the output head is family-agnostic)."""
+    n = max(1, n_logit_tokens)
+    if serve.varlen_pack:
+        return token_bucket_round(n, serve.token_bucket)
+    return pow2_bucket(n, lo=serve.block_size)
+
+
 def logit_activation_bytes(cfg: ModelConfig, serve: ServeConfig,
                            n_logit_tokens: int) -> int:
-    """Peak bytes of the output-projection stage under each C1 mode."""
+    """Peak bytes of the output-projection stage under each C1 mode, billed
+    by *executed* rows (the engine's bucketing policy, not the real count)."""
+    n_exec = logit_exec_tokens(serve, n_logit_tokens)
     if serve.logit_mode == "monolithic":
         # the paper's §3.2 boom: the full [N, V] tensor (f32 after softcap)
-        return n_logit_tokens * cfg.vocab_size * 4
+        return n_exec * cfg.vocab_size * 4
     if serve.logit_mode == "chunked":
-        return min(n_logit_tokens, serve.max_num_logits) * cfg.vocab_size * 4
+        return min(n_exec, serve.max_num_logits) * cfg.vocab_size * 4
     # fused: the Pallas online kernel holds one [T_tile, V_tile] f32 block
     return 256 * serve.vocab_tile * 4
 
@@ -82,6 +96,18 @@ def pow2_bucket(n: int, lo: int = 1) -> int:
     return b
 
 
+def token_bucket_round(n: int, bucket: int) -> int:
+    """Packed-stream rounding, the single source of truth for the engine's
+    Reuse/logit buckets and this profiler's exec-token accounting: exact
+    below one bucket, ceil to bucket multiples above, and never beyond the
+    pow2 oracle bucket — the invariant the CI waste gate asserts (the cap
+    only binds for non-pow2 ``bucket`` values)."""
+    n = max(1, n)
+    b = max(1, bucket)
+    r = n if n <= b else -(-n // b) * b
+    return min(r, pow2_bucket(n))
+
+
 def max_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
     """Worst-case tokens one Refresh dispatch materializes activations for.
 
@@ -99,13 +125,29 @@ def max_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
                * serve.max_seq_len)
 
 
+def reuse_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
+    """Worst-case tokens one Reuse dispatch materializes activations for.
+
+    The reuse set is bounded by both ``max_slots`` and the scheduler budget
+    (block tokens are scheduling currency). Packed engines round the request
+    count to whole token buckets (exact below one bucket); padded engines —
+    and the SSM/hybrid fallback — pay the pow2 batch bucket."""
+    Sb = max(1, serve.block_size)
+    r_max = max(1, min(serve.max_slots, serve.max_num_batched_tokens // Sb))
+    if serve.varlen_pack and can_pack_tokens(cfg):
+        rb = max(1, serve.token_bucket // Sb)
+        return token_bucket_round(r_max, rb) * Sb
+    return pow2_bucket(r_max) * Sb
+
+
 def backbone_activation_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
-    """Workspace for attention/MLP over one packed batch. Scaled by *executed*
-    tokens: the query-token budget under varlen packing (§4.4 'scheduling
-    currency'), the padded refresh rectangle otherwise — the packed engine's
-    smaller reservation is converted into KV slots by :func:`plan_memory`."""
+    """Workspace for attention/MLP over one packed batch. Scaled by the
+    *executed* tokens of the widest stage — Refresh (query-token budget
+    under varlen packing, the padded rectangle otherwise) or Reuse (packed
+    block stream vs pow2 batch). The packed engine's smaller reservation is
+    converted into KV slots by :func:`plan_memory`."""
     b = dtype_bytes(serve.dtype)
-    T = max_exec_tokens(serve, cfg)
+    T = max(max_exec_tokens(serve, cfg), reuse_exec_tokens(serve, cfg))
     width = max(cfg.d_ff, cfg.n_heads * cfg.resolved_head_dim,
                 3 * cfg.d_model)
     return T * width * b * 2  # double-buffered

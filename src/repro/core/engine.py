@@ -3,26 +3,43 @@
 One engine iteration (§4.1 workflow):
   1. the scheduler builds an :class:`IterationPlan` under the query-token
      budget (C2),
-  2. Refresh sub-batches run ``serve_refresh`` (full-seq forward + head-
-     centric select/pack) and write packed caches into the slot pool (C3),
-  3. Reuse sub-batches run ``serve_reuse`` over gathered slot caches,
+  2. Refresh sub-batches run the full-seq forward + head-centric select/pack
+     and write packed caches into the slot pool (C3),
+  3. the Reuse set runs active-block attention over gathered slot caches,
   4. all block hidden states are decoded through the *budgeted* logit stage
      (C1: serial ``max_num_logits`` sub-batches / fused Pallas kernel),
   5. commits are applied host-side and request state machines advance.
 
-Static-shape policy: two Refresh execution paths.
+Static-shape policy: two execution paths for the WHOLE iteration.
 
-* padded (oracle): sub-batches bucketed to powers of two, sequences padded to
-  ``max_seq_len`` — up to ~2× wasted FLOPs/HBM per step. Kept as the
-  correctness oracle and the fallback for SSM/hybrid families.
-* token-packed (``varlen_pack=True``, the paper's §4.1 flattened engine): the
-  Refresh set is flattened into ONE ragged ``[T_total, ...]`` stream bucketed
-  on *total tokens* (``token_bucket`` granularity — few jit entries, high
-  occupancy), with in-kernel segment masking. Real compute pays for real
-  tokens; no ``[B, max_seq_len]`` refresh call ever happens on this path.
+* padded (oracle): every stage is bucketed to powers of two — Refresh pads
+  sequences to ``max_seq_len``, Reuse pads the request batch, and the logit
+  stage pads the concatenated hidden rows — up to ~2× wasted FLOPs/HBM per
+  stage. Kept as the correctness oracle and the fallback for SSM/hybrid
+  families (their state scans cannot consume a ragged stream).
+* token-packed (``varlen_pack=True``, the paper's §4.1 flattened engine): no
+  stage launches a pow2-padded rectangle. The iteration executes as a single
+  packed pipeline driven by the scheduler's
+  :class:`~repro.core.scheduler.PackedIterationLayout` (per-stage cu_seqlens):
 
-Every jitted entry point is cached per bucket (padded: batch bucket;
-packed: (token bucket, request bucket)).
+    - Refresh: ONE ragged ``[T_total, ...]`` stream per chunk, bucketed on
+      *total tokens* (``token_bucket`` granularity), in-kernel segment
+      masking + tile-skip (``kernels/flash_varlen``), and select/pack that
+      reads the stream in place (no padded K/V gather).
+    - Reuse: the iteration's R active blocks form one ragged ``[R·Sb]``
+      query stream (R rounded only to the token-bucket granularity) against
+      their gathered slot caches — the cross-attention varlen kernel skips
+      KV tiles of non-owned slots.
+    - Logit stage: the real ``N`` hidden rows are decoded at token-bucket
+      granularity with a validity mask threaded into the fused Pallas argmax
+      kernel; all-padding chunks are never paid for.
+
+  Per-stage ``*_tokens_real`` / ``*_tokens_exec`` counters expose the
+  padding waste of each path (``refresh_waste`` / ``reuse_waste`` /
+  ``logit_waste``).
+
+Every jitted entry point is cached per bucket (padded: batch bucket; packed:
+token/request-granularity bucket).
 """
 from __future__ import annotations
 
@@ -37,7 +54,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import diffusion
-from repro.core.budgeting import can_pack_tokens, pow2_bucket as _bucket
+from repro.core.budgeting import (can_pack_tokens, pow2_bucket as _bucket,
+                                  token_bucket_round)
 from repro.kernels import flash_varlen as FV
 from repro.core.kv_pool import KVPool
 from repro.core.request import Phase, Request, State
@@ -82,19 +100,34 @@ class EngineStats:
     deferred_steps: int = 0
     peak_query_tokens: int = 0
     wall_time: float = 0.0
-    # padded-vs-packed Refresh accounting: `real` is Σ total_len over refreshed
-    # requests; `exec` is what the device actually consumed (padded bucket ×
-    # max_seq_len on the oracle path, the token bucket on the packed path).
+    # padded-vs-packed accounting, one pair per stage: `real` is the stage's
+    # true token count (Σ total_len for Refresh, R·Sb for Reuse, N hidden
+    # rows for the logit stage); `exec` is what the device actually consumed
+    # (pow2 rectangles on the oracle path, token-bucket rounding packed).
     refresh_tokens_real: int = 0
     refresh_tokens_exec: int = 0
+    reuse_tokens_real: int = 0
+    reuse_tokens_exec: int = 0
+    logit_tokens_real: int = 0
+    logit_tokens_exec: int = 0
     packed_refresh_calls: int = 0
     padded_refresh_calls: int = 0
+    packed_reuse_calls: int = 0
+    padded_reuse_calls: int = 0
     iter_log: List[dict] = field(default_factory=list)
 
     @property
     def refresh_waste(self) -> float:
         """exec/real token ratio (1.0 = zero padding waste)."""
         return self.refresh_tokens_exec / max(self.refresh_tokens_real, 1)
+
+    @property
+    def reuse_waste(self) -> float:
+        return self.reuse_tokens_exec / max(self.reuse_tokens_real, 1)
+
+    @property
+    def logit_waste(self) -> float:
+        return self.logit_tokens_exec / max(self.logit_tokens_real, 1)
 
     @property
     def throughput(self) -> float:
@@ -134,7 +167,9 @@ class Engine:
         self._refresh_jit: Dict[int, callable] = {}
         self._refresh_packed_jit: Dict[tuple, callable] = {}
         self._reuse_jit: Dict[int, callable] = {}
+        self._reuse_packed_jit: Dict[int, callable] = {}
         self._decode_jit: Dict[int, callable] = {}
+        self._decode_packed_jit: Dict[int, callable] = {}
         self._rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------
@@ -156,6 +191,23 @@ class Engine:
         """Round a real token count up to the packed-buffer granularity."""
         tb = max(1, self.serve.token_bucket)
         return max(tb, -(-n_tokens // tb) * tb)
+
+    def _reuse_bucket(self, n_requests: int) -> int:
+        """Packed-Reuse request-count granularity: R·block_size rounded to
+        the token bucket (``rb = token_bucket // Sb`` whole blocks — never a
+        pow2 batch bucket). Below one bucket the stream runs exactly-sized:
+        R is already capped by ``max_slots``, so sub-bucket shapes add at
+        most ``rb`` jit entries and the packed dispatch never pays more
+        tokens than the pow2 oracle (see ``token_bucket_round``)."""
+        rb = max(1, self.serve.token_bucket // self.serve.block_size)
+        return token_bucket_round(n_requests, rb)
+
+    def _logit_bucket(self, n_rows: int) -> int:
+        """Packed logit-stage granularity: hidden rows arrive in whole
+        blocks (N = n_decoded·Sb), so below one token bucket the stream runs
+        exactly-sized (≤ token_bucket/Sb extra jit entries); above, it
+        rounds to token-bucket multiples. Never a pow2 row bucket."""
+        return token_bucket_round(n_rows, self.serve.token_bucket)
 
     def _refresh_packed_fn(self, tp: int, rp: int):
         if (tp, rp) not in self._refresh_packed_jit:
@@ -183,6 +235,18 @@ class Engine:
             self._reuse_jit[n] = fn
         return self._reuse_jit[n]
 
+    def _reuse_packed_fn(self, rp: int):
+        if rp not in self._reuse_packed_jit:
+            ctx = self.ctx
+
+            @jax.jit
+            def fn(params, flat_tokens, flat_positions, cache):
+                return BB.serve_reuse_packed(params, self.cfg, flat_tokens,
+                                             flat_positions, cache, ctx)
+
+            self._reuse_packed_jit[rp] = fn
+        return self._reuse_packed_jit[rp]
+
     def _decode_fn(self, n: int):
         if n not in self._decode_jit:
             serve = self.serve
@@ -196,6 +260,20 @@ class Engine:
 
             self._decode_jit[n] = fn
         return self._decode_jit[n]
+
+    def _decode_packed_fn(self, n: int):
+        if n not in self._decode_packed_jit:
+            serve = self.serve
+
+            @jax.jit
+            def fn(params, h, valid):
+                return LM.decode_tokens_packed(
+                    params["embed"], self.cfg, h, valid,
+                    max_num_logits=serve.max_num_logits,
+                    mode=serve.logit_mode, vocab_tile=serve.vocab_tile)
+
+            self._decode_packed_jit[n] = fn
+        return self._decode_packed_jit[n]
 
     # ------------------------------------------------------------------
     # public API
@@ -238,20 +316,46 @@ class Engine:
             b *= 2
         bpos = jnp.zeros((1, Sb), jnp.int32)
         btok = jnp.zeros((1, Sb), jnp.int32)
-        b = 1
-        while b <= self.serve.max_slots:
-            cache = self.pool.gather([self.pool.scratch_slot] * b)
-            self._reuse_fn(b)(self.params, jnp.broadcast_to(btok, (b, Sb)),
-                              jnp.broadcast_to(bpos, (b, Sb)), cache)
-            b *= 2
-        n = Sb
+        r_cap = max(1, min(self.serve.max_slots,
+                           self.serve.max_num_batched_tokens // Sb))
+        if self._use_packed:
+            # packed Reuse: buckets are token_bucket-granular request counts
+            # (doubling warm; intermediate multiples compile lazily)
+            rp = self._reuse_bucket(1)
+            while True:
+                cache = self.pool.gather([self.pool.scratch_slot] * rp)
+                self._reuse_packed_fn(rp)(
+                    self.params, jnp.zeros((rp * Sb,), jnp.int32),
+                    jnp.zeros((rp * Sb,), jnp.int32), cache)
+                if rp >= self._reuse_bucket(r_cap):
+                    break
+                rp = min(rp * 2, self._reuse_bucket(r_cap))
+        else:
+            b = 1
+            while b <= self.serve.max_slots:
+                cache = self.pool.gather([self.pool.scratch_slot] * b)
+                self._reuse_fn(b)(self.params,
+                                  jnp.broadcast_to(btok, (b, Sb)),
+                                  jnp.broadcast_to(bpos, (b, Sb)), cache)
+                b *= 2
         max_logits = (self.serve.max_refresh_per_iter
                       + self.serve.max_slots) * Sb
-        while n <= max_logits * 2:
-            self._decode_fn(n)(self.params,
-                               jnp.zeros((n, self.cfg.d_model),
-                                         jnp.dtype(self.cfg.dtype)))
-            n *= 2
+        dt = jnp.dtype(self.cfg.dtype)
+        if self.serve.varlen_pack:
+            n = self._logit_bucket(Sb)
+            while True:
+                self._decode_packed_fn(n)(
+                    self.params, jnp.zeros((n, self.cfg.d_model), dt),
+                    jnp.ones((n,), bool))
+                if n >= self._logit_bucket(max_logits):
+                    break
+                n = min(n * 2, self._logit_bucket(max_logits))
+        else:
+            n = Sb
+            while n <= max_logits * 2:
+                self._decode_fn(n)(self.params,
+                                   jnp.zeros((n, self.cfg.d_model), dt))
+                n *= 2
         return time.perf_counter() - t0
 
     def submit(self, prompt: np.ndarray, gen_len: int, arrival: float = 0.0,
@@ -294,32 +398,31 @@ class Engine:
         return self.stats
 
     # -- modeled-clock cost accounting -------------------------------------
-    def _charge(self, kind: str, padded_tokens: int, kv_len: int = 0,
+    def _charge(self, kind: str, exec_tokens: int, kv_len: int = 0,
                 actual_tokens: Optional[int] = None) -> None:
         if self.clock != "modeled":
             return
         cfg = self.cfg
-        # varlen packing (the paper's flattened engine) pays for real tokens
-        # only; static-shape engines pay the padded bucket. Refresh follows
-        # what actually executed: SSM/hybrid fall back to the padded oracle
-        # even under varlen_pack, so they pay the padded rectangle. Reuse and
-        # decode deliberately keep the flattened-engine model regardless —
-        # the paper's engine packs those stages too, and the modeled clock
-        # tracks the target design, not the CPU stand-in (see DeviceModel);
-        # ROADMAP lists packing their real execution as the next step.
-        varlen = self.serve.varlen_pack
-        if kind == "refresh":
-            varlen = varlen and self._use_packed
+        # A stage is billed for real tokens only when its packed path really
+        # executed (no more "pretend-packed" carve-outs): Refresh and Reuse
+        # follow the engine gate — SSM/hybrid fall back to the padded oracle
+        # even under varlen_pack, so they pay the padded rectangle — while
+        # the logit stage packs under varlen_pack for every family (the
+        # output head is family-agnostic, so the engine always buckets the
+        # hidden stream on tokens there).
+        if kind == "decode":
+            varlen = self.serve.varlen_pack
+        else:
+            varlen = self.serve.varlen_pack and self._use_packed
         tokens = (actual_tokens if varlen
-                  and actual_tokens is not None else padded_tokens)
-        padded_tokens = tokens
-        flops = 2.0 * self._n_params * padded_tokens
+                  and actual_tokens is not None else exec_tokens)
+        flops = 2.0 * self._n_params * tokens
         if cfg.has_attention and kv_len:
             dh = cfg.resolved_head_dim
-            flops += 4.0 * padded_tokens * kv_len * cfg.n_heads * dh \
+            flops += 4.0 * tokens * kv_len * cfg.n_heads * dh \
                 * cfg.n_layers
         if kind == "decode":
-            flops = 2.0 * cfg.d_model * cfg.vocab_size * padded_tokens
+            flops = 2.0 * cfg.d_model * cfg.vocab_size * tokens
         self.vtime += self.device.call_cost(flops)
 
     # ------------------------------------------------------------------
@@ -336,47 +439,77 @@ class Engine:
         hidden_rows: List[jax.Array] = []
         decoded: List[Request] = []
 
-        # ---- Refresh sub-batches (chunked to the per-iter cap) ----
+        # ---- whole-iteration packed layout (drives the packed pipeline) ----
         cap = max(1, self.serve.max_refresh_per_iter)
+        layout = plan.packed_layout(cap) if self._use_packed else None
+
+        # ---- Refresh sub-batches (chunked to the per-iter cap) ----
         iter_real = iter_exec = 0
-        for i in range(0, len(plan.refresh), cap):
-            chunk = plan.refresh[i: i + cap]
-            t_real = sum(r.total_len for r in chunk)
-            if self._use_packed:
-                bh, exec_tokens = self._run_refresh_packed(chunk)
+        if self._use_packed:
+            for seg in layout.refresh_chunks:
+                chunk = list(seg.requests)
+                t_real = seg.total_tokens
+                bh, exec_tokens = self._run_refresh_packed(seg)
                 # packed attention pays Σ Sᵢ²: effective kv length is the
                 # token-weighted mean sequence length, not max_seq_len
                 kv_len = sum(r.total_len ** 2 for r in chunk) // max(t_real, 1)
-            else:
+                hidden_rows.append(bh)
+                decoded.extend(chunk)
+                self.stats.refresh_steps += len(chunk)
+                iter_real += t_real
+                iter_exec += exec_tokens
+                self._charge("refresh", exec_tokens, kv_len=kv_len,
+                             actual_tokens=t_real)
+        else:
+            for i in range(0, len(plan.refresh), cap):
+                chunk = plan.refresh[i: i + cap]
+                t_real = sum(r.total_len for r in chunk)
                 bh, exec_tokens = self._run_refresh(chunk)
-                kv_len = self.serve.max_seq_len
-            hidden_rows.append(bh)
-            decoded.extend(chunk)
-            self.stats.refresh_steps += len(chunk)
-            iter_real += t_real
-            iter_exec += exec_tokens
-            self._charge("refresh", exec_tokens, kv_len=kv_len,
-                         actual_tokens=t_real)
+                hidden_rows.append(bh)
+                decoded.extend(chunk)
+                self.stats.refresh_steps += len(chunk)
+                iter_real += t_real
+                iter_exec += exec_tokens
+                self._charge("refresh", exec_tokens,
+                             kv_len=self.serve.max_seq_len,
+                             actual_tokens=t_real)
 
-        # ---- Reuse sub-batch ----
+        # ---- Reuse: one ragged block stream (packed) / pow2 batch (oracle) --
+        r_real = r_exec = 0
         if plan.reuse:
-            bh = self._run_reuse(plan.reuse)
+            r_real = len(plan.reuse) * self.serve.block_size
+            if self._use_packed:
+                bh, r_exec = self._run_reuse_packed(layout.reuse)
+            else:
+                bh, r_exec = self._run_reuse(plan.reuse)
             hidden_rows.append(bh)
             decoded.extend(plan.reuse)
             self.stats.reuse_steps += len(plan.reuse)
-            self._charge("reuse", _bucket(len(plan.reuse)) * self.serve.block_size,
+            self._charge("reuse", r_exec,
                          kv_len=self.ctx.retain + self.serve.block_size,
-                         actual_tokens=len(plan.reuse) * self.serve.block_size)
+                         actual_tokens=r_real)
 
         # ---- budgeted logit stage (C1) over every active block ----
+        n_real = n_exec = 0
         if decoded:
             h = jnp.concatenate([r.reshape(-1, self.cfg.d_model)
                                  for r in hidden_rows], axis=0)
-            N = h.shape[0]
-            b = _bucket(N, lo=self.serve.block_size)
-            if b != N:
-                h = jnp.pad(h, ((0, b - N), (0, 0)))
-            ids, conf = self._decode_fn(b)(self.params, h)
+            N = n_real = h.shape[0]
+            if self.serve.varlen_pack:
+                # packed: token-bucket rounding + validity mask threaded into
+                # the decode kernel — no pow2 row bucket
+                b = self._logit_bucket(N)
+                if b != N:
+                    h = jnp.pad(h, ((0, b - N), (0, 0)))
+                valid = np.zeros((b,), bool)
+                valid[:N] = True
+                ids, conf = self._decode_packed_fn(b)(self.params, h,
+                                                      jnp.asarray(valid))
+            else:
+                b = _bucket(N, lo=self.serve.block_size)
+                if b != N:
+                    h = jnp.pad(h, ((0, b - N), (0, 0)))
+                ids, conf = self._decode_fn(b)(self.params, h)
             # one blocking transfer instead of two per-array host syncs
             ids, conf = jax.device_get((ids, conf))
             ids = ids[:N]
@@ -385,6 +518,7 @@ class Engine:
             # big call (launch amortized, memory unbounded)
             if self.serve.logit_mode == "monolithic":
                 self._charge("decode", b, actual_tokens=N)
+                n_exec = b
             else:
                 sub = self.serve.max_num_logits
                 for off in range(0, b, sub):
@@ -393,6 +527,9 @@ class Engine:
                         break   # a packed engine never launches all-pad chunks
                     self._charge("decode", min(sub, b - off),
                                  actual_tokens=act)
+                    n_exec += min(sub, b - off)
+            self.stats.logit_tokens_real += n_real
+            self.stats.logit_tokens_exec += n_exec
             self._commit(decoded, ids, conf,
                          self.vtime if self.clock == "modeled" else now)
 
@@ -400,7 +537,9 @@ class Engine:
             t=now, q_tokens=plan.query_tokens,
             n_refresh=len(plan.refresh), n_reuse=len(plan.reuse),
             n_logits=len(decoded) * self.serve.block_size,
-            refresh_tokens_real=iter_real, refresh_tokens_exec=iter_exec))
+            refresh_tokens_real=iter_real, refresh_tokens_exec=iter_exec,
+            reuse_tokens_real=r_real, reuse_tokens_exec=r_exec,
+            logit_tokens_real=n_real, logit_tokens_exec=n_exec))
         return True
 
     # ------------------------------------------------------------------
@@ -426,14 +565,18 @@ class Engine:
         self.stats.refresh_tokens_exec += b * S
         return out.block_hidden[:n], b * S
 
-    def _run_refresh_packed(self, chunk: List[Request]) -> Tuple[jax.Array, int]:
-        """Token-packed Refresh (§4.1): flatten the chunk into one ragged
-        stream bucketed on total tokens — real compute pays for real tokens,
-        never a ``[B, max_seq_len]`` padded call. Returns (block hidden,
+    def _run_refresh_packed(self, seg_layout) -> Tuple[jax.Array, int]:
+        """Token-packed Refresh (§4.1): one ragged stream bucketed on total
+        tokens — real compute pays for real tokens, never a
+        ``[B, max_seq_len]`` padded call. The stream offsets come straight
+        from the scheduler's :class:`StageSegments` (the plan-level
+        cu_seqlens contract drives execution). Returns (block hidden,
         executed tokens = the token bucket)."""
+        chunk = seg_layout.requests
+        cu_real = seg_layout.cu_seqlens
         n = len(chunk)
         rp = _bucket(n)
-        t_real = sum(r.total_len for r in chunk)
+        t_real = seg_layout.total_tokens
         tp = self._token_bucket(t_real)
         tokens = np.zeros((tp,), np.int32)
         pos = np.zeros((tp,), np.int32)
@@ -444,9 +587,10 @@ class Engine:
         cu = np.full((rp,), max(0, tp - 1), np.int32)
         lens = np.zeros((rp,), np.int32)
         bstart = np.zeros((rp,), np.int32)
-        off = 0
         for j, r in enumerate(chunk):
+            off = int(cu_real[j])
             ln = r.total_len
+            assert ln == int(cu_real[j + 1]) - off, "layout/request mismatch"
             tokens[off: off + ln] = r.tokens[:ln]
             pos[off: off + ln] = np.arange(ln, dtype=np.int32)
             seg[off: off + ln] = j
@@ -454,7 +598,6 @@ class Engine:
             cu[j] = off
             lens[j] = ln
             bstart[j] = r.block_start
-            off += ln
         out = self._refresh_packed_fn(tp, rp)(
             self.params, jnp.asarray(tokens), jnp.asarray(pos),
             jnp.asarray(seg), jnp.asarray(valid), jnp.asarray(cu),
@@ -467,7 +610,9 @@ class Engine:
         self.stats.refresh_tokens_exec += tp
         return out.block_hidden[:n], tp
 
-    def _run_reuse(self, reqs: List[Request]) -> jax.Array:
+    def _run_reuse(self, reqs: List[Request]) -> Tuple[jax.Array, int]:
+        """Padded-oracle Reuse: pow2 request bucket, scratch-slot pad rows.
+        Returns (block hidden [n, Sb, D], executed tokens = bucket·Sb)."""
         n = len(reqs)
         b = _bucket(n)
         Sb = self.serve.block_size
@@ -481,7 +626,38 @@ class Engine:
         cache = self.pool.gather(slots)
         h = self._reuse_fn(b)(self.params, jnp.asarray(btok),
                               jnp.asarray(bpos), cache)
-        return h[:n]
+        self.stats.padded_reuse_calls += 1
+        self.stats.reuse_tokens_real += n * Sb
+        self.stats.reuse_tokens_exec += b * Sb
+        return h[:n], b * Sb
+
+    def _run_reuse_packed(self, seg_layout) -> Tuple[jax.Array, int]:
+        """Token-packed Reuse: the iteration's active blocks run as one
+        ragged ``[R·Sb]`` query stream against their gathered slot caches —
+        R is rounded only to the token-bucket granularity (scratch slots
+        back the padding segments), never a pow2 batch bucket. Returns
+        (block hidden [n, Sb, D], executed tokens = rp·Sb)."""
+        reqs = seg_layout.requests
+        n = len(reqs)
+        Sb = self.serve.block_size
+        rp = self._reuse_bucket(n)
+        tq = rp * Sb
+        btok = np.zeros((tq,), np.int32)
+        bpos = np.zeros((tq,), np.int32)
+        slots = [self.pool.scratch_slot] * rp
+        for j, r in enumerate(reqs):
+            off = int(seg_layout.cu_seqlens[j])
+            btok[off: off + Sb] = r.block_tokens()
+            bpos[off: off + Sb] = np.arange(r.block_start,
+                                            r.block_start + Sb)
+            slots[j] = r.slot
+        cache = self.pool.gather(slots)
+        h = self._reuse_packed_fn(rp)(self.params, jnp.asarray(btok),
+                                      jnp.asarray(bpos), cache)
+        self.stats.packed_reuse_calls += 1
+        self.stats.reuse_tokens_real += n * Sb
+        self.stats.reuse_tokens_exec += tq
+        return h.reshape(rp, Sb, -1)[:n], tq
 
     def _commit(self, reqs: List[Request], ids: np.ndarray, conf: np.ndarray,
                 now: float) -> None:

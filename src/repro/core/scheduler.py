@@ -10,12 +10,53 @@ separately by ``max_num_logits`` (C1).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.core.request import Phase, Request, State
+
+
+@dataclass(frozen=True)
+class StageSegments:
+    """One packed sub-stream of an iteration: requests in stream order plus
+    the exclusive prefix offsets of their token spans. ``cu_seqlens[j]`` is
+    where request j's tokens start in the stage's flat stream;
+    ``cu_seqlens[-1]`` is the stream's true (pre-bucketing) length."""
+    requests: Tuple[Request, ...]
+    cu_seqlens: np.ndarray          # [n + 1] int32
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.cu_seqlens[-1])
+
+    @property
+    def token_counts(self) -> List[int]:
+        return [int(d) for d in np.diff(self.cu_seqlens)]
+
+
+@dataclass(frozen=True)
+class PackedIterationLayout:
+    """Whole-iteration packed layout (§4.1 flattened engine, every stage).
+
+    The engine's single packed pipeline is driven entirely by this object:
+    Refresh runs one ragged stream per ``max_refresh_per_iter`` chunk, Reuse
+    runs the iteration's active blocks as one ragged ``[R·Sb]`` stream, and
+    the logit stage decodes the concatenated ``logit_tokens`` hidden rows at
+    token-bucket granularity. Per-stage ``cu_seqlens`` partition each stream
+    exactly (property-tested: contiguous, non-overlapping, gap-free)."""
+    refresh_chunks: Tuple[StageSegments, ...]
+    reuse: Optional[StageSegments]
+    logit_tokens: int               # real hidden rows entering the C1 stage
+
+    @property
+    def refresh_total_tokens(self) -> int:
+        return sum(c.total_tokens for c in self.refresh_chunks)
+
+    @property
+    def reuse_total_tokens(self) -> int:
+        return self.reuse.total_tokens if self.reuse else 0
 
 
 @dataclass
@@ -46,12 +87,37 @@ class IterationPlan:
 
     def refresh_cu_seqlens(self) -> np.ndarray:
         """[n_refresh + 1] int32 exclusive prefix offsets of the plan-level
-        packed stream. The engine re-derives per-chunk offsets after slicing
-        the Refresh set by ``max_refresh_per_iter``; this whole-plan view is
-        the scheduler's packed-layout contract — property-tested today,
-        intended for single-dispatch whole-plan execution later."""
+        packed Refresh stream. This is no longer a descriptive contract:
+        :meth:`packed_layout` slices it into per-chunk offsets and the
+        engine's packed pipeline executes exactly those offsets."""
         return np.concatenate(
             [[0], np.cumsum(self.refresh_token_counts)]).astype(np.int32)
+
+    def packed_layout(self, max_refresh_per_iter: int = 0
+                      ) -> PackedIterationLayout:
+        """Build the whole-iteration packed layout the engine executes.
+
+        Refresh is sliced into ``max_refresh_per_iter`` chunks (0 = one
+        chunk); each chunk's cu_seqlens are the plan-level offsets rebased to
+        the chunk, so the per-chunk streams tile the plan stream exactly.
+        Reuse is one stream of ``block_size`` segments. ``logit_tokens`` is
+        the real row count of the concatenated block-hidden stream."""
+        cap = max(1, max_refresh_per_iter) if max_refresh_per_iter \
+            else max(1, len(self.refresh))
+        cu = self.refresh_cu_seqlens()
+        chunks = []
+        for i in range(0, len(self.refresh), cap):
+            reqs = tuple(self.refresh[i: i + cap])
+            chunks.append(StageSegments(
+                reqs, (cu[i: i + len(reqs) + 1] - cu[i]).astype(np.int32)))
+        reuse = None
+        if self.reuse:
+            Sb = self.reuse[0].cfg.block_size
+            reuse = StageSegments(
+                tuple(self.reuse),
+                (np.arange(len(self.reuse) + 1) * Sb).astype(np.int32))
+        return PackedIterationLayout(tuple(chunks), reuse,
+                                     self.n_logit_tokens)
 
 
 class PhaseMultiplexedScheduler:

@@ -1,0 +1,62 @@
+"""Version shims for the pinned jax 0.4.37 vs the newer mesh-context APIs.
+
+The codebase targets the modern spelling (``jax.set_mesh`` /
+``jax.sharding.get_abstract_mesh`` / ``jax.shard_map``) but the container pins
+jax 0.4.37, where none of these exist. Each helper prefers the modern API and
+falls back to the 0.4.37 equivalent:
+
+  * mesh context — ``jax.set_mesh(mesh)`` vs the ``with mesh:`` resource
+    context (``thread_resources.env.physical_mesh``).
+  * active-mesh query — ``jax.sharding.get_abstract_mesh()`` vs reading the
+    thread-resource physical mesh. Both are normalized to *None when no mesh
+    is active* so call sites need a single emptiness check.
+  * shard_map — ``jax.shard_map(..., check_vma=)`` vs
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.
+
+Keep this module dependency-free (imported by kernels, models, and launch).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for the dynamic scope (modern ``jax.set_mesh``)."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        # 0.4.37: Mesh is itself a context manager that installs the
+        # thread-resource physical mesh (what get_active_mesh reads back).
+        with mesh:
+            yield mesh
+
+
+def get_active_mesh():
+    """The mesh of the enclosing ``use_mesh`` scope, or None.
+
+    Returns an ``AbstractMesh`` on modern jax and a concrete ``Mesh`` on
+    0.4.37 — both expose ``axis_names``/``shape``, which is all call sites
+    use. Never returns an *empty* mesh object.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        m = fn()
+        return None if m is None or m.empty else m
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the 0.4.37 ``check_rep`` spelling fallback."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -144,3 +144,133 @@ def flash_varlen_call(
         interpret=interpret,
     )(q, k, v, pos, pos, seg, seg, kv_valid, is_local)
     return out
+
+
+# ---------------------------------------------------------------------------
+# cross-attention variant: packed block queries vs. per-segment retained KV
+# (the Reuse phase of the whole-iteration packed pipeline)
+# ---------------------------------------------------------------------------
+
+def _cross_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref,
+                  kseg_ref, kvalid_ref, loc_ref, o_ref, m_ref, s_ref,
+                  *, scale: float, softcap: float, g: int, window: int,
+                  n_kv: int):
+    """Like :func:`_kernel` but the query and KV streams are distinct: the
+    queries are the iteration's packed active blocks (``[Tq]``, segment id =
+    reuse-request index) and the KV stream is the per-request ``[retain+Sb]``
+    slice of the slot pool (``[Tkv]``, same segment ids, per-KV-head
+    positions/validity because head-centric selection retains a different
+    token set per head). Both streams are segment-ascending, so the same
+    range-disjointness tile-skip applies: a KV tile owned by other requests
+    never reaches the MXU ("tile-skip over non-owned slots")."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    qs = qseg_ref[...]             # [q_tile]
+    ks = kseg_ref[...]             # [Tk]
+    overlap = (jnp.min(qs) <= jnp.max(ks)) & (jnp.min(ks) <= jnp.max(qs))
+
+    @pl.when(overlap)
+    def _compute():
+        q = q_ref[0]               # [R, dh]  (R = q_tile * G)
+        k = k_ref[0]               # [Tk, dh]
+        v = v_ref[0]
+        qp = qpos_ref[...]         # [q_tile]
+        kp = kpos_ref[0]           # [Tk]   (per KV head)
+        kv = kvalid_ref[0]         # [Tk]   (per KV head)
+
+        z = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            z = softcap * jnp.tanh(z / softcap)
+        ok = kv[None, :] & (qs[:, None] == ks[None, :])
+        if window:
+            loc = loc_ref[0]
+            ok = ok & ((jnp.abs(qp[:, None] - kp[None, :]) <= window) | ~loc)
+        R, Tk = z.shape
+        zm = jnp.where(ok[:, None, :], z.reshape(R // g, g, Tk), -1e30)
+        z = zm.reshape(R, Tk)
+
+        m_old = m_ref[0]
+        m_new = jnp.maximum(m_old, jnp.max(z, axis=1))
+        alpha = jnp.exp(m_old - m_new)
+        p = jnp.exp(z - m_new[:, None])
+        s_ref[0] = s_ref[0] * alpha + jnp.sum(p, axis=1)
+        o_ref[0] = (o_ref[0] * alpha[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+        m_ref[0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _final():
+        o_ref[0] = o_ref[0] / jnp.maximum(s_ref[0], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "softcap", "window", "q_tile", "kv_tile", "interpret"))
+def flash_varlen_cross_call(
+    q: jax.Array,          # [K, Tq*G, dh] row-flat GQA layout (token-major)
+    k: jax.Array,          # [K, Tkv, dh]
+    v: jax.Array,          # [K, Tkv, dh]
+    q_pos: jax.Array,      # [Tq] int32 absolute position of each query token
+    kv_pos: jax.Array,     # [K, Tkv] int32 per-head original token positions
+    q_seg: jax.Array,      # [Tq] int32 ascending reuse-request id (PAD_SEG pad)
+    kv_seg: jax.Array,     # [Tkv] int32 ascending owner id (head-independent)
+    kv_valid: jax.Array,   # [K, Tkv] bool (False on unselected cache slots)
+    is_local: jax.Array,   # [1] bool
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    q_tile: int = 128,
+    kv_tile: int = 512,
+    interpret: bool = True,
+):
+    """Ragged cross-attention dispatch (bidirectional — the dLLM Reuse mask).
+
+    Unlike :func:`flash_varlen_call` the query/KV streams differ in length
+    and layout: Tq = Σ block tokens, Tkv = R·(retain + Sb) pool slices. KV
+    positions and validity carry a leading KV-head axis because head-centric
+    selection (C3) retains an independent token set per head.
+    """
+    K, RG, dh = q.shape
+    Tq = q_pos.shape[0]
+    Tkv = k.shape[1]
+    g = RG // Tq
+    q_tile = min(q_tile, Tq)
+    kv_tile = min(kv_tile, Tkv)
+    assert Tq % q_tile == 0 and Tkv % kv_tile == 0, (Tq, q_tile, Tkv, kv_tile)
+    n_q, n_kv = Tq // q_tile, Tkv // kv_tile
+    kern = functools.partial(
+        _cross_kernel, scale=dh ** -0.5, softcap=softcap, g=g, window=window,
+        n_kv=n_kv)
+    out, m, s = pl.pallas_call(
+        kern,
+        grid=(K, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_tile * g, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kv_tile, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, kv_tile, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((q_tile,), lambda h, i, j: (i,)),
+            pl.BlockSpec((1, kv_tile), lambda h, i, j: (h, j)),
+            pl.BlockSpec((q_tile,), lambda h, i, j: (i,)),
+            pl.BlockSpec((kv_tile,), lambda h, i, j: (j,)),
+            pl.BlockSpec((1, kv_tile), lambda h, i, j: (h, j)),
+            pl.BlockSpec((1,), lambda h, i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_tile * g, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, q_tile * g), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, q_tile * g), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, RG, dh), jnp.float32),
+            jax.ShapeDtypeStruct((K, RG), jnp.float32),
+            jax.ShapeDtypeStruct((K, RG), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos, q_seg, kv_seg, kv_valid, is_local)
+    return out

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(h_ref, w_ref, idx_ref, m_ref, s_ref, *, softcap: float,
+def _kernel(h_ref, w_ref, valid_ref, idx_ref, m_ref, s_ref, *, softcap: float,
             v_tile: int, n_v: int, w_layout: str):
     j = pl.program_id(1)
 
@@ -42,28 +42,34 @@ def _kernel(h_ref, w_ref, idx_ref, m_ref, s_ref, *, softcap: float,
         s_ref[...] = jnp.zeros_like(s_ref)
         idx_ref[...] = jnp.zeros_like(idx_ref)
 
-    h = h_ref[...]                     # [T_tile, D]
-    w = w_ref[...]                     # [D, V_tile] ("dv") | [V_tile, D] ("vd")
-    if w_layout == "vd":
-        # tied-embedding layout: contract over the last dim of both — the
-        # MXU takes either orientation; this avoids transposing the whole
-        # [V, D] table in HBM.
-        z = jax.lax.dot_general(h, w, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-    else:
-        z = jnp.dot(h, w, preferred_element_type=jnp.float32)  # [T_tile, V_tile]
-    if softcap:
-        z = softcap * jnp.tanh(z / softcap)
+    # whole-iteration packing: the hidden stream is token-bucketed, so a
+    # trailing T-tile can be all bucket padding — skip its entire V loop
+    # (the matmul never runs; outputs keep their init values and the wrapper
+    # masks them). Within a mixed tile padding rows just ride along.
+    @pl.when(jnp.any(valid_ref[...]))
+    def _compute():
+        h = h_ref[...]                 # [T_tile, D]
+        w = w_ref[...]                 # [D, V_tile] ("dv") | [V_tile, D] ("vd")
+        if w_layout == "vd":
+            # tied-embedding layout: contract over the last dim of both — the
+            # MXU takes either orientation; this avoids transposing the whole
+            # [V, D] table in HBM.
+            z = jax.lax.dot_general(h, w, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        else:
+            z = jnp.dot(h, w, preferred_element_type=jnp.float32)  # [T_tile, V_tile]
+        if softcap:
+            z = softcap * jnp.tanh(z / softcap)
 
-    local_m = jnp.max(z, axis=1)                           # [T_tile]
-    local_i = jnp.argmax(z, axis=1).astype(jnp.int32) + j * v_tile
+        local_m = jnp.max(z, axis=1)                           # [T_tile]
+        local_i = jnp.argmax(z, axis=1).astype(jnp.int32) + j * v_tile
 
-    m_old = m_ref[...]
-    m_new = jnp.maximum(m_old, local_m)
-    s_ref[...] = (s_ref[...] * jnp.exp(m_old - m_new)
-                  + jnp.sum(jnp.exp(z - m_new[:, None]), axis=1))
-    idx_ref[...] = jnp.where(local_m > m_old, local_i, idx_ref[...])
-    m_ref[...] = m_new
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, local_m)
+        s_ref[...] = (s_ref[...] * jnp.exp(m_old - m_new)
+                      + jnp.sum(jnp.exp(z - m_new[:, None]), axis=1))
+        idx_ref[...] = jnp.where(local_m > m_old, local_i, idx_ref[...])
+        m_ref[...] = m_new
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "t_tile", "v_tile",
@@ -71,6 +77,7 @@ def _kernel(h_ref, w_ref, idx_ref, m_ref, s_ref, *, softcap: float,
 def fused_logit_argmax_call(
     h: jax.Array,          # [T, D]
     w: jax.Array,          # [D, V] (w_layout="dv") or [V, D] ("vd", tied)
+    valid: jax.Array,      # [T] bool (False on bucket-padding rows)
     *,
     softcap: float = 0.0,
     t_tile: int = 256,
@@ -96,6 +103,7 @@ def fused_logit_argmax_call(
         in_specs=[
             pl.BlockSpec((t_tile, D), lambda i, j: (i, 0)),
             w_spec,
+            pl.BlockSpec((t_tile,), lambda i, j: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((t_tile,), lambda i, j: (i,)),
@@ -108,5 +116,5 @@ def fused_logit_argmax_call(
             jax.ShapeDtypeStruct((T,), jnp.float32),
         ],
         interpret=interpret,
-    )(h, w)
+    )(h, w, valid)
     return idx, m, s

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import packed_flash_attention_call
 from repro.kernels.logit_argmax import fused_logit_argmax_call
-from repro.kernels.select_pack import head_score_call
+from repro.kernels.select_pack import head_score_call, head_score_varlen_call
 
 
 def _interpret() -> bool:
@@ -31,13 +31,19 @@ def _pad_to(x, mult, axis):
 
 
 def fused_logit_argmax(h, w, *, softcap: float = 0.0, vocab_tile: int = 512,
-                       t_tile: int = 256, w_layout: str = "dv"):
+                       t_tile: int = 256, w_layout: str = "dv", valid=None):
     """h: [T, D]; w: [D, V] ("dv") or [V, D] ("vd", tied-embedding table).
-    Returns (ids [T] i32, conf [T] f32). Paper C1, fused."""
+    Returns (ids [T] i32, conf [T] f32). Paper C1, fused.
+
+    ``valid`` ([T] bool, optional) marks real rows of a token-bucketed packed
+    stream: the kernel skips the V loop of all-padding T-tiles entirely and
+    invalid rows decode to (0, 0.0)."""
     T = h.shape[0]
     V = w.shape[1] if w_layout == "dv" else w.shape[0]
     t_tile = min(t_tile, max(8, T))
     hp, _ = _pad_to(h, t_tile, 0)
+    vld = jnp.ones((T,), bool) if valid is None else valid
+    vp, _ = _pad_to(vld, t_tile, 0)
     # vocab tile must divide V (all assigned vocabs are 8-divisible); zero
     # padding would fabricate logit-0 columns, so fall back to ref instead.
     vt = vocab_tile
@@ -45,12 +51,20 @@ def fused_logit_argmax(h, w, *, softcap: float = 0.0, vocab_tile: int = 512,
         vt //= 2
         if vt < 8:
             wd = w if w_layout == "dv" else w.T
-            return ref.fused_logit_argmax(h, wd, softcap=softcap)
+            ids, conf = ref.fused_logit_argmax(h, wd, softcap=softcap)
+            if valid is not None:
+                ids = jnp.where(valid, ids, 0)
+                conf = jnp.where(valid, conf, 0.0)
+            return ids, conf
     ids, m, s = fused_logit_argmax_call(
-        hp, w, softcap=softcap, t_tile=t_tile, v_tile=vt,
+        hp, w, vp, softcap=softcap, t_tile=t_tile, v_tile=vt,
         interpret=_interpret(), w_layout=w_layout)
     conf = 1.0 / jnp.maximum(s, 1e-30)
-    return ids[:T], conf[:T]
+    ids, conf = ids[:T], conf[:T]
+    if valid is not None:
+        ids = jnp.where(valid, ids, 0)
+        conf = jnp.where(valid, conf, 0.0)
+    return ids, conf
 
 
 def packed_flash_attention_stats(qr, k_all, v_all, ok, *, softcap: float = 0.0,
@@ -140,8 +154,9 @@ def flash_refresh_attention(q, k, v, *, q_pos, kv_pos, kv_valid, mask_mode,
                .reshape(Bl, H_loc, Sq, dh))
         return out.astype(q_l.dtype)
 
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    from repro.jax_compat import get_active_mesh, shard_map as _shard_map
+    mesh = get_active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         out = local_call(qh, kh, vh, q_pos, kv_pos, kv_valid, loc)
     else:
         from jax.sharding import PartitionSpec as P
@@ -165,7 +180,7 @@ def flash_refresh_attention(q, k, v, *, q_pos, kv_pos, kv_valid, mask_mode,
             fn = local_call
             q_spec = out_spec = P(dp, None, None, None)
             qp_spec = P(dp, None)
-        out = jax.shard_map(
+        out = _shard_map(
             fn, mesh=mesh,
             in_specs=(q_spec, P(dp, None, None, None),
                       P(dp, None, None, None), qp_spec, P(dp, None),
@@ -213,6 +228,43 @@ def flash_varlen_attention(q, k, v, *, seg_ids, positions, kv_valid,
     return out.astype(q.dtype)
 
 
+def flash_varlen_cross_attention(q, k, v, *, q_seg, q_pos, kv_seg, kv_pos,
+                                 kv_valid, window: int = 0, is_local=False,
+                                 softcap: float = 0.0, q_tile: int = 128,
+                                 kv_tile: int = 512):
+    """Packed-Reuse cross attention (model contract).
+
+    q: [Tq, H, dh] flat packed block queries; k/v: [K, Tkv, dh] head-major
+    flat KV stream ([retain ; live block] per request, requests contiguous);
+    q_seg/q_pos: [Tq] int32; kv_seg: [Tkv] int32; kv_pos/kv_valid: [K, Tkv]
+    (head-centric selection retains different tokens per KV head). Returns
+    [Tq, H, dh]. One flat dispatch replaces the pow2-bucketed [B, Sb] Reuse
+    batch; non-owned KV tiles are skipped in-kernel.
+    """
+    from repro.kernels.flash_varlen import flash_varlen_cross_call
+
+    Tq, H, dh = q.shape
+    K, Tkv = k.shape[0], k.shape[1]
+    G = H // K
+    qr = (q.reshape(Tq, K, G, dh).transpose(1, 0, 2, 3)
+          .reshape(K, Tq * G, dh))
+    qt = min(q_tile, Tq)
+    while Tq % qt:
+        qt //= 2
+    kt = min(kv_tile, Tkv)
+    while Tkv % kt:
+        kt //= 2
+    loc = jnp.asarray(is_local, bool).reshape(1)
+    out = flash_varlen_cross_call(
+        qr, k, v, q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32),
+        q_seg.astype(jnp.int32), kv_seg.astype(jnp.int32), kv_valid, loc,
+        softcap=softcap, window=window, q_tile=qt, kv_tile=kt,
+        interpret=_interpret())
+    out = (out.reshape(K, Tq, G, dh).transpose(1, 0, 2, 3)
+           .reshape(Tq, H, dh))
+    return out.astype(q.dtype)
+
+
 def head_score(q_block, k_full, *, s_tile: int = 512):
     """q_block: [B, Sb, H, dh]; k_full: [B, S, K, dh] -> [B, K, S] f32 raw
     (pre-maxpool) importance scores — kernel side of paper C3 eq.(6)."""
@@ -226,3 +278,20 @@ def head_score(q_block, k_full, *, s_tile: int = 512):
     while S % st:
         st //= 2
     return head_score_call(qr, kr, s_tile=st, interpret=_interpret())
+
+
+def head_score_varlen(q_block, k_flat, seg_ids, *, s_tile: int = 512):
+    """q_block: [R, Sb, H, dh]; k_flat: [T, K, dh] flat packed stream;
+    seg_ids: [T] int32 -> [R, K, T] f32 raw scores (-inf off-segment).
+    Tile-skipping varlen side of paper C3 eq.(6) — no padded K gather."""
+    R, Sb, H, dh = q_block.shape
+    T, K = k_flat.shape[0], k_flat.shape[1]
+    G = H // K
+    qr = (q_block.reshape(R, Sb, K, G, dh).transpose(0, 2, 1, 3, 4)
+          .reshape(R, K, Sb * G, dh))
+    kr = k_flat.transpose(1, 0, 2)
+    st = min(s_tile, T)
+    while T % st:
+        st //= 2
+    return head_score_varlen_call(qr, kr, seg_ids.astype(jnp.int32),
+                                  s_tile=st, interpret=_interpret())

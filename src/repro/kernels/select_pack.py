@@ -26,6 +26,29 @@ def _kernel(q_ref, k_ref, s_ref):
     s_ref[0, 0] = jnp.max(z, axis=1)
 
 
+def _varlen_kernel(q_ref, k_ref, seg_ref, s_ref):
+    """Varlen scoring over the flat token-packed stream (whole-iteration
+    packing): request r's block queries score ONLY the key tiles whose
+    segment-id range contains r — the select/pack analogue of the attention
+    kernel's tile-skip. Non-owned positions score ``-inf`` (the same sentinel
+    the padded path uses for invalid rows), so the downstream max-pool can
+    never leak a neighbour request's relevance across a boundary."""
+    r = pl.program_id(0)
+    ks = seg_ref[...]                 # [S_tile]
+    overlap = (jnp.min(ks) <= r) & (r <= jnp.max(ks))
+
+    @pl.when(overlap)
+    def _compute():
+        q = q_ref[0, 0]               # [R, dh]
+        k = k_ref[0]                  # [S_tile, dh]
+        z = jnp.dot(k, q.T, preferred_element_type=jnp.float32)
+        s_ref[0, 0] = jnp.where(ks == r, jnp.max(z, axis=1), -jnp.inf)
+
+    @pl.when(~overlap)
+    def _skip():
+        s_ref[0, 0] = jnp.full_like(s_ref[0, 0], -jnp.inf)
+
+
 @functools.partial(jax.jit, static_argnames=("s_tile", "interpret"))
 def head_score_call(
     q: jax.Array,     # [B, K, R, dh]  block queries, groups flattened
@@ -49,4 +72,36 @@ def head_score_call(
         out_shape=jax.ShapeDtypeStruct((B, K, S), jnp.float32),
         interpret=interpret,
     )(q, k)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("s_tile", "interpret"))
+def head_score_varlen_call(
+    q: jax.Array,     # [R, K, Rq, dh]  block queries per request, groups flat
+    k: jax.Array,     # [K, T, dh]      flat packed-stream keys, head-major
+    seg: jax.Array,   # [T] int32       ascending owner id (PAD_SEG on pad)
+    *,
+    s_tile: int = 512,
+    interpret: bool = True,
+):
+    """Raw per-KV-head scores of every request against the FLAT stream:
+    ``out[r, k, t] = max_q(Q_{r,q,k} · K_t)`` where ``seg[t] == r``, else
+    ``-inf``. Replaces the padded per-request ``[R, max_seq_len]`` K gather
+    of the packed Refresh path — selection reads the stream in place."""
+    R, K, Rq, dh = q.shape
+    T = k.shape[1]
+    s_tile = min(s_tile, T)
+    assert T % s_tile == 0, (T, s_tile)
+    out = pl.pallas_call(
+        _varlen_kernel,
+        grid=(R, K, T // s_tile),
+        in_specs=[
+            pl.BlockSpec((1, 1, Rq, dh), lambda r, h, j: (r, h, 0, 0)),
+            pl.BlockSpec((1, s_tile, dh), lambda r, h, j: (h, j, 0)),
+            pl.BlockSpec((s_tile,), lambda r, h, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s_tile), lambda r, h, j: (r, h, j)),
+        out_shape=jax.ShapeDtypeStruct((R, K, T), jnp.float32),
+        interpret=interpret,
+    )(q, k, seg)
     return out

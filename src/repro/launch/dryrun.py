@@ -266,7 +266,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         fn, args = build_decode(cfg, shape, mesh, selection, retention,
                                 logit_mode)
 
-    with jax.set_mesh(mesh):
+    from repro.jax_compat import use_mesh
+    with use_mesh(mesh):
         lowered = jax.jit(fn).lower(*args)
         compiled = lowered.compile()
     # per-device bf16 argument bytes: XLA:CPU upcasts every bf16 weight/cache

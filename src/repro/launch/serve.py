@@ -77,8 +77,16 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         refresh_tokens_real=stats.refresh_tokens_real,
         refresh_tokens_exec=stats.refresh_tokens_exec,
         refresh_waste=stats.refresh_waste,
+        reuse_tokens_real=stats.reuse_tokens_real,
+        reuse_tokens_exec=stats.reuse_tokens_exec,
+        reuse_waste=stats.reuse_waste,
+        logit_tokens_real=stats.logit_tokens_real,
+        logit_tokens_exec=stats.logit_tokens_exec,
+        logit_waste=stats.logit_waste,
         packed_refresh_calls=stats.packed_refresh_calls,
         padded_refresh_calls=stats.padded_refresh_calls,
+        packed_reuse_calls=stats.packed_reuse_calls,
+        padded_reuse_calls=stats.padded_reuse_calls,
         warmup_s=warmup_s,
         max_slots=serve.max_slots,
     )

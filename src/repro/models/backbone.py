@@ -205,6 +205,35 @@ def serve_refresh_packed(
 # serving: Reuse
 # ---------------------------------------------------------------------------
 
+def serve_reuse_packed(
+    params: dict,
+    cfg: ModelConfig,
+    flat_tokens: jax.Array,      # [Tq] int32 packed active-block stream
+    flat_positions: jax.Array,   # [Tq] int32 absolute positions
+    cache,                       # PackedKV, leading [L], batch = Tq // Sb
+    serve: T.ServeContext,
+) -> jax.Array:
+    """Token-packed Reuse (whole-iteration packing): the iteration's R active
+    blocks run as ONE ragged ``[R·Sb]`` query stream against their gathered
+    slot caches (``Tq = R·Sb`` rounded to the token bucket by the engine —
+    never a pow2 batch bucket). Emits the flat ``[Tq, D]`` final-normed
+    hidden stream the packed logit stage consumes directly; the padded
+    :func:`serve_reuse` is kept as the correctness oracle, same policy as
+    Refresh."""
+    if cfg.family not in ATTN_FAMILIES or cfg.frontend_dim:
+        raise NotImplementedError(
+            f"packed reuse supports text attention families, not "
+            f"{cfg.name} ({cfg.family})")
+    Sb = serve.block_size
+    Tq = flat_tokens.shape[0]
+    R = Tq // Sb
+    xb = LM.embed_tokens(params["embed"], flat_tokens.reshape(R, Sb))
+    h = T.forward_block_packed(params["stack"], cfg, xb,
+                               flat_positions.reshape(R, Sb), cache,
+                               serve=serve)
+    return _final(params, cfg, h).reshape(Tq, -1)
+
+
 def serve_reuse(
     params: dict,
     cfg: ModelConfig,

@@ -108,6 +108,60 @@ def decode_tokens(
     return ids.reshape(-1)[:N], conf.reshape(-1)[:N]
 
 
+def decode_tokens_packed(
+    params: dict,
+    cfg: ModelConfig,
+    h: jax.Array,              # [N_exec, D] token-bucketed hidden stream
+    valid: jax.Array,          # [N_exec] bool (False on bucket padding)
+    *,
+    max_num_logits: int,
+    mode: str = "chunked",     # monolithic | chunked | fused
+    vocab_tile: int = 1024,
+) -> Tuple[jax.Array, jax.Array]:
+    """ArgMax decode over the whole-iteration packed hidden stream.
+
+    The engine hands the real ``N`` block-hidden rows rounded up to the
+    ``token_bucket`` granularity (never a pow2 bucket) plus a validity mask.
+    C1 chunking applies unchanged, but all-padding chunks short-circuit: the
+    fused kernel skips their vocab loop in-kernel and the chunked-jnp path
+    branches around the matmul — a packed engine never pays for logits of
+    tokens that do not exist. Invalid rows return (id 0, conf 0.0).
+    Returns ([N_exec], [N_exec])."""
+    N = h.shape[0]
+    if mode == "monolithic":
+        ids, conf = _decode_chunk_jnp(params, cfg, h)
+        return jnp.where(valid, ids, 0), jnp.where(valid, conf, 0.0)
+
+    chunk = min(max_num_logits, N)
+    pad = (-N) % chunk
+    hc = jnp.pad(h, ((0, pad), (0, 0))).reshape(-1, chunk, h.shape[1])
+    vc = jnp.pad(valid, (0, pad)).reshape(-1, chunk)
+
+    if mode == "fused":
+        from repro.kernels import ops as kops
+        if cfg.tie_embeddings:
+            w, layout = params["table"], "vd"      # [V, D], no transpose
+        else:
+            w, layout = params["lm_head"], "dv"    # [D, V]
+
+        def fn(args):
+            hb, vb = args
+            return kops.fused_logit_argmax(
+                hb, w, softcap=cfg.final_softcap, vocab_tile=vocab_tile,
+                w_layout=layout, valid=vb)
+    else:
+        def fn(args):
+            hb, vb = args
+            live = lambda _: _decode_chunk_jnp(params, cfg, hb)
+            dead = lambda _: (jnp.zeros((hb.shape[0],), jnp.int32),
+                              jnp.zeros((hb.shape[0],), jnp.float32))
+            ids, conf = jax.lax.cond(vb.any(), live, dead, None)
+            return jnp.where(vb, ids, 0), jnp.where(vb, conf, 0.0)
+
+    ids, conf = jax.lax.map(fn, (hc, vc))
+    return ids.reshape(-1)[:N], conf.reshape(-1)[:N]
+
+
 def diffusion_loss(
     params: dict,
     cfg: ModelConfig,

@@ -104,7 +104,9 @@ def _moe_gather(p, x2d, cfg: ModelConfig):
 def _moe_ep(p, x2d, cfg: ModelConfig):
     """Expert-parallel MoE. Requires an active mesh with a 'model' axis;
     token activations replicated over 'model', expert weights sharded on E."""
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.jax_compat import get_active_mesh
+    mesh = get_active_mesh()
+    assert mesh is not None, "moe_impl='ep' needs an active mesh (use_mesh)"
     m = mesh.shape["model"]
     E = cfg.n_experts
     assert E % m == 0, (E, m)
@@ -148,7 +150,8 @@ def _moe_ep(p, x2d, cfg: ModelConfig):
         return out.astype(x_loc.dtype), aux
 
     tok_spec = P(data_axes if data_axes else None, None)
-    out, aux = jax.shard_map(
+    from repro.jax_compat import shard_map as _shard_map
+    out, aux = _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(None, None), P("model", None, None),

@@ -66,17 +66,75 @@ def head_scores(
         raw = tile(k_full)  # [B, K, S]
     if valid is not None:
         raw = jnp.where(valid[:, None, :], raw, -jnp.inf)
-    # local max-pooling with window w (captures neighbourhood relevance)
+    return _local_maxpool(raw, kernel_size)
+
+
+def _local_maxpool(raw: jax.Array, kernel_size: int) -> jax.Array:
+    """Local max-pooling with window w along the last axis (captures
+    neighbourhood relevance, eq.6). Edges pad with -inf — the same sentinel
+    masking uses, so invalid/foreign neighbours can never leak in."""
     w = kernel_size
     if w > 1:
         pads = [raw]
         for off in range(1, w // 2 + 1):
-            pads.append(jnp.pad(raw[..., off:], ((0, 0), (0, 0), (0, off)),
-                                constant_values=-jnp.inf))
-            pads.append(jnp.pad(raw[..., :-off], ((0, 0), (0, 0), (off, 0)),
-                                constant_values=-jnp.inf))
+            pads.append(jnp.pad(raw[..., off:], [(0, 0)] * (raw.ndim - 1)
+                                + [(0, off)], constant_values=-jnp.inf))
+            pads.append(jnp.pad(raw[..., :-off], [(0, 0)] * (raw.ndim - 1)
+                                + [(off, 0)], constant_values=-jnp.inf))
         raw = jnp.stack(pads).max(axis=0)
     return raw
+
+
+def head_scores_varlen(
+    q_block: jax.Array,   # [R, Sb, H, dh] active-block queries per request
+    k_flat: jax.Array,    # [T, K, dh]  flat packed-stream keys (post-RoPE)
+    seg_ids: jax.Array,   # [T] int32 ascending owner id (PAD_SEG on pad)
+    kernel_size: int,
+    s_chunk: int = 4096,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Per-KV-head importance scores against the flat token-packed stream.
+
+    Returns [R, K, T] float32: request r's eq.(6) scores at its own stream
+    positions, ``-inf`` everywhere else (foreign requests and bucket
+    padding). Masking happens BEFORE the max-pool, so a request's retained
+    set cannot depend on what it is packed with — the varlen equivalent of
+    the ``valid`` pre-masking in :func:`head_scores`. The Pallas kernel path
+    tile-skips non-owned key tiles; the jnp fallback chunks the stream axis
+    so the [R, K, G, Sb, c] alignment tensor never materializes at full T.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        raw = kops.head_score_varlen(q_block, k_flat, seg_ids)
+    else:
+        R, Sb, H, dh = q_block.shape
+        T, K = k_flat.shape[0], k_flat.shape[1]
+        G = H // K
+        qg = q_block.reshape(R, Sb, K, G, dh)
+        rid = jnp.arange(R, dtype=jnp.int32)
+
+        def tile(args):  # kc: [c, K, dh], sc: [c] -> [R, K, c]
+            kc, sc = args
+            r = jnp.einsum("rqkgd,skd->rkgqs", qg, kc).astype(jnp.float32)
+            r = r.max(axis=(2, 3))
+            own = sc[None, :] == rid[:, None]              # [R, c]
+            return jnp.where(own[:, None, :], r, -jnp.inf)
+
+        if T > s_chunk:
+            # pad the stream to whole chunks with a -1 segment sentinel (it
+            # matches no request id, so pad scores are -inf) — the [R, K, G,
+            # Sb, c] alignment tensor never materializes at full T
+            pad = (-T) % s_chunk
+            kp = jnp.pad(k_flat, ((0, pad), (0, 0), (0, 0)))
+            sp = jnp.pad(seg_ids, (0, pad), constant_values=-1)
+            Tp = T + pad
+            kc = kp.reshape(Tp // s_chunk, s_chunk, K, dh)
+            sc = sp.reshape(Tp // s_chunk, s_chunk)
+            raw = jax.lax.map(tile, (kc, sc))              # [n, R, K, c]
+            raw = raw.transpose(1, 2, 0, 3).reshape(R, K, Tp)[:, :, :T]
+        else:
+            raw = tile((k_flat, seg_ids))
+    return _local_maxpool(raw, kernel_size)
 
 
 def select_indices(
@@ -148,3 +206,55 @@ def select_and_pack(
         jnp.broadcast_to(exclude[:, None, :], idx.shape[:2] + exclude.shape[1:]),
         idx, axis=2)
     return PackedKV(packed.k, packed.v, packed.pos, packed.valid & ~excl)
+
+
+def select_and_pack_varlen(
+    q_block: jax.Array,      # [R, Sb, H, dh] active-block queries per request
+    k_flat: jax.Array,       # [T, K, dh] flat packed-stream keys
+    v_flat: jax.Array,       # [T, K, dh]
+    seg_ids: jax.Array,      # [T] int32 ascending owner id
+    cu_seqlens: jax.Array,   # [R] int32 flat start offset per request
+    gather_rows: jax.Array,  # [R, S_sel] flat row of request r's token s
+    valid_sel: jax.Array,    # [R, S_sel] bool (s < seq_len)
+    *,
+    retain: int,
+    kernel_size: int,
+    mode: str,
+    exclude: jax.Array,      # [R, S_sel] bool (active block / invalid)
+    use_kernel: bool = False,
+) -> PackedKV:
+    """C3 select/pack reading the flat token-packed stream in place.
+
+    Scoring and pooling run on the stream itself (kernel tile-skip or
+    chunked jnp); only the per-request *score windows* ([R, S_sel] f32 —
+    K·4 bytes/token) are gathered for the top-k, and the final pack gathers
+    exactly the ``retain`` winners from the flat K/V. The padded path's
+    ``[R, max_seq_len, K, dh]`` K AND V gathers never happen — the last
+    rectangular intermediate on the packed Refresh path. Selection semantics
+    (scores, pooling edges, exclusion, tie order) match :func:`select_and_pack`
+    per request, so both paths retain the same tokens."""
+    R, S_sel = gather_rows.shape
+    T, K = k_flat.shape[0], k_flat.shape[1]
+    if mode == "none":
+        # dense retention: position-ordered packing, no scoring (same math
+        # as the padded branch — scores never touch K)
+        scores = jnp.zeros((R, K, S_sel), jnp.float32)
+        scores = scores - jnp.arange(S_sel, dtype=jnp.float32)[None, None, :] * 1e-6
+        idx = select_indices(scores, retain, mode="uniform", exclude=exclude)
+    else:
+        raw = head_scores_varlen(q_block, k_flat, seg_ids, kernel_size,
+                                 use_kernel=use_kernel)      # [R, K, T]
+        rows = jnp.broadcast_to(gather_rows[:, None, :], (R, K, S_sel))
+        scores = jnp.take_along_axis(raw, rows, axis=2)      # [R, K, S_sel]
+        idx = select_indices(scores, retain, mode=mode, exclude=exclude)
+    flat_rows = jnp.clip(cu_seqlens[:, None, None] + idx, 0, T - 1)
+    kh = k_flat.transpose(1, 0, 2)                           # [K, T, dh]
+    vh = v_flat.transpose(1, 0, 2)
+    harange = jnp.arange(K, dtype=jnp.int32)[None, :, None]
+    pk = kh[harange, flat_rows]                              # [R, K, retain, dh]
+    pv = vh[harange, flat_rows]
+    val = jnp.take_along_axis(
+        jnp.broadcast_to(valid_sel[:, None, :], (R, K, S_sel)), idx, axis=2)
+    excl = jnp.take_along_axis(
+        jnp.broadcast_to(exclude[:, None, :], (R, K, S_sel)), idx, axis=2)
+    return PackedKV(pk, pv, idx, val & ~excl)

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import moe as moe_lib
-from repro.models.sparse_select import PackedKV, select_and_pack
+from repro.models.sparse_select import (PackedKV, select_and_pack,
+                                        select_and_pack_varlen)
 
 
 @dataclass(frozen=True)
@@ -257,6 +258,7 @@ def _layer_full_packed(
     cos, sin,
     is_local: jax.Array,
     serve: ServeContext,
+    cu_seqlens: jax.Array,     # [R] int32 flat start offset per request
     gather_rows: jax.Array,    # [R, S_sel] flat row of request r's token s
     valid_sel: jax.Array,      # [R, S_sel]
     block_rows: jax.Array,     # [R, Sb] flat rows of each active block
@@ -279,17 +281,16 @@ def _layer_full_packed(
     y, aux = _mlp(p, h2, cfg)
     x = L.constrain(x + y, "act3d")
 
-    # head-centric select/pack still operates per request: gather ragged
-    # per-request K/V views out of the flat stream (memory traffic only — the
-    # O(T·D²) projections and O(ΣSᵢ²) attention above ran packed), then emit
-    # the same per-slot dense cache layout the padded path produces.
+    # head-centric select/pack reads the flat stream in place: scoring is
+    # segment-masked on the stream (kernel tile-skip / chunked jnp) and only
+    # the `retain` winners are gathered into the per-slot dense cache — the
+    # padded [R, max_seq_len, K, dh] K/V views are never materialized.
     qb = q[0][block_rows]          # [R, Sb, H, dh]
-    kr = k[0][gather_rows]         # [R, S_sel, K, dh]
-    vr = v[0][gather_rows]
-    packed = select_and_pack(
-        qb, kr, vr, retain=serve.retain, kernel_size=serve.kernel_size,
+    packed = select_and_pack_varlen(
+        qb, k[0], v[0], seg_ids[0], cu_seqlens, gather_rows, valid_sel,
+        retain=serve.retain, kernel_size=serve.kernel_size,
         mode=serve.selection, exclude=in_block | ~valid_sel,
-        token_valid=valid_sel)
+        use_kernel=bool(serve.use_flash_refresh or serve.use_flash_kernel))
     return x, packed, aux
 
 
@@ -332,7 +333,8 @@ def forward_full_packed(
         p, is_local = scanned
         out, packed, aux = _layer_full_packed(
             p, carry, cfg, positions, seg_ids, token_valid, cos, sin,
-            is_local, serve, gather_rows, valid_sel, block_rows, in_block)
+            is_local, serve, cu_seqlens, gather_rows, valid_sel, block_rows,
+            in_block)
         return out, (packed, aux)
 
     x, (packed, aux) = jax.lax.scan(body, x, (stack, flags))
@@ -369,6 +371,92 @@ def forward_block(
     xb, _ = jax.lax.scan(
         body, xb, (stack, flags, cache.k, cache.v, cache.pos, cache.valid))
     return xb
+
+
+def forward_block_packed(
+    stack: dict,
+    cfg: ModelConfig,
+    xb: jax.Array,                 # [R, Sb, D] embedded active blocks
+    block_positions: jax.Array,    # [R, Sb] int32 absolute positions
+    cache: PackedKV,               # leading [L] axis, batch axis = R
+    *,
+    serve: ServeContext,
+) -> jax.Array:
+    """Token-packed Reuse over the layer stack (whole-iteration packing).
+
+    The iteration's R active blocks form one ragged ``[R·Sb]`` query stream
+    (R is rounded to the token-bucket granularity by the engine — never a
+    pow2 batch bucket). With ``use_flash_kernel`` each layer runs ONE flat
+    cross-attention dispatch: packed queries against the flat per-request
+    ``[retain ; live block]`` KV stream, non-owned KV tiles skipped in-kernel
+    (FLOPs ~ R·Sb·(retain+Sb), not R²·...). Without the kernel, the layer
+    falls back to the exact split-attention math batched over the same R —
+    identical FLOPs, XLA-level dispatch. Bidirectional only (every family on
+    the packed path is a diffusion LM)."""
+    R, Sb, D = xb.shape
+    cos, sin = L.rope_tables(block_positions, cfg.resolved_head_dim,
+                             cfg.rope_theta)
+    flags = L.layer_flags(cfg)
+    Cr = cache.k.shape[3]
+    q_seg = jnp.repeat(jnp.arange(R, dtype=jnp.int32), Sb)
+    kv_seg = jnp.repeat(jnp.arange(R, dtype=jnp.int32), Cr + Sb)
+
+    def body(carry, scanned):
+        p, is_local, ck, cv, cpos, cvalid = scanned
+        if serve.use_flash_kernel:
+            x = _reuse_attention_layer_flat(
+                p, carry, cfg, cos, sin, block_positions, is_local,
+                ck, cv, cpos, cvalid, q_seg, kv_seg)
+        else:
+            x = reuse_attention_layer(p, carry, cfg, cos, sin,
+                                      block_positions, is_local, ck, cv,
+                                      cpos, cvalid, "bidirectional",
+                                      concat=serve.reuse_concat)
+        h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+        y, _ = _mlp(p, h2, cfg)
+        return x + y, None
+
+    xb, _ = jax.lax.scan(
+        body, xb, (stack, flags, cache.k, cache.v, cache.pos, cache.valid))
+    return xb
+
+
+def _reuse_attention_layer_flat(p, x, cfg: ModelConfig, cos, sin,
+                                block_positions, is_local, ck, cv, cpos,
+                                cvalid, q_seg, kv_seg):
+    """One packed-Reuse attention sublayer as a single flat varlen dispatch.
+
+    x: [R, Sb, D]; ck/cv: [R, K, Cr, dh] gathered slot caches. The KV stream
+    interleaves each request's retained cache with its live block KV —
+    requests stay contiguous (segment-ascending), so the cross kernel's
+    tile-skip bounds compute by Σ (retain + Sb) per owning request."""
+    R, Sb, _ = x.shape
+    K, Cr, dh = ck.shape[1], ck.shape[2], ck.shape[3]
+    h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+    q, k, v = _qkv(p, h, cfg, cos, sin)
+    H = q.shape[2]
+    kb = k.transpose(0, 2, 1, 3)          # [R, K, Sb, dh]
+    vb = v.transpose(0, 2, 1, 3)
+    bpos_hm = jnp.broadcast_to(block_positions[:, None], (R, K, Sb))
+    k_all = jnp.concatenate([ck, kb], axis=2)      # [R, K, Cr+Sb, dh]
+    v_all = jnp.concatenate([cv, vb], axis=2)
+    pos_all = jnp.concatenate([cpos, bpos_hm], axis=2)
+    valid_all = jnp.concatenate(
+        [cvalid, jnp.ones((R, K, Sb), bool)], axis=2)
+    Tkv = R * (Cr + Sb)
+    k_s = k_all.transpose(1, 0, 2, 3).reshape(K, Tkv, dh)
+    v_s = v_all.transpose(1, 0, 2, 3).reshape(K, Tkv, dh)
+    pos_s = pos_all.transpose(1, 0, 2).reshape(K, Tkv)
+    valid_s = valid_all.transpose(1, 0, 2).reshape(K, Tkv)
+    from repro.kernels import ops as kops
+    out = kops.flash_varlen_cross_attention(
+        q.reshape(R * Sb, H, dh), k_s, v_s,
+        q_seg=q_seg, q_pos=block_positions.reshape(-1),
+        kv_seg=kv_seg, kv_pos=pos_s, kv_valid=valid_s,
+        window=cfg.sliding_window, is_local=is_local,
+        softcap=cfg.attn_softcap)
+    attn_out = out.reshape(R, Sb, H, dh)
+    return x + jnp.einsum("bshe,hed->bsd", attn_out, p["wo"])
 
 
 def reuse_attention_layer(p, x, cfg: ModelConfig, cos, sin, block_positions,

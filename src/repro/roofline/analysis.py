@@ -222,6 +222,8 @@ def analyze_compiled(name: str, compiled, chips: int, model_flops: float,
     reference; collective bytes are loop-corrected from the HLO itself.
     """
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict per device kind
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)

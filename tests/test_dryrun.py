@@ -10,14 +10,7 @@ import os
 import subprocess
 import sys
 
-import jax
 import pytest
-
-# the dry-run mesh path drives jax.set_mesh, which the pinned jax (0.4.37)
-# does not ship — the subprocess cells cannot pass there (see ROADMAP)
-requires_set_mesh = pytest.mark.skipif(
-    not hasattr(jax, "set_mesh"),
-    reason="repro.launch.dryrun needs jax.set_mesh (absent in pinned jax)")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ,
@@ -37,7 +30,6 @@ def test_main_process_sees_one_device():
     assert jax.device_count() == 1
 
 
-@requires_set_mesh
 @pytest.mark.parametrize("arch,shape", [
     ("mamba2-130m", "decode_32k"),
     ("mamba2-130m", "train_4k"),
@@ -54,7 +46,6 @@ def test_dryrun_cell_subprocess(arch, shape, tmp_path):
     assert recs[0]["bottleneck"] in ("compute", "memory", "collective")
 
 
-@requires_set_mesh
 def test_dryrun_multipod_subprocess(tmp_path):
     env = dict(ENV, REPRO_MESH="2,2,2")
     out = tmp_path / "rec.json"

@@ -1,8 +1,9 @@
-"""Token-packed (varlen) Refresh path: kernel, model, engine, plan, budget.
+"""Whole-iteration token packing: kernels, model, engine, plan, budget.
 
-The padded ``serve_refresh`` is the correctness oracle throughout — the
-packed path must agree on block hidden states for random ragged batches and
-must never fall back to a ``[B, max_seq_len]`` padded refresh dispatch.
+The padded paths (``serve_refresh`` / ``serve_reuse`` / ``decode_tokens``)
+are the correctness oracles throughout — every packed stage must agree on
+random ragged batches and the packed engine must never fall back to a
+pow2-padded dispatch for any stage (Refresh, Reuse, or the logit stage).
 """
 import dataclasses
 
@@ -201,6 +202,32 @@ def test_packed_refresh_property_random_ragged(seed, n):
         np.asarray(out_pad.block_hidden, np.float32), atol=1e-4)
 
 
+def test_varlen_score_chunking_invariance():
+    """The jnp score fallback must chunk ANY stream length (sentinel-padded
+    to whole chunks) without changing scores."""
+    from repro.models.sparse_select import head_scores_varlen
+    R, Sb, H, K, dh, T = 2, 4, 4, 2, 8, 40   # 40 % 16 != 0
+    ks = jax.random.split(KEY, 2)
+    q = jax.random.normal(ks[0], (R, Sb, H, dh))
+    kf = jax.random.normal(ks[1], (T, K, dh))
+    seg = np.repeat(np.arange(R, dtype=np.int32), [24, 16])
+    a = head_scores_varlen(q, kf, jnp.asarray(seg), kernel_size=3,
+                           s_chunk=16)
+    b = head_scores_varlen(q, kf, jnp.asarray(seg), kernel_size=3,
+                           s_chunk=4096)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_token_bucket_round_never_beats_pow2_oracle():
+    """The packed bucket may never exceed the pow2 oracle bucket, even for
+    non-pow2 token buckets (the CI waste gate's invariant)."""
+    from repro.core.budgeting import pow2_bucket, token_bucket_round
+    for bucket in (1, 3, 8, 24, 32, 100, 128):
+        for n in range(1, 300):
+            r = token_bucket_round(n, bucket)
+            assert n <= r <= pow2_bucket(n), (n, bucket, r)
+
+
 def test_selection_ignores_foreign_neighbours():
     """A request's retained KV set must not depend on what it is packed
     with: rows past seq_len in the per-request gather view belong to the
@@ -370,6 +397,279 @@ def test_packed_plan_layout_and_invariant(n, budget, seed):
 # budgeting: packed activation accounting buys KV slots
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# Reuse phase: packed stream vs the padded oracle (whole-iteration packing)
+# ---------------------------------------------------------------------------
+
+def _refresh_cache(cfg, params, ctx, lens, bstarts, seed=0):
+    rng = np.random.default_rng(seed)
+    R = len(lens)
+    S = ctx.max_seq_len
+    toks = np.zeros((R, S), np.int32)
+    valid = np.zeros((R, S), bool)
+    for j, L in enumerate(lens):
+        toks[j, :L] = rng.integers(0, cfg.vocab_size - 1, L)
+        valid[j, :L] = True
+    out = BB.serve_refresh(params, cfg, jnp.asarray(toks),
+                           jnp.asarray(bstarts), ctx,
+                           token_valid=jnp.asarray(valid))
+    btok = np.stack([toks[j, bstarts[j]: bstarts[j] + ctx.block_size]
+                     for j in range(R)])
+    bpos = np.stack([np.arange(b, b + ctx.block_size)
+                     for b in bstarts]).astype(np.int32)
+    return out.cache, btok, bpos
+
+
+@pytest.mark.parametrize("arch", list(FAMS))
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_packed_reuse_matches_padded(arch, use_kernel):
+    """serve_reuse_packed must reproduce the padded Reuse oracle on the same
+    gathered caches — jnp fallback bit-comparable, cross kernel to fp
+    tolerance (gemma2 exercises softcap + alternating local windows)."""
+    cfg = reduced(ARCHS[arch], **FAMS[arch])
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=24, q_chunk=32, max_seq_len=96)
+    ctx_pk = dataclasses.replace(ctx, use_flash_kernel=use_kernel)
+    rng = np.random.default_rng(13)
+    for trial in range(2):
+        lens = [int(x) for x in rng.integers(16, 96, size=3)]
+        bstarts = np.array([((L - 8) // 8) * 8 for L in lens], np.int32)
+        cache, btok, bpos = _refresh_cache(cfg, params, ctx, lens, bstarts,
+                                           seed=trial)
+        h_pad = BB.serve_reuse(params, cfg, jnp.asarray(btok),
+                               jnp.asarray(bpos), cache, ctx)
+        h_pk = BB.serve_reuse_packed(
+            params, cfg, jnp.asarray(btok.reshape(-1)),
+            jnp.asarray(bpos.reshape(-1)), cache, ctx_pk)
+        np.testing.assert_allclose(
+            np.asarray(h_pk, np.float32).reshape(len(lens), 8, -1),
+            np.asarray(h_pad, np.float32), atol=2e-4)
+
+
+def test_packed_reuse_rejects_ssm():
+    cfg = reduced(ARCHS["mamba2-130m"])
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
+    z = jnp.zeros((16,), jnp.int32)
+    with pytest.raises(NotImplementedError):
+        BB.serve_reuse_packed(params, cfg, z, z, None, ctx)
+
+
+def test_cross_kernel_matches_masked_reference():
+    """The cross-attention varlen kernel (packed queries vs per-segment KV,
+    per-head KV positions/validity) against a full-mask jnp reference."""
+    rng = np.random.default_rng(5)
+    R, Sb, Cr = 4, 8, 16
+    H, K, dh = 4, 2, 16
+    G = H // K
+    Tq, Tkv = R * Sb, R * (Cr + Sb)
+    q_seg = np.repeat(np.arange(R, dtype=np.int32), Sb)
+    kv_seg = np.repeat(np.arange(R, dtype=np.int32), Cr + Sb)
+    # engine-coherent geometry: each request's block queries are contiguous
+    # positions, its cache positions precede the block, and the live-block
+    # KV tail mirrors the query positions (so no query row is ever fully
+    # masked, even under a sliding window — the engine invariant)
+    bstarts = rng.integers(0, 48, R).astype(np.int32)
+    q_pos = np.concatenate([b + np.arange(Sb, dtype=np.int32)
+                            for b in bstarts])
+    kv_pos = np.zeros((K, Tkv), np.int32)
+    kv_valid = rng.random((K, Tkv)) > 0.25
+    kv_valid = kv_valid.reshape(K, R, Cr + Sb)
+    kv_pos = kv_pos.reshape(K, R, Cr + Sb)
+    for j, b in enumerate(bstarts):
+        kv_pos[:, j, :Cr] = rng.integers(0, max(1, b) + Sb, (K, Cr))
+        kv_pos[:, j, Cr:] = b + np.arange(Sb)
+    kv_valid[:, :, Cr:] = True
+    kv_pos = kv_pos.reshape(K, Tkv)
+    kv_valid = kv_valid.reshape(K, Tkv)
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (Tq, H, dh))
+    k = jax.random.normal(ks[1], (K, Tkv, dh))
+    v = jax.random.normal(ks[2], (K, Tkv, dh))
+    for softcap, window, is_local in [(0.0, 0, False), (20.0, 8, True)]:
+        out = ops.flash_varlen_cross_attention(
+            q, k, v, q_seg=jnp.asarray(q_seg), q_pos=jnp.asarray(q_pos),
+            kv_seg=jnp.asarray(kv_seg), kv_pos=jnp.asarray(kv_pos),
+            kv_valid=jnp.asarray(kv_valid), window=window,
+            is_local=is_local, softcap=softcap, q_tile=8, kv_tile=16)
+        # reference: per-head full [Tq, Tkv] masked softmax
+        qg = np.asarray(q).reshape(Tq, K, G, dh)
+        z = np.einsum("tkgd,ksd->kgts", qg, np.asarray(k)) * dh ** -0.5
+        if softcap:
+            z = softcap * np.tanh(z / softcap)
+        ok = (q_seg[:, None] == kv_seg[None, :])[None] & kv_valid[:, None, :]
+        if window:
+            dist = np.abs(q_pos[None, :, None] - kv_pos[:, None, :])
+            ok = ok & np.where(is_local, dist <= window, True)
+        z = np.where(ok[:, None], z, -1e30)
+        p = jax.nn.softmax(jnp.asarray(z), axis=-1)
+        ref_out = np.einsum("kgts,ksd->tkgd", np.asarray(p), np.asarray(v))
+        np.testing.assert_allclose(
+            np.asarray(out), ref_out.reshape(Tq, H, dh), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# logit stage: packed decode vs the padded oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llada-8b", "gemma2-27b"])
+@pytest.mark.parametrize("mode", ["chunked", "fused", "monolithic"])
+def test_packed_decode_matches_padded(arch, mode):
+    """decode_tokens_packed over a token-bucketed stream with a validity
+    mask: exact ids and confidence-to-tolerance agreement with the oracle on
+    the real rows, zeros on the padding rows (gemma2 = tied embeddings +
+    final softcap)."""
+    from repro.models import lm_head as LM
+    cfg = reduced(ARCHS[arch])
+    params = BB.init_params(cfg, KEY)
+    rng = np.random.default_rng(4)
+    for trial in range(3):
+        N = int(rng.integers(3, 80))
+        Nx = N + int(rng.integers(0, 40))
+        h = jax.random.normal(jax.random.PRNGKey(trial), (Nx, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+        valid = jnp.arange(Nx) < N
+        ids_p, conf_p = LM.decode_tokens_packed(
+            params["embed"], cfg, h, valid, max_num_logits=16, mode=mode,
+            vocab_tile=64)
+        ids_o, conf_o = LM.decode_tokens(
+            params["embed"], cfg, h[:N], max_num_logits=16, mode=mode,
+            vocab_tile=64)
+        assert np.array_equal(np.asarray(ids_p[:N]), np.asarray(ids_o))
+        np.testing.assert_allclose(np.asarray(conf_p[:N]),
+                                   np.asarray(conf_o), atol=2e-5)
+        assert not np.asarray(ids_p[N:]).any()
+        assert not np.asarray(conf_p[N:]).any()
+
+
+# ---------------------------------------------------------------------------
+# engine: the whole-iteration packed pipeline
+# ---------------------------------------------------------------------------
+
+def test_engine_packed_no_padded_reuse_or_decode():
+    """Under varlen_pack no stage may fall back to a pow2 dispatch."""
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, SERVE, seed=0)
+
+    def _boom(*a, **k):
+        raise AssertionError("pow2-padded dispatch on the packed path")
+
+    eng._run_refresh = _boom
+    eng._run_reuse = _boom
+    eng._decode_fn = _boom
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                    int(rng.integers(8, 40))),
+                       gen_len=16, arrival=0.0, rid=i) for i in range(5)]
+    stats = eng.run()
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.packed_reuse_calls > 0 and stats.padded_reuse_calls == 0
+    assert stats.logit_tokens_real > 0
+
+
+def test_engine_whole_iteration_packed_accounting():
+    """Acceptance: one full modeled-clock serve run reports per-iteration
+    ``reuse_tokens_exec == R·block_size`` rounded only to the token bucket
+    (exact below one bucket — never pow2) and ``logit_tokens_exec`` below
+    the pow2 row bucket whenever the plan is ragged."""
+    from repro.core.budgeting import pow2_bucket
+    serve = dataclasses.replace(SERVE, token_bucket=32)
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=7, clock="modeled")
+    rng = np.random.default_rng(7)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                    int(rng.integers(8, 60))),
+                       gen_len=16, arrival=0.0, rid=i) for i in range(7)]
+    stats = eng.run()
+    assert all(r.state == State.FINISHED for r in reqs)
+    Sb = serve.block_size
+    rb = serve.token_bucket // Sb
+    saw_ragged_logit = False
+    for it in stats.iter_log:
+        n = it["n_reuse"]
+        if n:
+            rp = n if n <= rb else -(-n // rb) * rb
+            assert it["reuse_tokens_exec"] == rp * Sb, it
+        nr = it["logit_tokens_real"]
+        if nr:
+            tb = serve.token_bucket
+            expect = nr if nr <= tb else -(-nr // tb) * tb
+            assert it["logit_tokens_exec"] == expect, it
+            assert expect <= pow2_bucket(nr, lo=Sb), it
+            if expect < pow2_bucket(nr, lo=Sb):
+                # ragged plan: packed exec beats the pow2 row bucket
+                saw_ragged_logit = True
+    assert saw_ragged_logit
+    assert stats.reuse_tokens_exec >= stats.reuse_tokens_real
+    assert stats.logit_tokens_exec >= stats.logit_tokens_real
+
+
+def test_engine_packed_waste_never_worse_than_padded():
+    _, r_pk, s_pk = _serve_engine(SERVE, n=6, seed=11)
+    _, r_pd, s_pd = _serve_engine(
+        dataclasses.replace(SERVE, varlen_pack=False), n=6, seed=11)
+    assert s_pk.committed_tokens == s_pd.committed_tokens
+    assert s_pk.refresh_waste <= s_pd.refresh_waste
+    assert s_pk.reuse_waste <= s_pd.reuse_waste
+    assert s_pk.logit_waste <= s_pd.logit_waste
+    assert s_pk.reuse_tokens_real == s_pd.reuse_tokens_real
+    assert s_pk.logit_tokens_real == s_pd.logit_tokens_real
+
+
+# ---------------------------------------------------------------------------
+# plan: whole-iteration packed layout partitions the stream exactly
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 12), budget=st.integers(64, 512),
+       cap=st.integers(1, 4), seed=st.integers(0, 99))
+def test_whole_iteration_layout_partitions_stream(n, budget, cap, seed):
+    """Property: for random plans, every stage's cu_seqlens partition its
+    stream with no overlap and no gap, refresh chunks tile the plan-level
+    stream, reuse segments are exactly block_size, and logit_tokens counts
+    one block per scheduled request."""
+    from repro.core.request import Request
+    cfg = dataclasses.replace(SERVE, max_num_batched_tokens=budget)
+    sched = PhaseMultiplexedScheduler(cfg)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        plen = int(rng.integers(4, 48))
+        if plen + 16 + 8 > cfg.max_seq_len or plen + 16 > budget:
+            plen = 8
+        sched.submit(Request(rid=i, prompt=np.zeros(plen, np.int32),
+                             gen_len=16, arrival=0.0, cfg=cfg, mask_id=255))
+    for _ in range(4):
+        plan = sched.plan(now=1e9)
+        layout = plan.packed_layout(cap)
+        # refresh chunks tile the plan-level stream
+        off = 0
+        plan_cu = plan.refresh_cu_seqlens()
+        covered = []
+        for seg in layout.refresh_chunks:
+            cu = seg.cu_seqlens
+            assert cu[0] == 0
+            assert np.all(np.diff(cu) > 0)
+            assert seg.token_counts == [r.total_len for r in seg.requests]
+            for j in range(len(seg.requests)):
+                covered.append((off + int(cu[j]), off + int(cu[j + 1])))
+            off += seg.total_tokens
+        assert off == plan.refresh_total_tokens == plan_cu[-1]
+        # segments are contiguous, non-overlapping, gap-free
+        for (a0, a1), (b0, b1) in zip(covered, covered[1:]):
+            assert a1 == b0 and a0 < a1
+        if layout.reuse:
+            cu = layout.reuse.cu_seqlens
+            assert list(np.diff(cu)) == [cfg.block_size] * len(plan.reuse)
+        assert layout.logit_tokens == \
+            (len(plan.refresh) + len(plan.reuse)) * cfg.block_size
+        for r in plan.refresh + plan.reuse:
+            blk = r.block_tokens().copy()
+            blk[:] = 1
+            r.advance(blk, now=0.0)
+            if r.state == State.FINISHED:
+                sched.finish(r)
+
+
 def test_budgeting_packed_tokens_buy_slots():
     from repro.configs import get_config
     from repro.core.budgeting import max_exec_tokens, plan_memory
@@ -389,3 +689,34 @@ def test_budgeting_packed_tokens_buy_slots():
     assert p_pk.activation_bytes < p_pad.activation_bytes
     assert p_pk.max_slots >= p_pad.max_slots
     assert p_pk.kv_pool_bytes > p_pad.kv_pool_bytes
+
+
+def test_budgeting_bills_reuse_and_logit_by_packed_tokens():
+    """plan_memory's per-stage accounting mirrors the engine's real
+    execution: Reuse and the logit stage are billed token-bucketed under
+    varlen_pack, pow2-bucketed otherwise."""
+    from repro.configs import get_config
+    from repro.core.budgeting import (logit_exec_tokens, pow2_bucket,
+                                      reuse_exec_tokens)
+    cfg = get_config("llada-8b")
+    base = ServeConfig(max_num_batched_tokens=4000, max_num_logits=2048,
+                       max_seq_len=2048, max_slots=48,
+                       logit_mode="monolithic")
+    packed = dataclasses.replace(base, varlen_pack=True)
+    # reuse: pow2(min(slots, budget // Sb)) vs token-bucket multiples
+    # (48 slots: pow2 pays 64 blocks, the packed stream exactly 48)
+    assert reuse_exec_tokens(base, cfg) == \
+        pow2_bucket(base.max_slots) * base.block_size
+    assert reuse_exec_tokens(packed, cfg) < reuse_exec_tokens(base, cfg)
+    assert reuse_exec_tokens(packed, cfg) % packed.token_bucket == 0
+    # SSM fallback keeps the padded reservation even under varlen_pack
+    ssm = get_config("mamba2-130m")
+    assert reuse_exec_tokens(packed, ssm) == reuse_exec_tokens(base, ssm)
+    # logit stage: ragged N → token-bucket rounding beats the pow2 bucket
+    # (and the logit head packs for every family, SSM included)
+    n = 2500
+    assert logit_exec_tokens(base, n) == pow2_bucket(n, lo=base.block_size)
+    assert logit_exec_tokens(packed, n) < logit_exec_tokens(base, n)
+    from repro.core.budgeting import logit_activation_bytes
+    assert logit_activation_bytes(cfg, packed, n) < \
+        logit_activation_bytes(cfg, base, n)
