@@ -11,7 +11,9 @@ token ratios are the device-independent signal).
 
 ``python -m benchmarks.packing --smoke --out packing_smoke.json`` runs the
 CI gate: asserts ``refresh_waste``/``reuse_waste``/``logit_waste`` of the
-packed engine are each ≤ the padded baseline and writes the JSON row.
+packed engine are each ≤ the padded baseline — for an attention config AND
+an SSM config (the segment-reset varlen scan path), so the scan families'
+packing is enforced too — and writes the per-arch JSON rows.
 """
 from __future__ import annotations
 
@@ -31,11 +33,18 @@ def _serve(varlen: bool):
         logit_mode="chunked", varlen_pack=varlen, token_bucket=32)
 
 
-def _run_one(varlen: bool, n: int, seed: int = 0) -> dict:
+# the smoke gate covers one attention family and one scan family (the
+# packed refresh/reuse waste of the segment-reset SSD scan path must beat
+# the padded oracle too)
+SMOKE_ARCHS = ("llada-8b", "mamba2-130m")
+
+
+def _run_one(varlen: bool, n: int, seed: int = 0,
+             arch: str = "llada-8b") -> dict:
     from repro.configs import ARCHS, reduced
     from repro.core.engine import Engine
 
-    cfg = reduced(ARCHS["llada-8b"])
+    cfg = reduced(ARCHS[arch])
     eng = Engine(cfg, _serve(varlen), seed=seed)
     eng.warmup()
     rng = np.random.default_rng(seed)
@@ -120,19 +129,24 @@ def run(quick: bool = True):
 
 def smoke(out_path: str | None = None) -> dict:
     """CI gate: the packed engine's per-stage waste must never exceed the
-    padded baseline on the same ragged workload. Returns (and optionally
-    writes) the comparison row."""
-    packed = _run_one(True, 8)
-    padded = _run_one(False, 8)
-    row = dict(packed=packed, padded=padded)
-    assert packed["committed"] == padded["committed"], row
-    for stage in ("refresh_waste", "reuse_waste", "logit_waste"):
-        assert packed[stage] <= padded[stage] + 1e-9, (stage, row)
-    row["ok"] = True
+    padded baseline on the same ragged workload, for every ``SMOKE_ARCHS``
+    family (attention and SSM). Returns (and optionally writes) the
+    per-arch comparison rows."""
+    rows: dict = {}
+    for arch in SMOKE_ARCHS:
+        packed = _run_one(True, 8, arch=arch)
+        padded = _run_one(False, 8, arch=arch)
+        row = dict(packed=packed, padded=padded)
+        assert packed["committed"] == padded["committed"], (arch, row)
+        for stage in ("refresh_waste", "reuse_waste", "logit_waste"):
+            assert packed[stage] <= padded[stage] + 1e-9, (arch, stage, row)
+        row["ok"] = True
+        rows[arch] = row
+    rows["ok"] = True
     if out_path:
         with open(out_path, "w") as f:
-            json.dump(row, f, indent=1)
-    return row
+            json.dump(rows, f, indent=1)
+    return rows
 
 
 def main():
@@ -144,10 +158,12 @@ def main():
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     if args.smoke:
-        row = smoke(args.out)
-        p, d = row["packed"], row["padded"]
-        for stage in ("refresh_waste", "reuse_waste", "logit_waste"):
-            print(f"{stage}: packed={p[stage]:.3f}x padded={d[stage]:.3f}x")
+        rows = smoke(args.out)
+        for arch in SMOKE_ARCHS:
+            p, d = rows[arch]["packed"], rows[arch]["padded"]
+            for stage in ("refresh_waste", "reuse_waste", "logit_waste"):
+                print(f"{arch}/{stage}: packed={p[stage]:.3f}x "
+                      f"padded={d[stage]:.3f}x")
         print("smoke ok")
         return
     for name, us, derived in run(quick=not args.full):

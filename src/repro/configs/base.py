@@ -161,6 +161,18 @@ class ServeConfig:
     def retained_len(self) -> int:
         return max(self.block_size, int(self.max_seq_len * self.retention_ratio))
 
+    @property
+    def refresh_slots(self) -> int:
+        """Per-iteration Refresh cap with the ``0 = unlimited`` semantics
+        normalized in ONE place: ``max_refresh_per_iter=0`` means no
+        per-iteration cap beyond ``max_slots`` residency. Every consumer
+        (scheduler admission, engine chunking, warmup bucket bounds, the
+        profiler's padded-bucket accounting) must read this property — the
+        raw field compared ``< 0`` livelocks the scheduler."""
+        if self.max_refresh_per_iter > 0:
+            return min(self.max_slots, self.max_refresh_per_iter)
+        return self.max_slots
+
 
 @dataclass(frozen=True)
 class ShapeConfig:

@@ -78,13 +78,17 @@ def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
 
 
 def can_pack_tokens(cfg: ModelConfig) -> bool:
-    """True when the engine's token-packed Refresh path applies to ``cfg``:
-    attention families without a modality frontend. SSM/hybrid state scans
-    and frontend archs fall back to the padded oracle, so they must be
-    provisioned (and billed) for the padded rectangle even under
-    ``varlen_pack=True``. Single source of truth for the engine gate and
-    the profiler's activation accounting."""
-    return cfg.family not in ("ssm", "hybrid") and not cfg.frontend_dim
+    """True when the engine's token-packed Refresh/Reuse paths apply to
+    ``cfg``: every text family — attention archs run the segment-masked
+    varlen attention stream and SSM/hybrid archs run the segment-reset
+    varlen SSD scan (``models/ssm.varlen_ssd_scan`` / the Pallas
+    ``kernels/ssm_scan`` kernel). Only modality-frontend archs (vlm/audio)
+    still fall back to the padded oracle — their frontend rows are
+    rectangular by construction — so only they must be provisioned (and
+    billed) for the padded rectangle under ``varlen_pack=True``. Single
+    source of truth for the engine gate and the profiler's activation
+    accounting."""
+    return not cfg.frontend_dim
 
 
 def pow2_bucket(n: int, lo: int = 1) -> int:
@@ -111,27 +115,29 @@ def token_bucket_round(n: int, bucket: int) -> int:
 def max_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
     """Worst-case tokens one Refresh dispatch materializes activations for.
 
-    Token-packed engines round the real token sum up to ``token_bucket``
-    (bounded by the scheduler budget); padded engines — including the
-    SSM/hybrid/frontend fallback that runs padded even under
-    ``varlen_pack=True`` — pay the full ``batch_bucket × max_seq_len``
-    rectangle regardless of true lengths.
+    Token-packed engines run the iteration's Refresh set as ONE fused
+    stream and round its real token sum up to ``token_bucket`` (bounded by
+    the scheduler budget) — this now covers the SSM/hybrid scan families
+    too. Padded engines — including the modality-frontend fallback that
+    runs padded even under ``varlen_pack=True`` — pay the full
+    ``batch_bucket × max_seq_len`` rectangle regardless of true lengths
+    (``refresh_slots`` normalizes the 0-means-unlimited cap).
     """
     if serve.varlen_pack and can_pack_tokens(cfg):
         tb = max(1, serve.token_bucket)
         return -(-serve.max_num_batched_tokens // tb) * tb
     return max(serve.max_num_batched_tokens,
-               pow2_bucket(max(1, serve.max_refresh_per_iter))
-               * serve.max_seq_len)
+               pow2_bucket(serve.refresh_slots) * serve.max_seq_len)
 
 
 def reuse_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
     """Worst-case tokens one Reuse dispatch materializes activations for.
 
     The reuse set is bounded by both ``max_slots`` and the scheduler budget
-    (block tokens are scheduling currency). Packed engines round the request
-    count to whole token buckets (exact below one bucket); padded engines —
-    and the SSM/hybrid fallback — pay the pow2 batch bucket."""
+    (block tokens are scheduling currency). Packed engines — every text
+    family, SSM/hybrid included — round the request count to whole token
+    buckets (exact below one bucket); padded engines and the
+    modality-frontend fallback pay the pow2 batch bucket."""
     Sb = max(1, serve.block_size)
     r_max = max(1, min(serve.max_slots, serve.max_num_batched_tokens // Sb))
     if serve.varlen_pack and can_pack_tokens(cfg):

@@ -15,17 +15,22 @@ Static-shape policy: two execution paths for the WHOLE iteration.
 * padded (oracle): every stage is bucketed to powers of two — Refresh pads
   sequences to ``max_seq_len``, Reuse pads the request batch, and the logit
   stage pads the concatenated hidden rows — up to ~2× wasted FLOPs/HBM per
-  stage. Kept as the correctness oracle and the fallback for SSM/hybrid
-  families (their state scans cannot consume a ragged stream).
+  stage. Kept as the correctness oracle and the fallback for
+  modality-frontend archs (their frontend rows are rectangular).
 * token-packed (``varlen_pack=True``, the paper's §4.1 flattened engine): no
-  stage launches a pow2-padded rectangle. The iteration executes as a single
-  packed pipeline driven by the scheduler's
+  stage launches a pow2-padded rectangle for ANY text family — attention
+  archs run the segment-masked varlen attention stream and SSM/hybrid archs
+  run the segment-reset varlen SSD scan (``kernels/ssm_scan``). The
+  iteration executes as a single packed pipeline driven by the scheduler's
   :class:`~repro.core.scheduler.PackedIterationLayout` (per-stage cu_seqlens):
 
-    - Refresh: ONE ragged ``[T_total, ...]`` stream per chunk, bucketed on
-      *total tokens* (``token_bucket`` granularity), in-kernel segment
-      masking + tile-skip (``kernels/flash_varlen``), and select/pack that
-      reads the stream in place (no padded K/V gather).
+    - Refresh: ONE ragged ``[T_total, ...]`` stream for the WHOLE iteration
+      (``PackedIterationLayout.refresh_fused`` — a single fused dispatch
+      across the refresh chunks), bucketed on *total tokens*
+      (``token_bucket`` granularity), in-kernel segment masking + tile-skip
+      (``kernels/flash_varlen``) or segment-reset state scan
+      (``kernels/ssm_scan``), and select/pack that reads the stream in
+      place (no padded K/V gather).
     - Reuse: the iteration's R active blocks form one ragged ``[R·Sb]``
       query stream (R rounded only to the token-bucket granularity) against
       their gathered slot caches — the cross-attention varlen kernel skips
@@ -160,9 +165,10 @@ class Engine:
         self.scheduler = make_scheduler(serve)
         self.pool = KVPool(serve.max_slots)
         self.stats = EngineStats()
-        # real token-packed execution needs the segment-masked attention path;
-        # SSM/hybrid state scans stay on the padded oracle (same predicate
-        # the offline profiler bills activations by).
+        # token-packed execution covers every text family (segment-masked
+        # attention stream or segment-reset SSD scan); only modality-frontend
+        # archs stay on the padded oracle (same predicate the offline
+        # profiler bills activations by).
         self._use_packed = serve.varlen_pack and can_pack_tokens(cfg)
         self._refresh_jit: Dict[int, callable] = {}
         self._refresh_packed_jit: Dict[tuple, callable] = {}
@@ -282,14 +288,32 @@ class Engine:
         """Pre-compile every bucketed step function (refresh/reuse/decode and
         the pool scatter/gather) with dummy inputs — the AOT warmup any
         production serving system performs before accepting traffic.
+
+        Bucket bounds are audited against what the runtime can actually
+        request (the invariant ``tests/test_engine.py`` asserts): every
+        cap reads the NORMALIZED ``ServeConfig.refresh_slots`` (so
+        ``max_refresh_per_iter=0`` warms up to the ``max_slots``-wide fused
+        dispatch instead of nothing) and every doubling loop runs until it
+        has covered the pow2 bucket of the cap (``b <= cap`` stopped short
+        of ``pow2_bucket(cap)`` for non-pow2 caps, leaving the worst-case
+        compile to fire mid-serve). Sub-worst-case buckets still compile
+        lazily — only the largest shape per stage is guaranteed AOT.
         Returns the compile wall-time so harnesses can report it."""
         t0 = time.perf_counter()
         S, Sb = self.serve.max_seq_len, self.serve.block_size
+        r_eff = self.serve.refresh_slots
+        # the fused packed dispatch spans the WHOLE plan.refresh: the phase
+        # scheduler caps that at refresh_slots, but the request-level
+        # baseline admits whole batches up to max_slots and relies on the
+        # engine to absorb them (serial chunks padded, one fused stream
+        # packed) — warm the fused bucket to the scheduler's true bound.
+        r_fused = r_eff if self.serve.scheduler == "phase" \
+            else self.serve.max_slots
         if self._use_packed:
             # packed path: warm the worst-case (token bucket, request bucket)
-            # per refresh sub-batch size; smaller buckets compile lazily.
+            # per refresh fused-dispatch size; smaller buckets compile lazily.
             b = 1
-            while b <= max(1, self.serve.max_refresh_per_iter):
+            while True:
                 tp = self._token_bucket(
                     min(b * S, self.serve.max_num_batched_tokens))
                 out = self._refresh_packed_fn(tp, b)(
@@ -301,18 +325,21 @@ class Engine:
                     jnp.full((b,), min(tp, S), jnp.int32),
                     jnp.zeros((b,), jnp.int32))
                 self.pool.ensure(out.cache)
+                if b >= _bucket(r_fused):
+                    break
                 b *= 2
         toks = jnp.zeros((1, S), jnp.int32)
         valid = jnp.ones((1, S), bool)
         bs = jnp.zeros((1,), jnp.int32)
         b = 1
-        while not self._use_packed and \
-                b <= max(1, self.serve.max_refresh_per_iter):
+        while not self._use_packed:
             out = self._refresh_fn(b)(
                 self.params, jnp.broadcast_to(toks, (b, S)),
                 jnp.broadcast_to(valid, (b, S)),
                 jnp.broadcast_to(bs, (b,)))
             self.pool.ensure(out.cache)
+            if b >= _bucket(r_eff):
+                break
             b *= 2
         bpos = jnp.zeros((1, Sb), jnp.int32)
         btok = jnp.zeros((1, Sb), jnp.int32)
@@ -332,14 +359,15 @@ class Engine:
                 rp = min(rp * 2, self._reuse_bucket(r_cap))
         else:
             b = 1
-            while b <= self.serve.max_slots:
+            while True:
                 cache = self.pool.gather([self.pool.scratch_slot] * b)
                 self._reuse_fn(b)(self.params,
                                   jnp.broadcast_to(btok, (b, Sb)),
                                   jnp.broadcast_to(bpos, (b, Sb)), cache)
+                if b >= _bucket(r_cap):
+                    break
                 b *= 2
-        max_logits = (self.serve.max_refresh_per_iter
-                      + self.serve.max_slots) * Sb
+        max_logits = (r_eff + self.serve.max_slots) * Sb
         dt = jnp.dtype(self.cfg.dtype)
         if self.serve.varlen_pack:
             n = self._logit_bucket(Sb)
@@ -371,7 +399,14 @@ class Engine:
         """Serve until all submitted requests finish.
 
         wall clock: ``time_scale`` maps trace seconds to wall seconds.
-        modeled clock: arrivals/latencies in virtual device seconds."""
+        modeled clock: arrivals/latencies in virtual device seconds.
+
+        A zero-progress iteration with no *future* arrival to wait for is a
+        permanent stall (admission and deferral depend only on budget/slot
+        state, which time alone cannot change) and raises ``RuntimeError``
+        instead of silently breaking — the old break exited with unfinished
+        requests still resident and recorded bogus throughput/latency
+        stats for them."""
         start = time.perf_counter()
         it = 0
         while self.scheduler.has_work and it < max_iters:
@@ -383,8 +418,21 @@ class Engine:
             if not progressed:
                 nxt = min((r.arrival for r in self.scheduler.waiting),
                           default=None)
-                if nxt is None:
-                    break
+                if nxt is None or nxt <= now:
+                    n_run = len(self.scheduler.running)
+                    n_wait = len(self.scheduler.waiting)
+                    raise RuntimeError(
+                        f"engine stalled with work left at t={now:.3f}: "
+                        f"{n_run} running / {n_wait} waiting requests and "
+                        f"an empty iteration plan that no future arrival "
+                        f"can unblock. Check the serve limits against the "
+                        f"workload (max_num_batched_tokens="
+                        f"{self.serve.max_num_batched_tokens}, block_size="
+                        f"{self.serve.block_size}, max_slots="
+                        f"{self.serve.max_slots}, refresh cap="
+                        f"{self.serve.refresh_slots}) — e.g. a request "
+                        f"whose total_len exceeds the token budget can "
+                        f"never be admitted.")
                 if self.clock == "modeled":
                     self.vtime = max(self.vtime, nxt)   # jump to next arrival
                 else:
@@ -405,11 +453,12 @@ class Engine:
         cfg = self.cfg
         # A stage is billed for real tokens only when its packed path really
         # executed (no more "pretend-packed" carve-outs): Refresh and Reuse
-        # follow the engine gate — SSM/hybrid fall back to the padded oracle
-        # even under varlen_pack, so they pay the padded rectangle — while
-        # the logit stage packs under varlen_pack for every family (the
-        # output head is family-agnostic, so the engine always buckets the
-        # hidden stream on tokens there).
+        # follow the engine gate — every text family packs now (attention
+        # stream or segment-reset SSD scan); only modality-frontend archs
+        # fall back to the padded oracle and pay the rectangle — while the
+        # logit stage packs under varlen_pack for every family (the output
+        # head is family-agnostic, so the engine always buckets the hidden
+        # stream on tokens there).
         if kind == "decode":
             varlen = self.serve.varlen_pack
         else:
@@ -440,13 +489,17 @@ class Engine:
         decoded: List[Request] = []
 
         # ---- whole-iteration packed layout (drives the packed pipeline) ----
-        cap = max(1, self.serve.max_refresh_per_iter)
+        cap = self.serve.refresh_slots
         layout = plan.packed_layout(cap) if self._use_packed else None
 
-        # ---- Refresh sub-batches (chunked to the per-iter cap) ----
+        # ---- Refresh: ONE fused packed dispatch / padded per-cap chunks ----
         iter_real = iter_exec = 0
         if self._use_packed:
-            for seg in layout.refresh_chunks:
+            seg = layout.refresh_fused
+            if seg is not None:
+                # single fused dispatch across the refresh chunks: the whole
+                # iteration's Refresh set is one ragged stream, so launch
+                # overhead is paid once per iteration, not once per chunk
                 chunk = list(seg.requests)
                 t_real = seg.total_tokens
                 bh, exec_tokens = self._run_refresh_packed(seg)

@@ -49,6 +49,13 @@ class PackedIterationLayout:
     refresh_chunks: Tuple[StageSegments, ...]
     reuse: Optional[StageSegments]
     logit_tokens: int               # real hidden rows entering the C1 stage
+    # The iteration's WHOLE Refresh set as one stream (ROADMAP: "single fused
+    # dispatch across refresh chunks") — the plan-level cu_seqlens verbatim.
+    # The engine's packed pipeline launches this ONE dispatch instead of one
+    # per chunk, amortizing launch overhead across the full token budget;
+    # refresh_chunks remain the per-cap tiling of the same stream (the padded
+    # oracle's serial chunking, property-tested against this stream).
+    refresh_fused: Optional[StageSegments] = None
 
     @property
     def refresh_total_tokens(self) -> int:
@@ -116,8 +123,10 @@ class IterationPlan:
             reuse = StageSegments(
                 tuple(self.reuse),
                 (np.arange(len(self.reuse) + 1) * Sb).astype(np.int32))
+        fused = StageSegments(tuple(self.refresh), cu) if self.refresh \
+            else None
         return PackedIterationLayout(tuple(chunks), reuse,
-                                     self.n_logit_tokens)
+                                     self.n_logit_tokens, fused)
 
 
 class PhaseMultiplexedScheduler:
@@ -154,7 +163,11 @@ class PhaseMultiplexedScheduler:
     def plan(self, now: float) -> IterationPlan:
         budget = self.cfg.max_num_batched_tokens
         plan = IterationPlan()
-        refresh_slots = self.cfg.max_refresh_per_iter
+        # normalized cap: 0 = unlimited (ServeConfig.refresh_slots). Reading
+        # the raw field here livelocked ``max_refresh_per_iter=0``: every
+        # Refresh compared ``len < 0`` false, was deferred forever, and
+        # blocked admission with it.
+        refresh_slots = self.cfg.refresh_slots
 
         # 1) running requests, FCFS
         for r in self.running:

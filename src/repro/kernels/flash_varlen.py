@@ -153,8 +153,8 @@ def flash_varlen_call(
 
 def _cross_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref,
                   kseg_ref, kvalid_ref, loc_ref, o_ref, m_ref, s_ref,
-                  *, scale: float, softcap: float, g: int, window: int,
-                  n_kv: int):
+                  *, scale: float, softcap: float, g: int, causal: bool,
+                  window: int, n_kv: int):
     """Like :func:`_kernel` but the query and KV streams are distinct: the
     queries are the iteration's packed active blocks (``[Tq]``, segment id =
     reuse-request index) and the KV stream is the per-request ``[retain+Sb]``
@@ -188,6 +188,8 @@ def _cross_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref,
         if softcap:
             z = softcap * jnp.tanh(z / softcap)
         ok = kv[None, :] & (qs[:, None] == ks[None, :])
+        if causal:
+            ok = ok & (qp[:, None] >= kp[None, :])
         if window:
             loc = loc_ref[0]
             ok = ok & ((jnp.abs(qp[:, None] - kp[None, :]) <= window) | ~loc)
@@ -211,7 +213,7 @@ def _cross_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "softcap", "window", "q_tile", "kv_tile", "interpret"))
+    "softcap", "causal", "window", "q_tile", "kv_tile", "interpret"))
 def flash_varlen_cross_call(
     q: jax.Array,          # [K, Tq*G, dh] row-flat GQA layout (token-major)
     k: jax.Array,          # [K, Tkv, dh]
@@ -224,12 +226,14 @@ def flash_varlen_cross_call(
     is_local: jax.Array,   # [1] bool
     *,
     softcap: float = 0.0,
+    causal: bool = False,
     window: int = 0,
     q_tile: int = 128,
     kv_tile: int = 512,
     interpret: bool = True,
 ):
-    """Ragged cross-attention dispatch (bidirectional — the dLLM Reuse mask).
+    """Ragged cross-attention dispatch (bidirectional dLLM Reuse mask by
+    default; ``causal=True`` for the hybrid family's causal shared block).
 
     Unlike :func:`flash_varlen_call` the query/KV streams differ in length
     and layout: Tq = Σ block tokens, Tkv = R·(retain + Sb) pool slices. KV
@@ -245,8 +249,8 @@ def flash_varlen_cross_call(
     assert Tq % q_tile == 0 and Tkv % kv_tile == 0, (Tq, q_tile, Tkv, kv_tile)
     n_q, n_kv = Tq // q_tile, Tkv // kv_tile
     kern = functools.partial(
-        _cross_kernel, scale=dh ** -0.5, softcap=softcap, g=g, window=window,
-        n_kv=n_kv)
+        _cross_kernel, scale=dh ** -0.5, softcap=softcap, g=g, causal=causal,
+        window=window, n_kv=n_kv)
     out, m, s = pl.pallas_call(
         kern,
         grid=(K, n_q, n_kv),

@@ -230,8 +230,8 @@ def flash_varlen_attention(q, k, v, *, seg_ids, positions, kv_valid,
 
 def flash_varlen_cross_attention(q, k, v, *, q_seg, q_pos, kv_seg, kv_pos,
                                  kv_valid, window: int = 0, is_local=False,
-                                 softcap: float = 0.0, q_tile: int = 128,
-                                 kv_tile: int = 512):
+                                 softcap: float = 0.0, causal: bool = False,
+                                 q_tile: int = 128, kv_tile: int = 512):
     """Packed-Reuse cross attention (model contract).
 
     q: [Tq, H, dh] flat packed block queries; k/v: [K, Tkv, dh] head-major
@@ -258,11 +258,37 @@ def flash_varlen_cross_attention(q, k, v, *, q_seg, q_pos, kv_seg, kv_pos,
     out = flash_varlen_cross_call(
         qr, k, v, q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32),
         q_seg.astype(jnp.int32), kv_seg.astype(jnp.int32), kv_valid, loc,
-        softcap=softcap, window=window, q_tile=qt, kv_tile=kt,
+        softcap=softcap, causal=causal, window=window, q_tile=qt, kv_tile=kt,
         interpret=_interpret())
     out = (out.reshape(K, Tq, G, dh).transpose(1, 0, 2, 3)
            .reshape(Tq, H, dh))
     return out.astype(q.dtype)
+
+
+def ssm_segment_scan(xh, dt, A, Bm, Cm, reset, cap_rows, *, chunk: int = 64):
+    """Segment-reset SSD scan over a packed stream (model contract).
+
+    xh: [T, H, P]; dt: [T, H] f32 (post-softplus); A: [H] (negative);
+    Bm/Cm: [T, N]; reset: [T] bool (True on each request's first token);
+    cap_rows: [R] int32 flat row AFTER which request r's state is captured
+    (−1 → zero state). Returns (y [T, H, P] f32, states [R, H, P, N] f32).
+    One flat dispatch replaces the padded ``[B, max_seq_len]`` scan — the
+    recurrent state resets at segment boundaries in-kernel and the captured
+    states are accumulated without materializing per-token states.
+    """
+    from repro.kernels.ssm_scan import ssm_segment_scan_call
+
+    T = xh.shape[0]
+    f32 = jnp.float32
+    ct = min(chunk, T)
+    while T % ct:
+        ct //= 2
+    dtf = dt.astype(f32)
+    y, cap, _ = ssm_segment_scan_call(
+        xh.astype(f32) * dtf[..., None], dtf * A.astype(f32)[None, :],
+        Bm.astype(f32), Cm.astype(f32), reset.astype(f32),
+        cap_rows.astype(jnp.int32), chunk=ct, interpret=_interpret())
+    return y, cap
 
 
 def head_score(q_block, k_full, *, s_tile: int = 512):

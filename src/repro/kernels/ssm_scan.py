@@ -1,0 +1,167 @@
+"""Segment-reset SSD scan over a token-packed stream (Pallas).
+
+The varlen side of the Mamba2 SSD recurrence: one ragged ``[T_total]`` token
+stream carries every Refresh request of an iteration (delimited by
+cu_seqlens; ``reset`` marks each request's first token) and the kernel runs
+the chunked state-space scan with the recurrent state zeroed at every
+segment boundary — the scan-family analogue of the segment-masked varlen
+attention kernel. Compute stays the blocked SSD math (intra-chunk quadratic
+term as MXU matmuls + an O(1)-state inter-chunk recurrence carried across
+grid steps), so FLOPs scale with real tokens instead of the padded
+``batch_bucket × max_seq_len`` rectangle.
+
+Grid is 1-D over stream chunks (sequential — the state carry lives in an
+output ref revisited by every step, like the flash kernels' accumulators).
+Segment resets are handled by a *reset-count* mask, NOT by a −inf decay
+injection: a pair (j → i) contributes iff no reset falls in ``(j, i]``
+(``cnt[i] == cnt[j]`` for the inclusive reset prefix-count), which keeps the
+decay cumsums free of sentinel values — a −1e30 sentinel would absorb every
+subsequent f32 cumsum term and zero the post-reset decays entirely.
+
+Per-request state capture happens **in-kernel**: ``cap_rows[r]`` names the
+flat row after which request r's recurrent state must be read (−1 → zero
+state, e.g. a block at position 0). The owning chunk computes the masked
+partial state ``Σ_{j≤idx} exp(cs[idx]−cs[j])·b_j + gate·exp(cs[idx])·state``
+and accumulates it into the ``[R, H, P, N]`` capture output — no
+``[T, H, P, N]`` per-token state tensor is ever materialized (that is the
+jnp associative-scan fallback's memory cost, see
+:func:`repro.models.ssm.varlen_ssd_scan`).
+
+Cumulative sums are computed as lower-triangular matmuls (MXU-friendly; no
+reliance on ``cumsum`` lowering inside the kernel). All exponents are ≤ 0 on
+unmasked lanes (dA = dt·A < 0), so nothing overflows where it matters;
+masked lanes may hit ``inf`` before the ``where`` discards them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, dA_ref, b_ref, c_ref, reset_ref, cap_ref,
+            y_ref, cap_out_ref, state_ref, *, c: int, r_cap: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+        cap_out_ref[...] = jnp.zeros_like(cap_out_ref)
+
+    xdt = xdt_ref[...]        # [c, H, P] f32  (x · dt)
+    dA = dA_ref[...]          # [c, H]    f32  (dt · A, always < 0)
+    Bm = b_ref[...]           # [c, N]    f32
+    Cm = c_ref[...]           # [c, N]    f32
+    rst = reset_ref[...]      # [c]       f32  (1.0 at segment starts)
+    state_in = state_ref[...]             # [H, P, N] f32
+    H, P = xdt.shape[1], xdt.shape[2]
+    N = Bm.shape[1]
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    tri = (ii >= jj).astype(jnp.float32)
+    # inclusive prefix sums via triangular matmul: cs[i] = Σ_{t≤i} dA[t]
+    cs = jnp.dot(tri, dA, preferred_element_type=jnp.float32)        # [c, H]
+    cnt = jnp.dot(tri, rst[:, None],
+                  preferred_element_type=jnp.float32)[:, 0]          # [c]
+
+    # 1) intra-chunk quadratic term: (j → i) decays exp(cs_i − cs_j) and is
+    # masked out when a reset falls in (j, i] (different inclusive counts)
+    same = cnt[:, None] == cnt[None, :]
+    run_ok = (ii >= jj) & same
+    dec_ij = jnp.exp(cs[:, None, :] - cs[None, :, :])                # [c,c,H]
+    L = jnp.where(run_ok[..., None], dec_ij, 0.0)
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)   # [c, c]
+    M = (scores[..., None] * L).transpose(2, 0, 1)                   # [H,c,c]
+    xh = xdt.transpose(1, 0, 2)                                      # [H,c,P]
+    y_diag = jax.lax.dot_general(
+        M, xh, (((2,), (1,)), ((0,), (0,))))                         # [H,c,P]
+
+    # 2) incoming-state term: token i sees the carried state iff no reset ≤ i
+    gate0 = jnp.where(cnt == 0.0, 1.0, 0.0)                          # [c]
+    csx = jnp.exp(cs) * gate0[:, None]                               # [c, H]
+    c_st = jax.lax.dot_general(
+        Cm, state_in, (((1,), (2,)), ((), ())))                      # [c,H,P]
+    y_ref[...] = y_diag.transpose(1, 0, 2) + c_st * csx[..., None]
+
+    # 3) per-request state capture (state AFTER flat row cap_rows[r])
+    cap = cap_ref[...]                                               # [R] i32
+    loc = cap - i * c
+    in_ch = (loc >= 0) & (loc < c)
+    loc_c = jnp.clip(loc, 0, c - 1)
+    rr = jax.lax.broadcasted_iota(jnp.int32, (r_cap, c), 1)
+    onehot = ((rr == loc_c[:, None]) & in_ch[:, None]).astype(jnp.float32)
+    cs_at = jnp.dot(onehot, cs, preferred_element_type=jnp.float32)  # [R, H]
+    cnt_at = jnp.dot(onehot, cnt[:, None],
+                     preferred_element_type=jnp.float32)[:, 0]       # [R]
+    wmask = (rr <= loc_c[:, None]) & in_ch[:, None] \
+        & (cnt[None, :] == cnt_at[:, None])
+    w = jnp.where(wmask[..., None],
+                  jnp.exp(cs_at[:, None, :] - cs[None, :, :]), 0.0)  # [R,c,H]
+    G = xdt[:, :, :, None] * Bm[:, None, None, :]                    # [c,H,P,N]
+    Gh = G.transpose(1, 0, 2, 3).reshape(H, c, P * N)
+    wh = w.transpose(2, 0, 1)                                        # [H,R,c]
+    contrib = jax.lax.dot_general(
+        wh, Gh, (((2,), (1,)), ((0,), (0,))))                        # [H,R,PN]
+    contrib = contrib.reshape(H, r_cap, P, N).transpose(1, 0, 2, 3)
+    basef = jnp.where(in_ch & (cnt_at == 0.0), 1.0, 0.0)             # [R]
+    base = jnp.exp(cs_at) * basef[:, None]                           # [R, H]
+    cap_out_ref[...] += contrib + base[..., None, None] * state_in[None]
+
+    # 4) chunk-end state for the inter-chunk recurrence
+    endg = jnp.where(cnt[-1] == cnt, 1.0, 0.0)                       # [c]
+    dec = jnp.exp(cs[-1][None, :] - cs) * endg[:, None]              # [c, H]
+    dxh = (dec[..., None] * xdt).transpose(1, 2, 0)                  # [H,P,c]
+    delta = jax.lax.dot_general(
+        dxh, Bm, (((2,), (0,)), ((), ())))                           # [H,P,N]
+    keep = jnp.where(cnt[-1] == 0.0, 1.0, 0.0)
+    state_ref[...] = state_in * (jnp.exp(cs[-1]) * keep)[:, None, None] \
+        + delta
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_segment_scan_call(
+    xdt: jax.Array,       # [T, H, P] f32  pre-multiplied x · dt
+    dA: jax.Array,        # [T, H]    f32  dt · A (negative)
+    Bm: jax.Array,        # [T, N]    f32
+    Cm: jax.Array,        # [T, N]    f32
+    reset: jax.Array,     # [T]       f32  1.0 at segment-start tokens
+    cap_rows: jax.Array,  # [R]       i32  flat row of each capture (−1: zero)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+):
+    """Returns (y [T, H, P] f32, captured states [R, H, P, N] f32,
+    final state [H, P, N] f32)."""
+    T, H, P = xdt.shape
+    N = Bm.shape[1]
+    R = cap_rows.shape[0]
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    kern = functools.partial(_kernel, c=chunk, r_cap=R)
+    y, cap, state = pl.pallas_call(
+        kern,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((chunk, H, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((chunk, H), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, N), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, N), lambda i: (i, 0)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((R,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk, H, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((R, H, P, N), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((H, P, N), lambda i: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((R, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, dA, Bm, Cm, reset, cap_rows)
+    return y, cap, state

@@ -181,29 +181,59 @@ def serve_refresh_packed(
 ) -> RefreshOut:
     """Token-packed Refresh (§4.1 flattened engine): one flat ``[T, ...]``
     stream replaces the padded ``[B, S]`` batch, so compute scales with real
-    tokens. Emits the identical per-request ``RefreshOut`` contract as
-    :func:`serve_refresh` (block hidden [R, Sb, D] + per-slot packed cache),
-    which is kept as the correctness oracle for this path."""
-    if cfg.family not in ATTN_FAMILIES or cfg.frontend_dim:
+    tokens. Attention families run the segment-masked varlen attention
+    stream; SSM/hybrid families run the segment-reset varlen SSD scan (jnp
+    associative-scan fallback or the Pallas ``kernels/ssm_scan`` kernel).
+    Emits the identical per-request ``RefreshOut`` contract as
+    :func:`serve_refresh` (block hidden [R, Sb, D] + per-slot cache), which
+    is kept as the correctness oracle for every family on this path."""
+    if cfg.frontend_dim:
         raise NotImplementedError(
-            f"packed refresh supports text attention families, not "
-            f"{cfg.name} ({cfg.family})")
+            f"packed refresh needs a text-only token stream; "
+            f"{cfg.name} ({cfg.family}) carries a modality frontend")
     x = LM.embed_tokens(params["embed"], flat_tokens[None])   # [1, T, D]
     x = L.constrain(x, "act3d")
-    h, packed, _ = T.forward_full_packed(
-        params["stack"], cfg, x, positions[None], seg_ids[None],
-        token_valid[None], cu_seqlens, seq_lens, block_start, serve)
+    if cfg.family in ATTN_FAMILIES:
+        h, cache, _ = T.forward_full_packed(
+            params["stack"], cfg, x, positions[None], seg_ids[None],
+            token_valid[None], cu_seqlens, seq_lens, block_start, serve)
+    elif cfg.family == "ssm":
+        ccfg = _serve_chunk_cfg(cfg, serve.block_size)
+        use_k = bool(serve.use_flash_refresh or serve.use_flash_kernel)
+
+        def body(c, p):
+            out, st, hi = S.mamba_block_packed(
+                p, c, ccfg, seg_ids, positions, cu_seqlens, block_start,
+                use_kernel=use_k)
+            return out, (st, hi)
+
+        h, (st, hi) = jax.lax.scan(body, x, params["stack"])
+        cache = S.SSMCache(state=st, conv=hi)
+    else:  # hybrid
+        ccfg = _serve_chunk_cfg(cfg, serve.block_size)
+        h, cache = HY.forward_full_packed(
+            params["stack"], ccfg, x, positions[None], seg_ids[None],
+            token_valid[None], cu_seqlens, seq_lens, block_start, serve)
     hn = _final(params, cfg, h)[0]                            # [T, D]
-    Sb = serve.block_size
-    rows = jnp.clip(
-        cu_seqlens[:, None] + block_start[:, None]
-        + jnp.arange(Sb, dtype=jnp.int32)[None], 0, hn.shape[0] - 1)
-    return RefreshOut(block_hidden=hn[rows], cache=packed)
+    rows = T.packed_block_rows(cu_seqlens, block_start, serve.block_size,
+                               hn.shape[0])
+    return RefreshOut(block_hidden=hn[rows], cache=cache)
 
 
 # ---------------------------------------------------------------------------
 # serving: Reuse
 # ---------------------------------------------------------------------------
+
+def _ssm_reuse(params: dict, cfg: ModelConfig, xb: jax.Array, cache):
+    """Reuse-phase SSM decode over the layer stack, shared by the padded and
+    packed paths — the recurrence is block-exact per request, so both
+    execute the identical scan (only the batch geometry differs)."""
+    def body(c, scanned):
+        p, st, hi = scanned
+        return S.mamba_decode_block(p, c, cfg, st, hi), None
+    h, _ = jax.lax.scan(body, xb, (params["stack"], cache.state, cache.conv))
+    return h
+
 
 def serve_reuse_packed(
     params: dict,
@@ -216,21 +246,31 @@ def serve_reuse_packed(
     """Token-packed Reuse (whole-iteration packing): the iteration's R active
     blocks run as ONE ragged ``[R·Sb]`` query stream against their gathered
     slot caches (``Tq = R·Sb`` rounded to the token bucket by the engine —
-    never a pow2 batch bucket). Emits the flat ``[Tq, D]`` final-normed
-    hidden stream the packed logit stage consumes directly; the padded
-    :func:`serve_reuse` is kept as the correctness oracle, same policy as
-    Refresh."""
-    if cfg.family not in ATTN_FAMILIES or cfg.frontend_dim:
+    never a pow2 batch bucket). Attention families run the flat varlen
+    cross-attention; SSM blocks decode recurrently from their cached states
+    (block-exact — the packed win is the exact request count); hybrids
+    combine both with a causal shared block. Emits the flat ``[Tq, D]``
+    final-normed hidden stream the packed logit stage consumes directly; the
+    padded :func:`serve_reuse` is kept as the correctness oracle for every
+    family, same policy as Refresh."""
+    if cfg.frontend_dim:
         raise NotImplementedError(
-            f"packed reuse supports text attention families, not "
-            f"{cfg.name} ({cfg.family})")
+            f"packed reuse needs a text-only token stream; "
+            f"{cfg.name} ({cfg.family}) carries a modality frontend")
     Sb = serve.block_size
     Tq = flat_tokens.shape[0]
     R = Tq // Sb
     xb = LM.embed_tokens(params["embed"], flat_tokens.reshape(R, Sb))
-    h = T.forward_block_packed(params["stack"], cfg, xb,
-                               flat_positions.reshape(R, Sb), cache,
-                               serve=serve)
+    if cfg.family in ATTN_FAMILIES:
+        h = T.forward_block_packed(params["stack"], cfg, xb,
+                                   flat_positions.reshape(R, Sb), cache,
+                                   serve=serve)
+    elif cfg.family == "ssm":
+        h = _ssm_reuse(params, cfg, xb, cache)
+    else:  # hybrid
+        h = HY.forward_block_packed(params["stack"], cfg, xb,
+                                    flat_positions.reshape(R, Sb), cache,
+                                    serve=serve)
     return _final(params, cfg, h).reshape(Tq, -1)
 
 
@@ -247,11 +287,7 @@ def serve_reuse(
         h = T.forward_block(params["stack"], cfg, xb, block_positions, cache,
                             serve=serve, mask_mode=mask_mode(cfg))
     elif cfg.family == "ssm":
-        def body(c, scanned):
-            p, st, hi = scanned
-            return S.mamba_decode_block(p, c, cfg, st, hi), None
-        h, _ = jax.lax.scan(body, xb,
-                            (params["stack"], cache.state, cache.conv))
+        h = _ssm_reuse(params, cfg, xb, cache)
     else:  # hybrid
         h = HY.forward_block(params["stack"], cfg, xb, block_positions, cache,
                              serve=serve)

@@ -112,24 +112,76 @@ def forward_full(
     return x, cache
 
 
-def forward_block(
+def forward_full_packed(
     params: dict,
     cfg: ModelConfig,
-    xb: jax.Array,              # [B, Sb, D]
-    block_positions: jax.Array,
-    cache: HybridCache,
-    *,
+    x: jax.Array,               # [1, T, D] embedded packed stream
+    positions: jax.Array,       # [1, T] int32 (position within owning request)
+    seg_ids: jax.Array,         # [1, T] int32 ascending request id
+    token_valid: jax.Array,     # [1, T] bool
+    cu_seqlens: jax.Array,      # [R] int32 flat start offset per request
+    seq_lens: jax.Array,        # [R] int32 true length per request
+    block_start: jax.Array,     # [R] int32 block offset within the request
     serve: T.ServeContext,
-) -> jax.Array:
-    cos, sin = L.rope_tables(block_positions, cfg.resolved_head_dim, cfg.rope_theta)
+) -> Tuple[jax.Array, HybridCache]:
+    """Token-packed hybrid Refresh (§4.1 flattened engine, scan families).
+
+    One ragged ``[T, ...]`` stream replaces the padded ``[B, S]`` batch for
+    BOTH sublayer kinds: the Mamba2 layers run the segment-reset varlen SSD
+    scan (state zeroed at each request boundary, per-request state/conv
+    capture in-stream) and the shared attention block runs the causal
+    segment-masked varlen path with in-place select/pack. Emits the same
+    (hidden [1, T, D], :class:`HybridCache`) contract as the padded
+    :func:`forward_full` oracle."""
+    _, T_len, _ = x.shape
+    cos, sin = L.rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    grouped, tail_p = _split_groups(params["mamba"], cfg)
+    n_groups, itv, tail = group_shape(cfg)
+    not_local = jnp.asarray(False)
+    use_k = bool(serve.use_flash_refresh or serve.use_flash_kernel)
+    geom = T.packed_refresh_geometry(cu_seqlens, seq_lens, block_start,
+                                     T_len, serve)
+
+    def mamba_body(carry, p):
+        out, st, hi = S.mamba_block_packed(
+            p, carry, cfg, seg_ids[0], positions[0], cu_seqlens, block_start,
+            use_kernel=use_k)
+        return out, (st, hi)
+
+    def group_body(carry, pg):
+        h, ys = jax.lax.scan(mamba_body, carry, pg)
+        h, packed, _aux = T._layer_full_packed(
+            params["shared"], h, cfg, positions, seg_ids, token_valid,
+            cos, sin, not_local, serve, cu_seqlens, *geom,
+            mask_mode="causal")
+        return h, (ys, packed)
+
+    x, (g_ys, packed) = jax.lax.scan(group_body, x, grouped)
+    t_ys = None
+    if tail:
+        x, t_ys = jax.lax.scan(mamba_body, x, tail_p)
+
+    states = jax.tree.map(
+        lambda a: a.reshape((n_groups * itv,) + a.shape[2:]), g_ys)
+    if tail:
+        states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), states, t_ys)
+    return x, HybridCache(ssm_state=states[0], conv=states[1], kv=packed)
+
+
+def _block_scan(params: dict, cfg: ModelConfig, xb: jax.Array,
+                cache: HybridCache, attn) -> jax.Array:
+    """Shared Reuse-phase scaffolding for the padded and packed paths: the
+    grouped Mamba decode + shared attention/MLP scan over the cache layout,
+    with the attention sublayer injected (``attn(h, ck, cv, cpos, cval)``)
+    — the single place the group/tail structure lives, so the two paths
+    cannot drift."""
     n_groups, itv, tail = group_shape(cfg)
     grouped, tail_p = _split_groups(params["mamba"], cfg)
-    st = cache.ssm_state.reshape((n_groups, itv) + cache.ssm_state.shape[1:]) \
-        if not tail else cache.ssm_state[: n_groups * itv].reshape(
-            (n_groups, itv) + cache.ssm_state.shape[1:])
+    st = cache.ssm_state[: n_groups * itv].reshape(
+        (n_groups, itv) + cache.ssm_state.shape[1:])
     cv = cache.conv[: n_groups * itv].reshape(
         (n_groups, itv) + cache.conv.shape[1:])
-    not_local = jnp.asarray(False)
 
     def mamba_body(carry, scanned):
         p, state, hist = scanned
@@ -138,10 +190,7 @@ def forward_block(
     def group_body(carry, scanned):
         pg, stg, cvg, ck, cvv, cpos, cval = scanned
         h, _ = jax.lax.scan(mamba_body, carry, (pg, stg, cvg))
-        h = T.reuse_attention_layer(
-            params["shared"], h, cfg, cos, sin, block_positions, not_local,
-            ck, cvv, cpos, cval, "causal", use_kernel=serve.use_flash_kernel,
-            concat=serve.reuse_concat)
+        h = attn(h, ck, cvv, cpos, cval)
         h2 = L.rms_norm(h, params["shared"]["mlp_norm"], cfg.rms_eps)
         y, _ = T._mlp(params["shared"], h2, cfg)
         return h + y, None
@@ -154,3 +203,64 @@ def forward_block(
         t_cv = cache.conv[n_groups * itv:]
         xb, _ = jax.lax.scan(mamba_body, xb, (tail_p, t_st, t_cv))
     return xb
+
+
+def forward_block(
+    params: dict,
+    cfg: ModelConfig,
+    xb: jax.Array,              # [B, Sb, D]
+    block_positions: jax.Array,
+    cache: HybridCache,
+    *,
+    serve: T.ServeContext,
+) -> jax.Array:
+    cos, sin = L.rope_tables(block_positions, cfg.resolved_head_dim,
+                             cfg.rope_theta)
+    not_local = jnp.asarray(False)
+
+    def attn(h, ck, cvv, cpos, cval):
+        return T.reuse_attention_layer(
+            params["shared"], h, cfg, cos, sin, block_positions, not_local,
+            ck, cvv, cpos, cval, "causal", use_kernel=serve.use_flash_kernel,
+            concat=serve.reuse_concat)
+
+    return _block_scan(params, cfg, xb, cache, attn)
+
+
+def forward_block_packed(
+    params: dict,
+    cfg: ModelConfig,
+    xb: jax.Array,              # [R, Sb, D] the iteration's active blocks
+    block_positions: jax.Array,  # [R, Sb] absolute positions
+    cache: HybridCache,          # gathered slot caches, batch axis = R
+    *,
+    serve: T.ServeContext,
+) -> jax.Array:
+    """Token-packed hybrid Reuse (whole-iteration packing).
+
+    The Mamba2 decode recurrence is already block-exact per request (no
+    raggedness inside a ``Sb``-token block), so the packed win is the batch
+    geometry: R runs exactly as scheduled (token-bucket granular — never a
+    pow2 request bucket) and, under ``use_flash_kernel``, the shared
+    attention block launches ONE flat causal cross-attention dispatch over
+    the ``[R·Sb]`` query stream with non-owned KV tiles skipped in-kernel —
+    the same contract as the attention families' packed Reuse."""
+    cos, sin = L.rope_tables(block_positions, cfg.resolved_head_dim,
+                             cfg.rope_theta)
+    R, Sb, _ = xb.shape
+    not_local = jnp.asarray(False)
+    Cr = cache.kv.k.shape[3]
+    q_seg = jnp.repeat(jnp.arange(R, dtype=jnp.int32), Sb)
+    kv_seg = jnp.repeat(jnp.arange(R, dtype=jnp.int32), Cr + Sb)
+
+    def attn(h, ck, cvv, cpos, cval):
+        if serve.use_flash_kernel:
+            return T._reuse_attention_layer_flat(
+                params["shared"], h, cfg, cos, sin, block_positions,
+                not_local, ck, cvv, cpos, cval, q_seg, kv_seg,
+                mask_mode="causal")
+        return T.reuse_attention_layer(
+            params["shared"], h, cfg, cos, sin, block_positions, not_local,
+            ck, cvv, cpos, cval, "causal", concat=serve.reuse_concat)
+
+    return _block_scan(params, cfg, xb, cache, attn)

@@ -10,6 +10,15 @@ XLA/TPU lowers to MXU matmuls. Serving splits into:
   state (the Reuse phase). O(block) per denoising step, O(1) in context len —
   this is what makes the long_500k cell trivially sub-quadratic for SSM archs.
 
+Token-packed serving (§4.1 flattened engine) adds the varlen counterparts:
+``mamba_block_packed`` runs one ragged ``[T_total]`` stream carrying every
+Refresh request of an iteration — the causal conv and the SSD recurrence
+reset at segment boundaries (``_causal_conv_packed`` / ``varlen_ssd_scan``
+jnp fallback / the Pallas ``kernels/ssm_scan`` segment-scan kernel) and the
+serving cache is captured per request in-stream, so scan-family compute
+scales with real tokens instead of the padded ``[B, max_seq_len]``
+rectangle. The padded ``mamba_block`` path is the correctness oracle.
+
 The paper's head-centric sparse KV (C3) is inapplicable here (no KV to
 sparsify) — see DESIGN.md §5; C1 (logit budgeting) and C2 (phase scheduling)
 still apply unchanged.
@@ -130,6 +139,45 @@ def ssd_scan(
     return y, final_state.astype(f32)
 
 
+def varlen_ssd_scan(
+    xh: jax.Array,        # [T, H, P] packed stream
+    dt: jax.Array,        # [T, H]    (post-softplus, > 0)
+    A: jax.Array,         # [H]       (negative)
+    Bm: jax.Array,        # [T, N]
+    Cm: jax.Array,        # [T, N]
+    reset: jax.Array,     # [T] bool  (True on each segment's first token)
+    cap_rows: jax.Array,  # [R] int32 (state captured AFTER this row; -1 = 0)
+) -> Tuple[jax.Array, jax.Array]:
+    """Segment-reset SSD scan over a packed ``[T]`` stream (jnp fallback to
+    the Pallas ``kernels/ssm_scan`` kernel).
+
+    The recurrence ``h_t = a_t·h_{t-1} + b_t`` (``a_t = exp(dt_t·A)``,
+    ``b_t = dt_t·B_t⊗x_t``) is run as one token-level associative scan with
+    ``a_t`` zeroed at segment starts, so requests packed back-to-back in the
+    stream cannot leak state into each other — exactly the per-request scan
+    the padded oracle runs, keyed by cu_seqlens instead of a batch axis.
+    Returns (y [T, H, P], captured states [R, H, P, N] f32). Unlike the
+    kernel this fallback materializes per-token states ([T, H, P, N] f32 —
+    what lets it capture at arbitrary rows), which is why the kernel is the
+    production path.
+    """
+    f32 = jnp.float32
+    dtf = dt.astype(f32)
+    a = jnp.where(reset[:, None], 0.0, jnp.exp(dtf * A.astype(f32)[None, :]))
+    b = jnp.einsum("th,tn,thp->thpn", dtf, Bm.astype(f32), xh.astype(f32))
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar[..., None, None] + br
+
+    _, h_all = jax.lax.associative_scan(comb, (a, b), axis=0)
+    y = jnp.einsum("tn,thpn->thp", Cm.astype(f32), h_all)
+    cap = jnp.clip(cap_rows, 0, xh.shape[0] - 1)
+    st = jnp.where((cap_rows >= 0)[:, None, None, None], h_all[cap], 0.0)
+    return y.astype(xh.dtype), st
+
+
 def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
                  history: jax.Array | None = None):
     """Depthwise causal conv over [B, S, ch]; w: [k, ch].
@@ -199,6 +247,78 @@ def mamba_block(p, x, cfg: ModelConfig, conv_hist=None, init_state=None,
     if return_state:
         return out, state_out, new_hist
     return out
+
+
+def _causal_conv_packed(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                        seg: jax.Array):
+    """Segment-masked depthwise causal conv over a packed stream.
+
+    xbc: [1, T, ch]; w: [k, ch]; seg: [T] int32 request ids. Taps that would
+    reach across a segment boundary contribute zero — every request starts
+    from the same empty conv history as the padded per-request path.
+    """
+    k = w.shape[0]
+    T = xbc.shape[1]
+    out = xbc * w[k - 1][None, None]
+    for i in range(k - 1):
+        off = k - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (off, 0), (0, 0)))[:, :T]
+        sseg = jnp.pad(seg, (off, 0), constant_values=-1)[:T]
+        ok = (sseg == seg)[None, :, None]
+        out = out + jnp.where(ok, shifted, 0.0) * w[i][None, None]
+    return jax.nn.silu(out + b[None, None])
+
+
+def mamba_block_packed(p, x, cfg: ModelConfig, seg_ids, positions,
+                       cu_seqlens, block_start, use_kernel: bool = False):
+    """One Mamba2 block over a token-packed ``[1, T, D]`` ragged stream.
+
+    The scan-family side of the §4.1 flattened engine: requests are
+    delimited by ``seg_ids``/``cu_seqlens`` (``positions`` restart at 0 per
+    request), the causal conv and the SSD recurrence both reset at segment
+    boundaries, and the serving cache (recurrent state + conv history at the
+    request's active block) is captured per request — identical semantics to
+    the padded ``mamba_block(capture_at=block_start)`` oracle, including its
+    chunk-floor state capture (the state *entering* the ``ssm_chunk`` that
+    contains ``block_start``). Returns (out [1, T, D],
+    state_at [R, H, P, N] f32, hist_at [R, ck-1, ch]).
+    """
+    x = L.constrain(x, "act3d")
+    h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+    z, xbc_pre, dt = _project(p, h, cfg)
+    xbc = _causal_conv_packed(xbc_pre, p["conv_w"], p["conv_b"], seg_ids)
+    xin, Bm, Cm = _split_xbc(xbc, cfg)
+    T = x.shape[1]
+    xh = xin[0].reshape(T, cfg.ssm_heads, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    reset = positions == 0
+    chunk = cfg.ssm_chunk
+    # oracle capture contract: the state ENTERING the chunk that holds
+    # block_start = the state after within-request row c0·chunk − 1
+    cap_pos = (block_start // chunk) * chunk
+    cap_rows = jnp.where(cap_pos > 0, cu_seqlens + cap_pos - 1, -1)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, state_at = kops.ssm_segment_scan(
+            xh, dt[0], A, Bm[0], Cm[0], reset, cap_rows)
+    else:
+        y, state_at = varlen_ssd_scan(
+            xh, dt[0], A, Bm[0], Cm[0], reset, cap_rows)
+    y = y.astype(x.dtype)
+    y = y + p["D_skip"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(1, T, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   p["gate_norm"], cfg.rms_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # conv history entering the block: the ck-1 pre-conv rows before
+    # block_start, zeros where they precede the segment start (the padded
+    # path's zero front-padding)
+    ck = cfg.ssm_conv_kernel
+    back = jnp.arange(-(ck - 1), 0, dtype=jnp.int32)
+    idx = block_start[:, None] + back[None]               # within-request
+    rows = jnp.clip(cu_seqlens[:, None] + idx, 0, T - 1)
+    hist_at = jnp.where((idx >= 0)[..., None], xbc_pre[0][rows], 0)
+    return out, state_at, hist_at
 
 
 def mamba_decode_block(p, xb, cfg: ModelConfig, state, conv_hist):

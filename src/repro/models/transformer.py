@@ -193,6 +193,7 @@ def _attend_packed_stream(
     cfg: ModelConfig,
     is_local: jax.Array,
     serve: ServeContext,
+    mask_mode: str = "bidirectional",
 ) -> jax.Array:
     """Segment-masked attention over the flat packed stream (jnp fallback to
     the Pallas varlen kernel).
@@ -213,7 +214,7 @@ def _attend_packed_stream(
         return L.attention(
             q, k, v, q_pos=positions, kv_pos=positions,
             kv_valid=token_valid, q_seg=seg_ids, kv_seg=seg_ids,
-            mask_mode="bidirectional", window=cfg.sliding_window,
+            mask_mode=mask_mode, window=cfg.sliding_window,
             is_local=is_local, attn_softcap=cfg.attn_softcap, q_chunk=c)
     nq = T_len // c
     scale = dh ** -0.5
@@ -237,6 +238,8 @@ def _attend_packed_stream(
         if cfg.attn_softcap:
             z = cfg.attn_softcap * jnp.tanh(z / cfg.attn_softcap)
         ok = (qsc[:, None] == ksc[None, :]) & kvc[None, :]
+        if mask_mode == "causal":
+            ok = ok & (qpc[:, None] >= kpc[None, :])
         if cfg.sliding_window:
             dist = jnp.abs(qpc[:, None] - kpc[None, :])
             ok = ok & jnp.where(is_local, dist <= cfg.sliding_window, True)
@@ -263,6 +266,7 @@ def _layer_full_packed(
     valid_sel: jax.Array,      # [R, S_sel]
     block_rows: jax.Array,     # [R, Sb] flat rows of each active block
     in_block: jax.Array,       # [R, S_sel]
+    mask_mode: str = "bidirectional",
 ) -> Tuple[jax.Array, PackedKV, jax.Array]:
     x = L.constrain(x, "act3d")
     h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
@@ -272,10 +276,12 @@ def _layer_full_packed(
         attn_out = kops.flash_varlen_attention(
             q[0], k[0], v[0], seg_ids=seg_ids[0], positions=positions[0],
             kv_valid=token_valid[0], window=cfg.sliding_window,
-            is_local=is_local, softcap=cfg.attn_softcap)[None]
+            is_local=is_local, causal=mask_mode == "causal",
+            softcap=cfg.attn_softcap)[None]
     else:
         attn_out = _attend_packed_stream(
-            q, k, v, positions, seg_ids, token_valid, cfg, is_local, serve)
+            q, k, v, positions, seg_ids, token_valid, cfg, is_local, serve,
+            mask_mode=mask_mode)
     x = x + jnp.einsum("bshe,hed->bsd", attn_out, p["wo"])
     h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
     y, aux = _mlp(p, h2, cfg)
@@ -292,6 +298,34 @@ def _layer_full_packed(
         mode=serve.selection, exclude=in_block | ~valid_sel,
         use_kernel=bool(serve.use_flash_refresh or serve.use_flash_kernel))
     return x, packed, aux
+
+
+def packed_block_rows(cu_seqlens, block_start, block_size: int,
+                      total_len: int):
+    """Flat stream rows of each request's active block ([R, Sb], clipped so
+    padding requests gather in-bounds)."""
+    return jnp.clip(
+        cu_seqlens[:, None] + block_start[:, None]
+        + jnp.arange(block_size, dtype=jnp.int32)[None], 0, total_len - 1)
+
+
+def packed_refresh_geometry(cu_seqlens, seq_lens, block_start, total_len,
+                            serve: ServeContext):
+    """Per-request gather geometry of a packed Refresh stream, shared by the
+    attention and hybrid packed forwards: the select/pack view rows
+    (``gather_rows``/``valid_sel``), each active block's flat rows, and the
+    in-block exclusion mask. Returns
+    (gather_rows [R, S_sel], valid_sel [R, S_sel], block_rows [R, Sb],
+    in_block [R, S_sel])."""
+    S_sel = serve.max_seq_len
+    Sb = serve.block_size
+    ar = jnp.arange(S_sel, dtype=jnp.int32)
+    gather_rows = jnp.clip(cu_seqlens[:, None] + ar[None], 0, total_len - 1)
+    valid_sel = ar[None] < seq_lens[:, None]
+    block_rows = packed_block_rows(cu_seqlens, block_start, Sb, total_len)
+    in_block = (ar[None] >= block_start[:, None]) & \
+               (ar[None] < block_start[:, None] + Sb)
+    return gather_rows, valid_sel, block_rows, in_block
 
 
 def forward_full_packed(
@@ -315,19 +349,10 @@ def forward_full_packed(
     """
     assert serve.max_seq_len > 0, "packed path needs ServeContext.max_seq_len"
     _, T, _ = x.shape
-    S_sel = serve.max_seq_len
-    Sb = serve.block_size
     cos, sin = L.rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
     flags = L.layer_flags(cfg)
-
-    ar = jnp.arange(S_sel, dtype=jnp.int32)
-    gather_rows = jnp.clip(cu_seqlens[:, None] + ar[None], 0, T - 1)
-    valid_sel = ar[None] < seq_lens[:, None]
-    block_rows = jnp.clip(
-        cu_seqlens[:, None] + block_start[:, None]
-        + jnp.arange(Sb, dtype=jnp.int32)[None], 0, T - 1)
-    in_block = (ar[None] >= block_start[:, None]) & \
-               (ar[None] < block_start[:, None] + Sb)
+    gather_rows, valid_sel, block_rows, in_block = packed_refresh_geometry(
+        cu_seqlens, seq_lens, block_start, T, serve)
 
     def body(carry, scanned):
         p, is_local = scanned
@@ -391,8 +416,10 @@ def forward_block_packed(
     ``[retain ; live block]`` KV stream, non-owned KV tiles skipped in-kernel
     (FLOPs ~ R·Sb·(retain+Sb), not R²·...). Without the kernel, the layer
     falls back to the exact split-attention math batched over the same R —
-    identical FLOPs, XLA-level dispatch. Bidirectional only (every family on
-    the packed path is a diffusion LM)."""
+    identical FLOPs, XLA-level dispatch. Bidirectional only (the attention
+    families are bidirectional diffusion LMs; the causal hybrid family has
+    its own packed Reuse in :func:`repro.models.hybrid.forward_block_packed`
+    built on the same flat dispatch)."""
     R, Sb, D = xb.shape
     cos, sin = L.rope_tables(block_positions, cfg.resolved_head_dim,
                              cfg.rope_theta)
@@ -423,13 +450,15 @@ def forward_block_packed(
 
 def _reuse_attention_layer_flat(p, x, cfg: ModelConfig, cos, sin,
                                 block_positions, is_local, ck, cv, cpos,
-                                cvalid, q_seg, kv_seg):
+                                cvalid, q_seg, kv_seg,
+                                mask_mode: str = "bidirectional"):
     """One packed-Reuse attention sublayer as a single flat varlen dispatch.
 
     x: [R, Sb, D]; ck/cv: [R, K, Cr, dh] gathered slot caches. The KV stream
     interleaves each request's retained cache with its live block KV —
     requests stay contiguous (segment-ascending), so the cross kernel's
-    tile-skip bounds compute by Σ (retain + Sb) per owning request."""
+    tile-skip bounds compute by Σ (retain + Sb) per owning request.
+    ``mask_mode="causal"`` serves the hybrid family's causal shared block."""
     R, Sb, _ = x.shape
     K, Cr, dh = ck.shape[1], ck.shape[2], ck.shape[3]
     h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
@@ -454,7 +483,7 @@ def _reuse_attention_layer_flat(p, x, cfg: ModelConfig, cos, sin,
         q_seg=q_seg, q_pos=block_positions.reshape(-1),
         kv_seg=kv_seg, kv_pos=pos_s, kv_valid=valid_s,
         window=cfg.sliding_window, is_local=is_local,
-        softcap=cfg.attn_softcap)
+        causal=mask_mode == "causal", softcap=cfg.attn_softcap)
     attn_out = out.reshape(R, Sb, H, dh)
     return x + jnp.einsum("bshe,hed->bsd", attn_out, p["wo"])
 

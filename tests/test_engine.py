@@ -98,3 +98,111 @@ def test_kv_pool_isolation():
 def test_ssm_arch_serves():
     eng, reqs, stats = serve_some(BASE, n=3, arch="mamba2-130m")
     assert all(r.state == State.FINISHED for r in reqs)
+
+
+def test_zero_refresh_cap_serves_padded_path():
+    """max_refresh_per_iter=0 = unlimited (normalized refresh_slots): the
+    padded engine must chunk by max_slots and serve to completion rather
+    than livelock on an all-deferred plan."""
+    serve = dataclasses.replace(BASE, max_refresh_per_iter=0)
+    eng, reqs, stats = serve_some(serve, n=4)
+    assert all(r.state == State.FINISHED for r in reqs)
+
+
+def test_run_raises_on_never_admittable_request():
+    """A request whose total_len exceeds the token budget can never be
+    admitted; run() must surface the stall instead of spinning or silently
+    breaking with bogus stats."""
+    serve = dataclasses.replace(BASE, max_num_batched_tokens=16)
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0)
+    eng.submit(np.zeros(30, np.int32), gen_len=16, arrival=0.0, rid=0)
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()
+
+
+def test_run_raises_when_running_requests_all_deferred():
+    """Regression for the silent ``break``: an iteration that makes no
+    progress while unfinished RUNNING requests remain (and no future
+    arrival can unblock them) must raise, not exit recording bogus stats.
+    The post-fix scheduler cannot produce this state itself, so force it
+    by deferring every running request at plan time."""
+    from repro.core.scheduler import IterationPlan
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0)
+    eng.submit(np.zeros(16, np.int32), gen_len=16, arrival=0.0, rid=0)
+    real_plan = eng.scheduler.plan
+
+    def defer_after_admission(now):
+        if not eng.scheduler.running:
+            return real_plan(now)
+        return IterationPlan(deferred=list(eng.scheduler.running))
+
+    eng.scheduler.plan = defer_after_admission
+    with pytest.raises(RuntimeError, match="running"):
+        eng.run()
+    assert eng.scheduler.has_work          # nothing was silently dropped
+
+
+def _jit_cache_keys(eng):
+    return {
+        "refresh": set(eng._refresh_jit),
+        "refresh_packed": set(eng._refresh_packed_jit),
+        "reuse": set(eng._reuse_jit),
+        "reuse_packed": set(eng._reuse_packed_jit),
+        "decode": set(eng._decode_jit),
+        "decode_packed": set(eng._decode_packed_jit),
+    }
+
+
+def _key_bound(keys):
+    """Componentwise max of a set of int or tuple jit-cache keys."""
+    tup = [(k,) if isinstance(k, int) else tuple(k) for k in keys]
+    if not tup:
+        return None
+    return tuple(max(t[i] for t in tup) for i in range(len(tup[0])))
+
+
+@pytest.mark.parametrize("varlen,mrpi,sched", [
+    (True, 0, "phase"), (True, 3, "phase"), (False, 0, "phase"),
+    (False, 3, "phase"), (True, 2, "request")])
+def test_warmup_covers_runtime_worst_case_buckets(varlen, mrpi, sched):
+    """Warmup bucket audit: after warmup, no bucket the runtime requests may
+    exceed the worst case already compiled — componentwise over every jit
+    cache — so the expensive worst-case compile can never fire mid-serve.
+    Exercises the normalized 0-means-unlimited refresh cap, a non-pow2 cap
+    (pow2_bucket(3) = 4 > 3, the old loop bound), and the request-level
+    scheduler whose whole-batch admission makes the fused packed dispatch
+    span up to max_slots refreshes regardless of max_refresh_per_iter."""
+    serve = dataclasses.replace(BASE, varlen_pack=varlen, token_bucket=64,
+                                max_refresh_per_iter=mrpi, scheduler=sched)
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0)
+    eng.warmup()
+    warmed = {n: _key_bound(k) for n, k in _jit_cache_keys(eng).items()}
+    rng = np.random.default_rng(1)
+    for i in range(9):
+        eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                int(rng.integers(8, 40))),
+                   gen_len=16, arrival=0.0, rid=i)
+    eng.run()
+    for name, keys in _jit_cache_keys(eng).items():
+        bound = warmed[name]
+        if bound is None:
+            assert not keys, f"{name}: compiled without any warmup"
+            continue
+        after = _key_bound(keys)
+        assert all(a <= w for a, w in zip(after, bound)), \
+            (name, after, bound)
+
+
+def test_warmup_survives_sub_block_token_budget():
+    """max_num_batched_tokens < block_size is a degenerate config: warmup
+    must still bound-compile without crashing (the engine then surfaces the
+    serve-time stall explicitly, tested above)."""
+    serve = dataclasses.replace(BASE, max_num_batched_tokens=4,
+                                varlen_pack=True, token_bucket=64)
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0)
+    eng.warmup()
+    assert eng._refresh_packed_jit and eng._reuse_packed_jit

@@ -291,14 +291,161 @@ def test_windowed_stream_attention_matches_plain():
                                np.asarray(ref_out)[val], atol=2e-5)
 
 
-def test_packed_refresh_rejects_ssm():
-    cfg = reduced(ARCHS["mamba2-130m"])
+def test_packed_refresh_rejects_frontend():
+    """Only modality-frontend archs remain on the padded oracle — their
+    frontend rows are rectangular by construction."""
+    cfg = reduced(ARCHS["internvl2-76b"])
     params = BB.init_params(cfg, KEY)
     ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
     z = jnp.zeros((32,), jnp.int32)
     with pytest.raises(NotImplementedError):
         BB.serve_refresh_packed(params, cfg, z, z, z, jnp.ones((32,), bool),
                                 z[:1], z[:1], z[:1], ctx)
+
+
+# ---------------------------------------------------------------------------
+# SSM/hybrid: segment-reset varlen scan vs the padded oracle
+# ---------------------------------------------------------------------------
+
+SCAN_FAMS = ("mamba2-130m", "zamba2-7b")
+
+
+@pytest.mark.parametrize("arch", SCAN_FAMS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_packed_refresh_matches_padded_scan_families(arch, use_kernel):
+    """serve_refresh_packed for SSM/hybrid: block hidden AND the captured
+    serving cache (recurrent state + conv history + hybrid packed KV
+    positions) must reproduce the padded oracle on ragged batches."""
+    cfg = reduced(ARCHS[arch])
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=24, q_chunk=32, max_seq_len=96)
+    ctx_pk = dataclasses.replace(ctx, use_flash_kernel=use_kernel)
+    rng = np.random.default_rng(17)
+    for trial in range(2):
+        lens = [int(x) for x in rng.integers(12, 96, size=3)]
+        bstarts = np.array([((L - 8) // 8) * 8 for L in lens], np.int32)
+        tok_pad, valid_pad, flat, pos, seg, val, cu, sl = _ragged_stream(
+            lens, 96, cfg.vocab_size, seed=trial)
+        out_pad = BB.serve_refresh(
+            params, cfg, jnp.asarray(tok_pad), jnp.asarray(bstarts), ctx,
+            token_valid=jnp.asarray(valid_pad))
+        out_pk = BB.serve_refresh_packed(
+            params, cfg, jnp.asarray(flat), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(val), jnp.asarray(cu),
+            jnp.asarray(sl), jnp.asarray(bstarts), ctx_pk)
+        np.testing.assert_allclose(
+            np.asarray(out_pk.block_hidden, np.float32),
+            np.asarray(out_pad.block_hidden, np.float32), atol=1e-4)
+        c_pk, c_pad = out_pk.cache, out_pad.cache
+        st_pk = c_pk.state if arch == "mamba2-130m" else c_pk.ssm_state
+        st_pad = c_pad.state if arch == "mamba2-130m" else c_pad.ssm_state
+        np.testing.assert_allclose(np.asarray(st_pk), np.asarray(st_pad),
+                                   atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(c_pk.conv, np.float32),
+            np.asarray(c_pad.conv, np.float32), atol=1e-5)
+        if arch == "zamba2-7b":
+            pos_eq = (np.asarray(c_pk.kv.pos)
+                      == np.asarray(c_pad.kv.pos)).mean()
+            assert pos_eq > 0.99, pos_eq
+
+
+@pytest.mark.parametrize("arch", SCAN_FAMS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_packed_reuse_matches_padded_scan_families(arch, use_kernel):
+    """serve_reuse_packed for SSM/hybrid must reproduce the padded Reuse
+    oracle on the same refreshed caches (hybrid exercises the causal flat
+    cross-attention dispatch under use_kernel)."""
+    cfg = reduced(ARCHS[arch])
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=24, q_chunk=32, max_seq_len=96)
+    ctx_pk = dataclasses.replace(ctx, use_flash_kernel=use_kernel)
+    rng = np.random.default_rng(23)
+    lens = [int(x) for x in rng.integers(16, 96, size=3)]
+    bstarts = np.array([((L - 8) // 8) * 8 for L in lens], np.int32)
+    cache, btok, bpos = _refresh_cache(cfg, params, ctx, lens, bstarts)
+    h_pad = BB.serve_reuse(params, cfg, jnp.asarray(btok),
+                           jnp.asarray(bpos), cache, ctx)
+    h_pk = BB.serve_reuse_packed(
+        params, cfg, jnp.asarray(btok.reshape(-1)),
+        jnp.asarray(bpos.reshape(-1)), cache, ctx_pk)
+    np.testing.assert_allclose(
+        np.asarray(h_pk, np.float32).reshape(len(lens), 8, -1),
+        np.asarray(h_pad, np.float32), atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(1, 4))
+def test_varlen_ssd_scan_segment_reset_property(seed, n):
+    """cu_seqlens segment-reset property: the packed scan over a stream of n
+    concatenated requests equals n independent per-request scans — outputs
+    AND captured states at arbitrary rows (vs the sequential recurrence)."""
+    from repro.models.ssm import varlen_ssd_scan
+    H, P, N = 3, 4, 5
+    rng = np.random.default_rng(seed)
+    lens = [int(x) for x in rng.integers(3, 20, size=n)]
+    T_real = sum(lens)
+    tp = -(-T_real // 16) * 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    xh = jax.random.normal(ks[0], (tp, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (tp, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (tp, N))
+    Cm = jax.random.normal(ks[4], (tp, N))
+    reset = np.zeros(tp, bool)
+    cu, off = [], 0
+    for L in lens:
+        reset[off] = True
+        cu.append(off)
+        off += L
+    reset[off:] = True                       # bucket padding self-resets
+    cap_off = [int(rng.integers(0, L)) for L in lens]
+    cap_rows = np.array([c + o for c, o in zip(cu, cap_off)], np.int32)
+    y, st = varlen_ssd_scan(xh, dt, A, Bm, Cm, jnp.asarray(reset),
+                            jnp.asarray(cap_rows))
+    # oracle: independent sequential recurrence per request
+    for j, (c, L) in enumerate(zip(cu, lens)):
+        state = np.zeros((H, P, N), np.float32)
+        for t in range(c, c + L):
+            a = np.exp(np.asarray(dt[t]) * np.asarray(A))
+            state = state * a[:, None, None] + np.einsum(
+                "h,n,hp->hpn", np.asarray(dt[t]), np.asarray(Bm[t]),
+                np.asarray(xh[t]))
+            yt = np.einsum("n,hpn->hp", np.asarray(Cm[t]), state)
+            np.testing.assert_allclose(np.asarray(y[t]), yt, atol=2e-4)
+            if t == cap_rows[j]:
+                np.testing.assert_allclose(np.asarray(st[j]), state,
+                                           atol=2e-4)
+
+
+def test_ssm_segment_scan_kernel_matches_fallback():
+    """The Pallas segment-scan kernel against the associative-scan fallback,
+    invariant to the chunk tiling (the in-kernel capture accumulation must
+    not depend on which chunk owns a capture row)."""
+    from repro.kernels import ops
+    from repro.models.ssm import varlen_ssd_scan
+    H, P, N, tp = 4, 4, 6, 96
+    rng = np.random.default_rng(2)
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    xh = jax.random.normal(ks[0], (tp, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (tp, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (tp, N))
+    Cm = jax.random.normal(ks[4], (tp, N))
+    reset = np.zeros(tp, bool)
+    for off in (0, 17, 40, 77):
+        reset[off] = True
+    cap_rows = np.array([-1, 16, 39, 55, 95], np.int32)
+    y_ref, st_ref = varlen_ssd_scan(xh, dt, A, Bm, Cm, jnp.asarray(reset),
+                                    jnp.asarray(cap_rows))
+    for chunk in (8, 16, 32, 48, 96):
+        y, st = ops.ssm_segment_scan(xh, dt, A, Bm, Cm, jnp.asarray(reset),
+                                     jnp.asarray(cap_rows), chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref, np.float32),
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                                   atol=2e-4)
+        assert not np.asarray(st[0]).any()   # -1 capture row = zero state
 
 
 # ---------------------------------------------------------------------------
@@ -352,11 +499,68 @@ def test_engine_packed_flash_kernel_path():
     assert stats.packed_refresh_calls > 0
 
 
-def test_engine_ssm_falls_back_to_padded_oracle():
-    _, reqs, stats = _serve_engine(SERVE, n=2, arch="mamba2-130m")
+@pytest.mark.parametrize("arch", SCAN_FAMS)
+def test_engine_scan_families_run_packed(arch):
+    """Acceptance: under varlen_pack an SSM and a hybrid config serve
+    Refresh AND Reuse with zero pow2-padded dispatches."""
+    cfg = reduced(ARCHS[arch])
+    eng = Engine(cfg, SERVE, seed=0)
+
+    def _boom(*a, **k):
+        raise AssertionError("pow2-padded dispatch on the packed path")
+
+    eng._run_refresh = _boom
+    eng._run_reuse = _boom
+    eng._decode_fn = _boom
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                    int(rng.integers(8, 40))),
+                       gen_len=16, arrival=0.0, rid=i) for i in range(3)]
+    stats = eng.run()
     assert all(r.state == State.FINISHED for r in reqs)
-    assert stats.packed_refresh_calls == 0
-    assert stats.padded_refresh_calls > 0
+    assert all((r.output_tokens() != eng.mask_id).all() for r in reqs)
+    assert stats.packed_refresh_calls > 0 and stats.padded_refresh_calls == 0
+    assert stats.packed_reuse_calls > 0 and stats.padded_reuse_calls == 0
+
+
+@pytest.mark.parametrize("arch", SCAN_FAMS)
+def test_engine_scan_families_packed_padded_same_totals(arch):
+    _, r_pk, s_pk = _serve_engine(SERVE, n=4, seed=3, arch=arch)
+    _, r_pd, s_pd = _serve_engine(
+        dataclasses.replace(SERVE, varlen_pack=False), n=4, seed=3, arch=arch)
+    assert s_pk.committed_tokens == s_pd.committed_tokens
+    assert all(r.state == State.FINISHED for r in r_pk + r_pd)
+    assert s_pk.refresh_tokens_real == s_pd.refresh_tokens_real
+    # the packed scan pays (at most) one token bucket over the real count;
+    # the padded oracle pays the pow2 rectangle
+    assert s_pk.refresh_tokens_exec < s_pd.refresh_tokens_exec
+    assert s_pk.refresh_waste <= s_pd.refresh_waste
+    assert s_pk.reuse_waste <= s_pd.reuse_waste
+
+
+def test_engine_fused_refresh_single_dispatch():
+    """The packed engine launches ONE fused refresh dispatch per iteration
+    even when the refresh set spans several max_refresh_per_iter chunks.
+    The request-level scheduler admits oversized refresh sets (the phase
+    scheduler caps them at refresh_slots), so it is what exercises a
+    multi-chunk layout."""
+    serve = dataclasses.replace(SERVE, scheduler="request")
+    eng, reqs, stats = _serve_engine(serve, n=6, seed=5, forbid_padded=True)
+    assert all(r.state == State.FINISHED for r in reqs)
+    n_refresh_iters = sum(1 for it in stats.iter_log if it["n_refresh"] > 0)
+    assert stats.packed_refresh_calls == n_refresh_iters
+    assert any(it["n_refresh"] > serve.max_refresh_per_iter
+               for it in stats.iter_log), \
+        "workload never exceeded one chunk — fusion untested"
+
+
+def test_engine_zero_refresh_cap_serves_to_completion():
+    """Acceptance: max_refresh_per_iter=0 (documented 0-means-unlimited)
+    must serve to completion instead of deferring every Refresh forever."""
+    serve0 = dataclasses.replace(SERVE, max_refresh_per_iter=0)
+    eng, reqs, stats = _serve_engine(serve0, n=5, forbid_padded=True)
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.packed_refresh_calls > 0
 
 
 # ---------------------------------------------------------------------------
@@ -446,8 +650,8 @@ def test_packed_reuse_matches_padded(arch, use_kernel):
             np.asarray(h_pad, np.float32), atol=2e-4)
 
 
-def test_packed_reuse_rejects_ssm():
-    cfg = reduced(ARCHS["mamba2-130m"])
+def test_packed_reuse_rejects_frontend():
+    cfg = reduced(ARCHS["internvl2-76b"])
     params = BB.init_params(cfg, KEY)
     ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
     z = jnp.zeros((16,), jnp.int32)
@@ -679,11 +883,15 @@ def test_budgeting_packed_tokens_buy_slots():
                        logit_mode="chunked")
     packed = dataclasses.replace(base, varlen_pack=True)
     assert max_exec_tokens(packed, cfg) < max_exec_tokens(base, cfg)
-    # families the engine cannot pack keep the padded reservation even under
-    # varlen_pack (the padded-oracle fallback executes the full rectangle)
+    # the scan families pack now (segment-reset varlen scan) and are billed
+    # by packed tokens; only modality-frontend archs keep the padded
+    # reservation under varlen_pack (the padded-oracle fallback executes
+    # the full rectangle)
     from repro.configs import get_config as _gc
     ssm_cfg = _gc("mamba2-130m")
-    assert max_exec_tokens(packed, ssm_cfg) == max_exec_tokens(base, ssm_cfg)
+    assert max_exec_tokens(packed, ssm_cfg) < max_exec_tokens(base, ssm_cfg)
+    vlm_cfg = _gc("internvl2-76b")
+    assert max_exec_tokens(packed, vlm_cfg) == max_exec_tokens(base, vlm_cfg)
     p_pad = plan_memory(cfg, base, 24 << 30)
     p_pk = plan_memory(cfg, packed, 24 << 30)
     assert p_pk.activation_bytes < p_pad.activation_bytes
@@ -709,9 +917,12 @@ def test_budgeting_bills_reuse_and_logit_by_packed_tokens():
         pow2_bucket(base.max_slots) * base.block_size
     assert reuse_exec_tokens(packed, cfg) < reuse_exec_tokens(base, cfg)
     assert reuse_exec_tokens(packed, cfg) % packed.token_bucket == 0
-    # SSM fallback keeps the padded reservation even under varlen_pack
+    # the SSM family packs its Reuse stream now; only frontend archs keep
+    # the padded reservation under varlen_pack
     ssm = get_config("mamba2-130m")
-    assert reuse_exec_tokens(packed, ssm) == reuse_exec_tokens(base, ssm)
+    assert reuse_exec_tokens(packed, ssm) < reuse_exec_tokens(base, ssm)
+    vlm = get_config("internvl2-76b")
+    assert reuse_exec_tokens(packed, vlm) == reuse_exec_tokens(base, vlm)
     # logit stage: ragged N → token-bucket rounding beats the pow2 bucket
     # (and the logit head packs for every family, SSM included)
     n = 2500

@@ -107,6 +107,35 @@ def test_slots_never_oversubscribed(n, seed):
         it += 1
 
 
+def test_zero_refresh_cap_means_unlimited():
+    """Regression: ``max_refresh_per_iter=0`` is documented as "no per-iter
+    cap" (0 = one packed chunk), but the scheduler compared the raw field —
+    ``len(plan.refresh) < 0`` — so every Refresh was deferred forever and
+    admission was blocked with it (livelock). The normalized
+    ``ServeConfig.refresh_slots`` must admit and refresh normally."""
+    cfg = mk_cfg(max_refresh_per_iter=0)
+    assert cfg.refresh_slots == cfg.max_slots
+    sched = PhaseMultiplexedScheduler(cfg)
+    reqs = [mk_req(i, cfg, plen=8, glen=8) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    plan = sched.plan(now=1e9)
+    assert plan.refresh and plan.admitted, \
+        "max_refresh_per_iter=0 deferred every Refresh (livelock)"
+    assert not plan.deferred
+    drain(sched, cfg)
+    assert all(r.state == State.FINISHED for r in reqs)
+
+
+def test_refresh_cap_still_binds_when_positive():
+    cfg = mk_cfg(max_refresh_per_iter=2)
+    sched = PhaseMultiplexedScheduler(cfg)
+    for i in range(6):
+        sched.submit(mk_req(i, cfg, plen=8, glen=8))
+    plan = sched.plan(now=1e9)
+    assert len(plan.refresh) == 2
+
+
 def test_phase_machine_cadence():
     cfg = mk_cfg(refresh_interval=4, steps_per_block=8)
     r = mk_req(0, cfg, plen=8, glen=16)
