@@ -11,9 +11,14 @@ token ratios are the device-independent signal).
 
 ``python -m benchmarks.packing --smoke --out packing_smoke.json`` runs the
 CI gate: asserts ``refresh_waste``/``reuse_waste``/``logit_waste`` of the
-packed engine are each ≤ the padded baseline — for an attention config AND
-an SSM config (the segment-reset varlen scan path), so the scan families'
-packing is enforced too — and writes the per-arch JSON rows.
+packed engine are each ≤ the padded baseline — for an attention config, an
+SSM config (the segment-reset varlen scan path), AND a modality-frontend
+config (the frontend-prefix segment path), so every family's packing is
+enforced — writes the per-arch JSON rows, and exits non-zero if any
+``SMOKE_ARCHS`` row is missing from the artifact.
+
+Entry points, flags, and the JSON row schema are documented in
+``docs/benchmarks.md``.
 """
 from __future__ import annotations
 
@@ -33,10 +38,11 @@ def _serve(varlen: bool):
         logit_mode="chunked", varlen_pack=varlen, token_bucket=32)
 
 
-# the smoke gate covers one attention family and one scan family (the
-# packed refresh/reuse waste of the segment-reset SSD scan path must beat
-# the padded oracle too)
-SMOKE_ARCHS = ("llada-8b", "mamba2-130m")
+# the smoke gate covers one attention family, one scan family (the
+# segment-reset SSD scan path), and one modality-frontend family (the
+# frontend-prefix segment path): packed refresh/reuse/logit waste must beat
+# the padded oracle for ALL of them
+SMOKE_ARCHS = ("llada-8b", "mamba2-130m", "internvl2-76b")
 
 
 def _run_one(varlen: bool, n: int, seed: int = 0,
@@ -127,11 +133,24 @@ def run(quick: bool = True):
     return out
 
 
+def check_rows(rows: dict) -> None:
+    """Fail LOUDLY (non-zero exit) if any ``SMOKE_ARCHS`` row is missing or
+    unverified — a silently absent arch row would let the CI artifact claim
+    coverage the gate never ran."""
+    missing = [a for a in SMOKE_ARCHS
+               if a not in rows or not rows[a].get("ok")]
+    if missing:
+        raise SystemExit(
+            f"packing smoke artifact is missing verified rows for "
+            f"{missing} (have: {sorted(k for k in rows if k != 'ok')})")
+
+
 def smoke(out_path: str | None = None) -> dict:
     """CI gate: the packed engine's per-stage waste must never exceed the
     padded baseline on the same ragged workload, for every ``SMOKE_ARCHS``
-    family (attention and SSM). Returns (and optionally writes) the
-    per-arch comparison rows."""
+    family (attention, SSM, and modality-frontend). Returns (and optionally
+    writes) the per-arch comparison rows; a missing arch row exits
+    non-zero."""
     rows: dict = {}
     for arch in SMOKE_ARCHS:
         packed = _run_one(True, 8, arch=arch)
@@ -146,6 +165,12 @@ def smoke(out_path: str | None = None) -> dict:
     if out_path:
         with open(out_path, "w") as f:
             json.dump(rows, f, indent=1)
+        # re-read the artifact and verify every arch row landed in it — the
+        # gate must fail even if the miss is in serialization, not the runs
+        with open(out_path) as f:
+            check_rows(json.load(f))
+    else:
+        check_rows(rows)
     return rows
 
 

@@ -1,8 +1,53 @@
 """Paper Fig.3 + Table 4: serving throughput per system/workload/arrival rate.
 
-Reported: tok/s per cell, and dLLM-Serve's speedup over the best baseline
-(the paper's headline: 1.61-1.81×)."""
+Reported: tok/s per cell, dLLM-Serve's speedup over the best baseline (the
+paper's headline: 1.61-1.81×), and per-arch packed-vs-padded waste rows —
+one family per execution path (attention stream, segment-reset SSD scan,
+hybrid, frontend-prefix segments) so a packing regression in any path shows
+up as a per-arch waste ratio, not just in the llada-only grid.
+
+Flags and the row schema are documented in ``docs/benchmarks.md``."""
 from benchmarks._grid import SYSTEMS, WORKLOADS, best_baseline, grid, ours
+from repro.launch.serve import run_serve
+
+# one arch per packed execution path: dense attention, SSM scan, hybrid,
+# vlm (frontend-prefix), audio (frontend-prefix)
+WASTE_ARCHS = ("llada-8b", "mamba2-130m", "zamba2-7b",
+               "internvl2-76b", "musicgen-medium")
+
+
+def per_arch_waste(quick: bool = True):
+    """``throughput/arch_waste/<arch>/<stage>`` rows: packed (dllm-serve)
+    vs padded (fast-dllm) exec/real token ratios per stage, per arch, on
+    the same burst trace. The packed engine must never waste more than the
+    padded baseline on any stage for any family."""
+    archs = WASTE_ARCHS[:2] + WASTE_ARCHS[3:4] if quick else WASTE_ARCHS
+    out = []
+    skipped = [a for a in WASTE_ARCHS if a not in archs]
+    if skipped:
+        # no silent coverage caps: quick mode drops the hybrid/audio archs,
+        # and the output must say so (--full runs all of WASTE_ARCHS)
+        out.append(("throughput/arch_waste/skipped_in_quick_mode", 0.0,
+                    "+".join(skipped)))
+    for arch in archs:
+        res = {}
+        for sys_name in ("dllm-serve", "fast-dllm"):
+            res[sys_name] = run_serve(
+                arch, sys_name, "burst", 2.0, 8, max_seq_len=192,
+                block_size=8, steps_per_block=8, max_slots=8,
+                max_num_batched_tokens=768, max_num_logits=96,
+                length_scale=0.12)
+        pk, pd = res["dllm-serve"], res["fast-dllm"]
+        for stage in ("refresh", "reuse", "logit"):
+            out.append((
+                f"throughput/arch_waste/{arch}/{stage}", 0.0,
+                f"packed={pk[f'{stage}_waste']:.3f}x"
+                f"(exec{pk[f'{stage}_tokens_exec']}/"
+                f"real{pk[f'{stage}_tokens_real']})"
+                f"|padded={pd[f'{stage}_waste']:.3f}x"))
+        out.append((f"throughput/arch_waste/{arch}/padded_refresh_calls",
+                    0.0, f"packed_path={pk['padded_refresh_calls']}"))
+    return out
 
 
 def run(quick: bool = True):
@@ -39,4 +84,5 @@ def run(quick: bool = True):
                         f"{base['refresh_tokens_exec']}exec/"
                         f"{base['refresh_tokens_real']}real="
                         f"{base['refresh_waste']:.3f}x"))
+    out.extend(per_arch_waste(quick))
     return out

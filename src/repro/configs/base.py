@@ -147,9 +147,11 @@ class ServeConfig:
     # instead of a padded [B, max_seq_len] batch, Reuse runs the active
     # blocks as one ragged [R·Sb] stream instead of a pow2 request batch,
     # and the logit stage decodes the real hidden rows at token_bucket
-    # granularity instead of a pow2 row bucket. Refresh/Reuse pack for
-    # attention families (SSM/hybrid fall back to the padded oracle); the
-    # logit stage packs for every family.
+    # granularity instead of a pow2 row bucket. Every stage packs for EVERY
+    # family: attention archs via the segment-masked varlen stream,
+    # SSM/hybrid via the segment-reset varlen SSD scan, and vlm/audio via
+    # frontend-prefix segments (projected frontend rows ride as a
+    # fixed-length prefix of each request's Refresh segment).
     token_bucket: int = 128              # packed-stream size granularity
     # (rounds Σ Lᵢ up — bounds jit cache entries at budget/token_bucket while
     # keeping waste < one bucket, vs up-to-2× for power-of-two padding)

@@ -79,16 +79,20 @@ def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
 
 def can_pack_tokens(cfg: ModelConfig) -> bool:
     """True when the engine's token-packed Refresh/Reuse paths apply to
-    ``cfg``: every text family — attention archs run the segment-masked
-    varlen attention stream and SSM/hybrid archs run the segment-reset
-    varlen SSD scan (``models/ssm.varlen_ssd_scan`` / the Pallas
-    ``kernels/ssm_scan`` kernel). Only modality-frontend archs (vlm/audio)
-    still fall back to the padded oracle — their frontend rows are
-    rectangular by construction — so only they must be provisioned (and
-    billed) for the padded rectangle under ``varlen_pack=True``. Single
-    source of truth for the engine gate and the profiler's activation
-    accounting."""
-    return not cfg.frontend_dim
+    ``cfg`` — which is now EVERY family: attention archs run the
+    segment-masked varlen attention stream, SSM/hybrid archs run the
+    segment-reset varlen SSD scan (``models/ssm.varlen_ssd_scan`` / the
+    Pallas ``kernels/ssm_scan`` kernel), and modality-frontend archs
+    (vlm/audio) pack their ``frontend_len`` projected rows as a
+    fixed-length prefix of each request's segment in the same flat stream.
+    No family falls back to the padded oracle on the hot path, so every
+    family is provisioned (and billed) by packed tokens under
+    ``varlen_pack=True``. Kept as a function (single source of truth for
+    the engine gate and the profiler's activation accounting) so a future
+    family with a genuinely unpackable geometry has one place to opt out.
+    """
+    del cfg  # every family packs
+    return True
 
 
 def pow2_bucket(n: int, lo: int = 1) -> int:
@@ -117,27 +121,28 @@ def max_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
 
     Token-packed engines run the iteration's Refresh set as ONE fused
     stream and round its real token sum up to ``token_bucket`` (bounded by
-    the scheduler budget) — this now covers the SSM/hybrid scan families
-    too. Padded engines — including the modality-frontend fallback that
-    runs padded even under ``varlen_pack=True`` — pay the full
-    ``batch_bucket × max_seq_len`` rectangle regardless of true lengths
-    (``refresh_slots`` normalizes the 0-means-unlimited cap).
+    the scheduler budget — which counts modality-frontend prefix rows as
+    query tokens, so the stream bound covers vlm/audio too). Padded
+    engines pay the full ``batch_bucket × (frontend_len + max_seq_len)``
+    rectangle regardless of true lengths (``refresh_slots`` normalizes the
+    0-means-unlimited cap).
     """
     if serve.varlen_pack and can_pack_tokens(cfg):
         tb = max(1, serve.token_bucket)
         return -(-serve.max_num_batched_tokens // tb) * tb
+    fe = cfg.frontend_len if cfg.frontend_dim else 0
     return max(serve.max_num_batched_tokens,
-               pow2_bucket(serve.refresh_slots) * serve.max_seq_len)
+               pow2_bucket(serve.refresh_slots) * (serve.max_seq_len + fe))
 
 
 def reuse_exec_tokens(serve: ServeConfig, cfg: ModelConfig) -> int:
     """Worst-case tokens one Reuse dispatch materializes activations for.
 
     The reuse set is bounded by both ``max_slots`` and the scheduler budget
-    (block tokens are scheduling currency). Packed engines — every text
-    family, SSM/hybrid included — round the request count to whole token
-    buckets (exact below one bucket); padded engines and the
-    modality-frontend fallback pay the pow2 batch bucket."""
+    (block tokens are scheduling currency; the Reuse stream is text-only —
+    frontend prefixes never enter it). Packed engines — every family,
+    vlm/audio included — round the request count to whole token buckets
+    (exact below one bucket); padded engines pay the pow2 batch bucket."""
     Sb = max(1, serve.block_size)
     r_max = max(1, min(serve.max_slots, serve.max_num_batched_tokens // Sb))
     if serve.varlen_pack and can_pack_tokens(cfg):

@@ -13,24 +13,29 @@ One engine iteration (§4.1 workflow):
 Static-shape policy: two execution paths for the WHOLE iteration.
 
 * padded (oracle): every stage is bucketed to powers of two — Refresh pads
-  sequences to ``max_seq_len``, Reuse pads the request batch, and the logit
-  stage pads the concatenated hidden rows — up to ~2× wasted FLOPs/HBM per
-  stage. Kept as the correctness oracle and the fallback for
-  modality-frontend archs (their frontend rows are rectangular).
+  sequences to ``max_seq_len`` (plus the ``frontend_len`` prefix for
+  vlm/audio), Reuse pads the request batch, and the logit stage pads the
+  concatenated hidden rows — up to ~2× wasted FLOPs/HBM per stage. Kept
+  purely as the correctness oracle: no family falls back to it on the hot
+  path anymore.
 * token-packed (``varlen_pack=True``, the paper's §4.1 flattened engine): no
-  stage launches a pow2-padded rectangle for ANY text family — attention
-  archs run the segment-masked varlen attention stream and SSM/hybrid archs
-  run the segment-reset varlen SSD scan (``kernels/ssm_scan``). The
-  iteration executes as a single packed pipeline driven by the scheduler's
+  stage launches a pow2-padded rectangle for ANY family — attention archs
+  run the segment-masked varlen attention stream, SSM/hybrid archs run the
+  segment-reset varlen SSD scan (``kernels/ssm_scan``), and the
+  modality-frontend archs (vlm/audio) pack their projected frontend rows as
+  a fixed-length prefix of each request's segment. The iteration executes
+  as a single packed pipeline driven by the scheduler's
   :class:`~repro.core.scheduler.PackedIterationLayout` (per-stage cu_seqlens):
 
     - Refresh: ONE ragged ``[T_total, ...]`` stream for the WHOLE iteration
       (``PackedIterationLayout.refresh_fused`` — a single fused dispatch
       across the refresh chunks), bucketed on *total tokens*
-      (``token_bucket`` granularity), in-kernel segment masking + tile-skip
-      (``kernels/flash_varlen``) or segment-reset state scan
-      (``kernels/ssm_scan``), and select/pack that reads the stream in
-      place (no padded K/V gather).
+      (``token_bucket`` granularity; frontend prefix rows count), in-kernel
+      segment masking + tile-skip (``kernels/flash_varlen``) or
+      segment-reset state scan (``kernels/ssm_scan``), and select/pack that
+      reads the stream in place (no padded K/V gather). vlm/audio segments
+      are ``[frontend prefix ; text]``; Reuse and the logit stage address
+      only the text region (block rows), so prefixes never enter them.
     - Reuse: the iteration's R active blocks form one ragged ``[R·Sb]``
       query stream (R rounded only to the token-bucket granularity) against
       their gathered slot caches — the cross-attention varlen kernel skips
@@ -106,9 +111,10 @@ class EngineStats:
     peak_query_tokens: int = 0
     wall_time: float = 0.0
     # padded-vs-packed accounting, one pair per stage: `real` is the stage's
-    # true token count (Σ total_len for Refresh, R·Sb for Reuse, N hidden
-    # rows for the logit stage); `exec` is what the device actually consumed
-    # (pow2 rectangles on the oracle path, token-bucket rounding packed).
+    # true token count (Σ refresh_len — frontend prefix + text — for
+    # Refresh, R·Sb for Reuse, N hidden rows for the logit stage); `exec` is
+    # what the device actually consumed (pow2 rectangles on the oracle path,
+    # token-bucket rounding packed).
     refresh_tokens_real: int = 0
     refresh_tokens_exec: int = 0
     reuse_tokens_real: int = 0
@@ -165,10 +171,14 @@ class Engine:
         self.scheduler = make_scheduler(serve)
         self.pool = KVPool(serve.max_slots)
         self.stats = EngineStats()
-        # token-packed execution covers every text family (segment-masked
-        # attention stream or segment-reset SSD scan); only modality-frontend
-        # archs stay on the padded oracle (same predicate the offline
-        # profiler bills activations by).
+        # modality-frontend prefix rows per request (0 for text-only archs):
+        # every Refresh geometry below spans frontend_len + text rows, and
+        # block/reuse positions are offset by it (full-sequence coordinates).
+        self._fe_len = cfg.frontend_len if cfg.frontend_dim else 0
+        # token-packed execution covers every family (segment-masked
+        # attention stream, segment-reset SSD scan, or frontend-prefix
+        # segments); same predicate the offline profiler bills activations
+        # by — can_pack_tokens is the single opt-out point.
         self._use_packed = serve.varlen_pack and can_pack_tokens(cfg)
         self._refresh_jit: Dict[int, callable] = {}
         self._refresh_packed_jit: Dict[tuple, callable] = {}
@@ -186,9 +196,10 @@ class Engine:
             ctx = self.ctx
 
             @jax.jit
-            def fn(params, tokens, token_valid, block_start):
+            def fn(params, tokens, token_valid, block_start, frontend):
                 return BB.serve_refresh(params, self.cfg, tokens, block_start,
-                                        ctx, token_valid=token_valid)
+                                        ctx, frontend=frontend,
+                                        token_valid=token_valid)
 
             self._refresh_jit[n] = fn
         return self._refresh_jit[n]
@@ -221,10 +232,11 @@ class Engine:
 
             @jax.jit
             def fn(params, flat_tokens, positions, seg_ids, token_valid,
-                   cu_seqlens, seq_lens, block_start):
+                   cu_seqlens, seq_lens, block_start, frontend):
                 return BB.serve_refresh_packed(
                     params, self.cfg, flat_tokens, positions, seg_ids,
-                    token_valid, cu_seqlens, seq_lens, block_start, ctx)
+                    token_valid, cu_seqlens, seq_lens, block_start, ctx,
+                    frontend=frontend)
 
             self._refresh_packed_jit[(tp, rp)] = fn
         return self._refresh_packed_jit[(tp, rp)]
@@ -301,7 +313,14 @@ class Engine:
         Returns the compile wall-time so harnesses can report it."""
         t0 = time.perf_counter()
         S, Sb = self.serve.max_seq_len, self.serve.block_size
+        F = self._fe_len
         r_eff = self.serve.refresh_slots
+
+        def _fe(b):
+            """Dummy frontend batch (None for text-only archs)."""
+            if not F:
+                return None
+            return jnp.zeros((b, F, self.cfg.frontend_dim), jnp.float32)
         # the fused packed dispatch spans the WHOLE plan.refresh: the phase
         # scheduler caps that at refresh_slots, but the request-level
         # baseline admits whole batches up to max_slots and relies on the
@@ -312,31 +331,34 @@ class Engine:
         if self._use_packed:
             # packed path: warm the worst-case (token bucket, request bucket)
             # per refresh fused-dispatch size; smaller buckets compile lazily.
+            # Per-request segments span frontend prefix + text (S + F rows),
+            # and the scheduler budget caps the stream either way.
             b = 1
             while True:
                 tp = self._token_bucket(
-                    min(b * S, self.serve.max_num_batched_tokens))
+                    min(b * (S + F), self.serve.max_num_batched_tokens))
                 out = self._refresh_packed_fn(tp, b)(
                     self.params, jnp.zeros((tp,), jnp.int32),
                     jnp.zeros((tp,), jnp.int32),
                     jnp.zeros((tp,), jnp.int32),
                     jnp.ones((tp,), bool),
                     jnp.zeros((b,), jnp.int32),
-                    jnp.full((b,), min(tp, S), jnp.int32),
-                    jnp.zeros((b,), jnp.int32))
+                    jnp.full((b,), min(tp, S + F), jnp.int32),
+                    jnp.zeros((b,), jnp.int32),
+                    _fe(b))
                 self.pool.ensure(out.cache)
                 if b >= _bucket(r_fused):
                     break
                 b *= 2
         toks = jnp.zeros((1, S), jnp.int32)
-        valid = jnp.ones((1, S), bool)
+        valid = jnp.ones((1, F + S), bool)
         bs = jnp.zeros((1,), jnp.int32)
         b = 1
         while not self._use_packed:
             out = self._refresh_fn(b)(
                 self.params, jnp.broadcast_to(toks, (b, S)),
-                jnp.broadcast_to(valid, (b, S)),
-                jnp.broadcast_to(bs, (b,)))
+                jnp.broadcast_to(valid, (b, F + S)),
+                jnp.broadcast_to(bs, (b,)), _fe(b))
             self.pool.ensure(out.cache)
             if b >= _bucket(r_eff):
                 break
@@ -387,10 +409,28 @@ class Engine:
         return time.perf_counter() - t0
 
     def submit(self, prompt: np.ndarray, gen_len: int, arrival: float = 0.0,
-               rid: Optional[int] = None) -> Request:
+               rid: Optional[int] = None,
+               frontend: Optional[np.ndarray] = None) -> Request:
+        """Queue a request. For modality-frontend archs ``frontend`` carries
+        the request's precomputed patch/frame embeddings
+        ``[frontend_len, frontend_dim]`` (the stub contract: the vision/audio
+        tower runs offline); omitted, a deterministic stand-in is drawn from
+        the engine rng so synthetic workloads exercise the real geometry."""
+        if self.cfg.frontend_dim:
+            if frontend is None:
+                frontend = self._rng.standard_normal(
+                    (self.cfg.frontend_len, self.cfg.frontend_dim)).astype(
+                        np.float32)
+            frontend = np.asarray(frontend, np.float32)
+            assert frontend.shape == (self.cfg.frontend_len,
+                                      self.cfg.frontend_dim), frontend.shape
+        else:
+            assert frontend is None, \
+                f"{self.cfg.name} is text-only but got frontend embeddings"
         req = Request(rid=rid if rid is not None else self._rng.integers(1 << 30),
                       prompt=np.asarray(prompt, np.int32), gen_len=gen_len,
-                      arrival=arrival, cfg=self.serve, mask_id=self.mask_id)
+                      arrival=arrival, cfg=self.serve, mask_id=self.mask_id,
+                      frontend=frontend)
         self.scheduler.submit(req)
         return req
 
@@ -431,8 +471,8 @@ class Engine:
                         f"{self.serve.block_size}, max_slots="
                         f"{self.serve.max_slots}, refresh cap="
                         f"{self.serve.refresh_slots}) — e.g. a request "
-                        f"whose total_len exceeds the token budget can "
-                        f"never be admitted.")
+                        f"whose Refresh cost (frontend prefix + total_len) "
+                        f"exceeds the token budget can never be admitted.")
                 if self.clock == "modeled":
                     self.vtime = max(self.vtime, nxt)   # jump to next arrival
                 else:
@@ -453,12 +493,12 @@ class Engine:
         cfg = self.cfg
         # A stage is billed for real tokens only when its packed path really
         # executed (no more "pretend-packed" carve-outs): Refresh and Reuse
-        # follow the engine gate — every text family packs now (attention
-        # stream or segment-reset SSD scan); only modality-frontend archs
-        # fall back to the padded oracle and pay the rectangle — while the
-        # logit stage packs under varlen_pack for every family (the output
-        # head is family-agnostic, so the engine always buckets the hidden
-        # stream on tokens there).
+        # follow the engine gate — every family packs now (attention stream,
+        # segment-reset SSD scan, or frontend-prefix segments for vlm/audio;
+        # the padded oracle runs only when varlen_pack is off and then pays
+        # the rectangle) — while the logit stage packs under varlen_pack for
+        # every family (the output head is family-agnostic, so the engine
+        # always buckets the hidden stream on tokens there).
         if kind == "decode":
             varlen = self.serve.varlen_pack
         else:
@@ -504,8 +544,10 @@ class Engine:
                 t_real = seg.total_tokens
                 bh, exec_tokens = self._run_refresh_packed(seg)
                 # packed attention pays Σ Sᵢ²: effective kv length is the
-                # token-weighted mean sequence length, not max_seq_len
-                kv_len = sum(r.total_len ** 2 for r in chunk) // max(t_real, 1)
+                # token-weighted mean segment length (frontend prefix
+                # included), not max_seq_len
+                kv_len = sum(r.refresh_len ** 2
+                             for r in chunk) // max(t_real, 1)
                 hidden_rows.append(bh)
                 decoded.extend(chunk)
                 self.stats.refresh_steps += len(chunk)
@@ -516,7 +558,7 @@ class Engine:
         else:
             for i in range(0, len(plan.refresh), cap):
                 chunk = plan.refresh[i: i + cap]
-                t_real = sum(r.total_len for r in chunk)
+                t_real = sum(r.refresh_len for r in chunk)
                 bh, exec_tokens = self._run_refresh(chunk)
                 hidden_rows.append(bh)
                 decoded.extend(chunk)
@@ -524,7 +566,7 @@ class Engine:
                 iter_real += t_real
                 iter_exec += exec_tokens
                 self._charge("refresh", exec_tokens,
-                             kv_len=self.serve.max_seq_len,
+                             kv_len=self.serve.max_seq_len + self._fe_len,
                              actual_tokens=t_real)
 
         # ---- Reuse: one ragged block stream (packed) / pow2 batch (oracle) --
@@ -597,64 +639,86 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _run_refresh(self, chunk: List[Request]) -> Tuple[jax.Array, int]:
-        """Padded-oracle Refresh. Returns (block hidden, executed tokens)."""
+        """Padded-oracle Refresh. For modality-frontend archs the embedded
+        batch is ``[b, frontend_len + max_seq_len]`` (prefix rows first), so
+        validity, block offsets, and the executed-token bill all span the
+        full rectangle. Returns (block hidden, executed tokens)."""
         n = len(chunk)
         b = _bucket(n)
         S = self.serve.max_seq_len
+        F = self._fe_len
         tokens = np.zeros((b, S), np.int32)
-        valid = np.zeros((b, S), bool)
+        valid = np.zeros((b, F + S), bool)
         bstart = np.zeros((b,), np.int32)
+        fe = np.zeros((b, F, self.cfg.frontend_dim), np.float32) \
+            if F else None
         for j, r in enumerate(chunk):
             tokens[j] = r.tokens
-            valid[j, : r.total_len] = True
-            bstart[j] = r.block_start
+            valid[j, : F + r.total_len] = True
+            bstart[j] = F + r.block_start
+            if F:
+                fe[j] = r.frontend
         out = self._refresh_fn(b)(self.params, jnp.asarray(tokens),
-                                  jnp.asarray(valid), jnp.asarray(bstart))
+                                  jnp.asarray(valid), jnp.asarray(bstart),
+                                  jnp.asarray(fe) if F else None)
         slots = [r.slot for r in chunk] + \
                 [self.pool.scratch_slot] * (b - n)
         self.pool.write(slots, out.cache)
         self.stats.padded_refresh_calls += 1
-        self.stats.refresh_tokens_real += sum(r.total_len for r in chunk)
-        self.stats.refresh_tokens_exec += b * S
-        return out.block_hidden[:n], b * S
+        self.stats.refresh_tokens_real += sum(r.refresh_len for r in chunk)
+        self.stats.refresh_tokens_exec += b * (F + S)
+        return out.block_hidden[:n], b * (F + S)
 
     def _run_refresh_packed(self, seg_layout) -> Tuple[jax.Array, int]:
         """Token-packed Refresh (§4.1): one ragged stream bucketed on total
         tokens — real compute pays for real tokens, never a
         ``[B, max_seq_len]`` padded call. The stream offsets come straight
         from the scheduler's :class:`StageSegments` (the plan-level
-        cu_seqlens contract drives execution). Returns (block hidden,
-        executed tokens = the token bucket)."""
+        cu_seqlens contract drives execution); for vlm/audio each segment
+        carries its ``frontend_len`` projected prefix rows ahead of the
+        text tokens, already accounted in those offsets. Returns (block
+        hidden, executed tokens = the token bucket)."""
         chunk = seg_layout.requests
         cu_real = seg_layout.cu_seqlens
         n = len(chunk)
         rp = _bucket(n)
         t_real = seg_layout.total_tokens
         tp = self._token_bucket(t_real)
+        F = self._fe_len
         tokens = np.zeros((tp,), np.int32)
         pos = np.zeros((tp,), np.int32)
         seg = np.full((tp,), FV.PAD_SEG, np.int32)
         valid = np.zeros((tp,), bool)
         # padding requests point at the (invalid) tail so their gathers are
-        # in-bounds; their caches land in the scratch slot.
+        # in-bounds; their caches land in the scratch slot. (Their lens stay
+        # 0, which is what keeps embed_inputs_packed from scattering frontend
+        # rows over real tokens when the bucket is exactly full.)
         cu = np.full((rp,), max(0, tp - 1), np.int32)
         lens = np.zeros((rp,), np.int32)
         bstart = np.zeros((rp,), np.int32)
+        fe = np.zeros((rp, F, self.cfg.frontend_dim), np.float32) \
+            if F else None
         for j, r in enumerate(chunk):
             off = int(cu_real[j])
-            ln = r.total_len
+            ln = r.refresh_len            # frontend prefix + text
             assert ln == int(cu_real[j + 1]) - off, "layout/request mismatch"
-            tokens[off: off + ln] = r.tokens[:ln]
+            # segment = [F projected frontend rows ; total_len text tokens];
+            # the prefix token ids are placeholders (embed_inputs_packed
+            # overwrites those embedding rows with the projected frontend)
+            tokens[off + F: off + ln] = r.tokens[: r.total_len]
             pos[off: off + ln] = np.arange(ln, dtype=np.int32)
             seg[off: off + ln] = j
             valid[off: off + ln] = True
             cu[j] = off
             lens[j] = ln
-            bstart[j] = r.block_start
+            bstart[j] = F + r.block_start
+            if F:
+                fe[j] = r.frontend
         out = self._refresh_packed_fn(tp, rp)(
             self.params, jnp.asarray(tokens), jnp.asarray(pos),
             jnp.asarray(seg), jnp.asarray(valid), jnp.asarray(cu),
-            jnp.asarray(lens), jnp.asarray(bstart))
+            jnp.asarray(lens), jnp.asarray(bstart),
+            jnp.asarray(fe) if F else None)
         slots = [r.slot for r in chunk] + \
                 [self.pool.scratch_slot] * (rp - n)
         self.pool.write(slots, out.cache)
@@ -672,9 +736,10 @@ class Engine:
         btok = np.zeros((b, Sb), np.int32)
         bpos = np.zeros((b, Sb), np.int32)
         slots = [self.pool.scratch_slot] * b
+        F = self._fe_len
         for j, r in enumerate(reqs):
             btok[j] = r.block_tokens()
-            bpos[j] = np.arange(r.block_start, r.block_start + Sb)
+            bpos[j] = np.arange(F + r.block_start, F + r.block_start + Sb)
             slots[j] = r.slot
         cache = self.pool.gather(slots)
         h = self._reuse_fn(b)(self.params, jnp.asarray(btok),
@@ -698,11 +763,12 @@ class Engine:
         btok = np.zeros((tq,), np.int32)
         bpos = np.zeros((tq,), np.int32)
         slots = [self.pool.scratch_slot] * rp
+        F = self._fe_len
         for j, r in enumerate(reqs):
             off = int(seg_layout.cu_seqlens[j])
             btok[off: off + Sb] = r.block_tokens()
-            bpos[off: off + Sb] = np.arange(r.block_start,
-                                            r.block_start + Sb)
+            bpos[off: off + Sb] = np.arange(F + r.block_start,
+                                            F + r.block_start + Sb)
             slots[j] = r.slot
         cache = self.pool.gather(slots)
         h = self._reuse_packed_fn(rp)(self.params, jnp.asarray(btok),

@@ -36,6 +36,12 @@ class Request:
     arrival: float                      # seconds (trace time)
     cfg: ServeConfig
     mask_id: int = 0
+    # modality-frontend stub (vlm/audio): precomputed patch/frame embeddings
+    # occupying the first ``frontend_len`` positions of the request's full
+    # sequence. None for text-only archs. The frontend rows are REAL compute
+    # in every Refresh — they count as query tokens and as packed-stream rows
+    # (the fixed-length segment prefix of the flattened engine).
+    frontend: Optional[np.ndarray] = None   # [F, frontend_dim] float32
 
     state: State = State.WAITING
     slot: Optional[int] = None
@@ -64,6 +70,19 @@ class Request:
         return self.prompt_len + self.gen_len
 
     @property
+    def frontend_len(self) -> int:
+        """Modality-frontend prefix rows (0 for text-only archs)."""
+        return 0 if self.frontend is None else len(self.frontend)
+
+    @property
+    def refresh_len(self) -> int:
+        """Rows one Refresh materializes for this request: the frontend
+        prefix (vlm/audio) plus the full text sequence. This is the
+        request's segment length in the packed Refresh stream and its
+        Refresh-phase scheduling cost."""
+        return self.frontend_len + self.total_len
+
+    @property
     def n_blocks(self) -> int:
         return self.gen_len // self.cfg.block_size
 
@@ -83,9 +102,11 @@ class Request:
 
     @property
     def query_tokens(self) -> int:
-        """Scheduling currency (§4.4): full seq in Refresh, block in Reuse."""
+        """Scheduling currency (§4.4): frontend prefix + full seq in Refresh,
+        block in Reuse (the active block is always text — frontend rows are
+        never re-decoded, so Reuse and the logit stage cost no prefix)."""
         if self.phase == Phase.REFRESH:
-            return self.total_len
+            return self.refresh_len
         return self.cfg.block_size
 
     def block_tokens(self) -> np.ndarray:

@@ -45,7 +45,12 @@ class PackedIterationLayout:
     runs the iteration's active blocks as one ragged ``[R·Sb]`` stream, and
     the logit stage decodes the concatenated ``logit_tokens`` hidden rows at
     token-bucket granularity. Per-stage ``cu_seqlens`` partition each stream
-    exactly (property-tested: contiguous, non-overlapping, gap-free)."""
+    exactly (property-tested: contiguous, non-overlapping, gap-free).
+    Modality-frontend archs contribute their ``frontend_len`` prefix rows to
+    the Refresh cu_seqlens ONLY — Reuse segments are exactly ``block_size``
+    and ``logit_tokens`` counts one text block per scheduled request, so
+    frontend prefixes can never leak into the Reuse or logit streams
+    (property-tested)."""
     refresh_chunks: Tuple[StageSegments, ...]
     reuse: Optional[StageSegments]
     logit_tokens: int               # real hidden rows entering the C1 stage
@@ -85,8 +90,13 @@ class IterationPlan:
     # -- token-packed (varlen) Refresh layout (§4.1 flattened engine) -------
     @property
     def refresh_token_counts(self) -> List[int]:
-        """True per-request token counts of the Refresh set."""
-        return [r.total_len for r in self.refresh]
+        """True per-request row counts of the Refresh set. For vlm/audio
+        archs this INCLUDES the ``frontend_len`` projected prefix rows —
+        each request's segment in the flat Refresh stream is
+        ``[frontend prefix ; text]`` and the cu_seqlens account both. Reuse
+        and logit cu_seqlens stay text-only (the active block never carries
+        a prefix)."""
+        return [r.refresh_len for r in self.refresh]
 
     @property
     def refresh_total_tokens(self) -> int:
@@ -191,7 +201,7 @@ class PhaseMultiplexedScheduler:
             cand = self.waiting[0]
             if cand.arrival > now:
                 break
-            cost = cand.total_len  # first step is a Refresh
+            cost = cand.refresh_len  # first step is a Refresh (prefix + text)
             if cost > budget:
                 break
             self.waiting.pop(0)
@@ -222,7 +232,7 @@ class RequestLevelScheduler(PhaseMultiplexedScheduler):
 
         # conservative: every running request is charged its worst case
         for r in self.running:
-            budget -= r.total_len
+            budget -= r.refresh_len
             (plan.refresh if r.phase == Phase.REFRESH else plan.reuse).append(r)
 
         # static batching: admit only when the previous batch fully drained
@@ -230,7 +240,7 @@ class RequestLevelScheduler(PhaseMultiplexedScheduler):
         drained = not self.running
         while drained and self.waiting and self._free_slots:
             cand = self.waiting[0]
-            if cand.arrival > now or cand.total_len > budget:
+            if cand.arrival > now or cand.refresh_len > budget:
                 break
             self.waiting.pop(0)
             cand.slot = self._free_slots.pop()
@@ -239,7 +249,7 @@ class RequestLevelScheduler(PhaseMultiplexedScheduler):
             self.running.append(cand)
             plan.refresh.append(cand)
             plan.admitted.append(cand)
-            budget -= cand.total_len
+            budget -= cand.refresh_len
         return plan
 
 

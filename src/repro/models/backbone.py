@@ -12,7 +12,10 @@
 VLM (`internvl2-76b`) and audio (`musicgen-medium`) archs take a stub
 frontend: precomputed patch/frame embeddings occupying the first
 ``frontend_len`` positions (projected by a learned matrix); the LM backbone
-is real. Diffusion decoding operates on the text region.
+is real. Diffusion decoding operates on the text region. On the
+token-packed serving path the frontend rows ride as a fixed-length prefix
+of each request's segment in the flat stream (:func:`embed_inputs_packed`),
+so vlm/audio pack like every other family — no padded-oracle fallback.
 """
 from __future__ import annotations
 
@@ -70,6 +73,38 @@ def embed_inputs(params: dict, cfg: ModelConfig, tokens: jax.Array,
                         params["frontend"]["proj"])
         x = jnp.concatenate([fe, x], axis=1)
     return L.constrain(x, "act3d")
+
+
+def embed_inputs_packed(
+    params: dict,
+    cfg: ModelConfig,
+    flat_tokens: jax.Array,              # [T] int32 packed token stream
+    cu_seqlens: jax.Array,               # [R] int32 segment start per request
+    seq_lens: jax.Array,                 # [R] int32 true segment length (0=pad)
+    frontend: Optional[jax.Array] = None,   # [R, F, F_dim]
+) -> jax.Array:
+    """Packed-stream counterpart of :func:`embed_inputs` -> [T, D].
+
+    Each request's segment in the flat stream is ``[frontend prefix ; text]``
+    (the frontend rows are a FIXED-LENGTH prefix of length
+    ``cfg.frontend_len``); the projected frontend embeddings are scattered
+    onto the prefix rows at ``cu_seqlens[r] + [0, F)``, overwriting the
+    placeholder token embeddings the engine wrote there. Padding requests
+    (``seq_lens == 0``) scatter nowhere — their rows are redirected out of
+    bounds and dropped, so a bucket-exact stream's real tail rows are never
+    clobbered. Text-only archs (``frontend_dim == 0``) reduce to a plain
+    embedding lookup."""
+    x = LM.embed_tokens(params["embed"], flat_tokens)          # [T, D]
+    if cfg.frontend_dim:
+        assert frontend is not None, f"{cfg.name} needs frontend embeddings"
+        n_rows, D = x.shape
+        F = cfg.frontend_len
+        fe = jnp.einsum("rfe,ed->rfd", frontend.astype(x.dtype),
+                        params["frontend"]["proj"])            # [R, F, D]
+        rows = cu_seqlens[:, None] + jnp.arange(F, dtype=jnp.int32)[None]
+        rows = jnp.where((seq_lens > 0)[:, None], rows, n_rows)  # pad -> OOB
+        x = x.at[rows.reshape(-1)].set(fe.reshape(-1, D), mode="drop")
+    return x
 
 
 def _final(params, cfg, h):
@@ -175,23 +210,33 @@ def serve_refresh_packed(
     seg_ids: jax.Array,          # [T] int32 ascending request id
     token_valid: jax.Array,      # [T] bool (False on bucket padding)
     cu_seqlens: jax.Array,       # [R] int32 flat start offset per request
-    seq_lens: jax.Array,         # [R] int32 true length per request
-    block_start: jax.Array,      # [R] int32 block offset within the request
+    seq_lens: jax.Array,         # [R] int32 true SEGMENT length per request
+    block_start: jax.Array,      # [R] int32 block offset within the SEGMENT
     serve: T.ServeContext,
+    frontend: Optional[jax.Array] = None,   # [R, F, F_dim] (vlm/audio)
 ) -> RefreshOut:
     """Token-packed Refresh (§4.1 flattened engine): one flat ``[T, ...]``
     stream replaces the padded ``[B, S]`` batch, so compute scales with real
     tokens. Attention families run the segment-masked varlen attention
     stream; SSM/hybrid families run the segment-reset varlen SSD scan (jnp
     associative-scan fallback or the Pallas ``kernels/ssm_scan`` kernel).
+    Modality-frontend archs (vlm/audio) pack too: each request's segment is
+    ``[frontend prefix ; text]`` (:func:`embed_inputs_packed` scatters the
+    projected frontend rows onto the fixed-length prefix), so ``seq_lens``,
+    ``positions``, and ``block_start`` are all expressed over the full
+    prefix+text segment and the whole segment attends/selects as one
+    sequence — exactly the padded oracle's geometry, minus the rectangle.
     Emits the identical per-request ``RefreshOut`` contract as
     :func:`serve_refresh` (block hidden [R, Sb, D] + per-slot cache), which
     is kept as the correctness oracle for every family on this path."""
     if cfg.frontend_dim:
-        raise NotImplementedError(
-            f"packed refresh needs a text-only token stream; "
-            f"{cfg.name} ({cfg.family}) carries a modality frontend")
-    x = LM.embed_tokens(params["embed"], flat_tokens[None])   # [1, T, D]
+        # segments are up to frontend_len longer than the text cap: widen
+        # the per-request length bound that drives the select/pack gather
+        # view and the windowed jnp attention fallback
+        serve = dataclasses.replace(
+            serve, max_seq_len=serve.max_seq_len + cfg.frontend_len)
+    x = embed_inputs_packed(params, cfg, flat_tokens, cu_seqlens, seq_lens,
+                            frontend)[None]                   # [1, T, D]
     x = L.constrain(x, "act3d")
     if cfg.family in ATTN_FAMILIES:
         h, cache, _ = T.forward_full_packed(
@@ -249,14 +294,15 @@ def serve_reuse_packed(
     never a pow2 batch bucket). Attention families run the flat varlen
     cross-attention; SSM blocks decode recurrently from their cached states
     (block-exact — the packed win is the exact request count); hybrids
-    combine both with a causal shared block. Emits the flat ``[Tq, D]``
-    final-normed hidden stream the packed logit stage consumes directly; the
-    padded :func:`serve_reuse` is kept as the correctness oracle for every
-    family, same policy as Refresh."""
-    if cfg.frontend_dim:
-        raise NotImplementedError(
-            f"packed reuse needs a text-only token stream; "
-            f"{cfg.name} ({cfg.family}) carries a modality frontend")
+    combine both with a causal shared block. Modality-frontend archs take
+    this path unchanged: the active block is always text, so the Reuse
+    stream is text-only by construction — the frontend prefix participates
+    only through whatever rows Refresh retained into the gathered cache
+    (and through the absolute ``flat_positions``, which are offset by
+    ``frontend_len``). Emits the flat ``[Tq, D]`` final-normed hidden
+    stream the packed logit stage consumes directly; the padded
+    :func:`serve_reuse` is kept as the correctness oracle for every family,
+    same policy as Refresh."""
     Sb = serve.block_size
     Tq = flat_tokens.shape[0]
     R = Tq // Sb

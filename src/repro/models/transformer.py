@@ -344,8 +344,13 @@ def forward_full_packed(
 
     One ragged ``[T, ...]`` stream replaces the padded ``[B, S]`` batch;
     requests are delimited by ``cu_seqlens``/``seg_ids`` and attention is
-    segment-masked (kernel or chunked-jnp — never an [S, S] bias). Returns
-    (flat hidden [1, T, D], per-request PackedKV with leading [L] axis, aux).
+    segment-masked (kernel or chunked-jnp — never an [S, S] bias). The
+    stream is family-agnostic: for the modality-frontend archs the caller
+    (``backbone.serve_refresh_packed``) embeds each segment as
+    ``[frontend prefix ; text]`` and widens ``serve.max_seq_len`` by
+    ``frontend_len`` — prefix rows are ordinary stream rows here (they
+    attend, score, and are retainable). Returns (flat hidden [1, T, D],
+    per-request PackedKV with leading [L] axis, aux).
     """
     assert serve.max_seq_len > 0, "packed path needs ServeContext.max_seq_len"
     _, T, _ = x.shape

@@ -1,0 +1,308 @@
+"""Modality-frontend (vlm/audio) token packing: the frontend-prefix path.
+
+Each request's segment in the packed Refresh stream is ``[frontend prefix ;
+text]`` — ``frontend_len`` projected rows scattered ahead of the text
+embeddings (``backbone.embed_inputs_packed``). The padded
+``serve_refresh``/``serve_reuse``/``decode_tokens`` paths stay the
+correctness oracles (same policy as every other family): block hidden AND
+captured caches must agree, the engine must serve vlm/audio with zero
+pow2-padded dispatches under ``varlen_pack``, and frontend prefixes must
+never leak into the Reuse or logit cu_seqlens.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ServeConfig
+from repro.core.engine import Engine
+from repro.core.request import Request, State
+from repro.core.scheduler import PhaseMultiplexedScheduler
+from repro.kernels.flash_varlen import PAD_SEG
+from repro.models import backbone as BB
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(19)
+
+FRONTEND_ARCHS = ("internvl2-76b", "musicgen-medium")
+
+SERVE = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                    block_size=8, steps_per_block=8, max_seq_len=128,
+                    max_slots=8, max_refresh_per_iter=2,
+                    selection="head", scheduler="phase", logit_mode="chunked",
+                    varlen_pack=True, token_bucket=64)
+
+
+def _frontend_batch(cfg, lens, S, seed=0):
+    """Padded-batch AND packed-stream views of one ragged frontend batch.
+
+    Returns (toks [B,S], valid [B,F+S], fe [B,F,fdim], flat stream pieces):
+    every stream segment is F prefix rows followed by the request's text."""
+    rng = np.random.default_rng(seed)
+    F = cfg.frontend_len
+    B = len(lens)
+    toks = np.zeros((B, S), np.int32)
+    valid = np.zeros((B, F + S), bool)
+    fe = rng.standard_normal((B, F, cfg.frontend_dim)).astype(np.float32)
+    for j, L in enumerate(lens):
+        toks[j, :L] = rng.integers(0, cfg.vocab_size - 1, L)
+        valid[j, : F + L] = True
+    t_real = sum(F + L for L in lens)
+    tp = -(-t_real // 64) * 64
+    flat = np.zeros(tp, np.int32)
+    pos = np.zeros(tp, np.int32)
+    seg = np.full(tp, PAD_SEG, np.int32)
+    val = np.zeros(tp, bool)
+    cu = np.full(B, max(0, tp - 1), np.int32)
+    sl = np.zeros(B, np.int32)
+    off = 0
+    for j, L in enumerate(lens):
+        ln = F + L
+        flat[off + F: off + ln] = toks[j, :L]
+        pos[off: off + ln] = np.arange(ln)
+        seg[off: off + ln] = j
+        val[off: off + ln] = True
+        cu[j] = off
+        sl[j] = ln
+        off += ln
+    return toks, valid, fe, flat, pos, seg, val, cu, sl
+
+
+@pytest.mark.parametrize("arch", FRONTEND_ARCHS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_packed_refresh_matches_padded_frontend(arch, use_kernel):
+    """serve_refresh_packed with frontend-prefix segments: block hidden AND
+    the captured packed-KV cache must reproduce the padded oracle."""
+    cfg = reduced(ARCHS[arch])
+    F = cfg.frontend_len
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=24, q_chunk=32, max_seq_len=96)
+    ctx_pk = dataclasses.replace(ctx, use_flash_refresh=use_kernel)
+    rng = np.random.default_rng(29)
+    for trial in range(2):
+        lens = [int(x) for x in rng.integers(12, 96, size=3)]
+        # block offsets in FULL-sequence coordinates (prefix first)
+        bstarts = F + np.array([((L - 8) // 8) * 8 for L in lens], np.int32)
+        toks, valid, fe, flat, pos, seg, val, cu, sl = _frontend_batch(
+            cfg, lens, 96, seed=trial)
+        out_pad = BB.serve_refresh(
+            params, cfg, jnp.asarray(toks), jnp.asarray(bstarts), ctx,
+            frontend=jnp.asarray(fe), token_valid=jnp.asarray(valid))
+        out_pk = BB.serve_refresh_packed(
+            params, cfg, jnp.asarray(flat), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(val), jnp.asarray(cu),
+            jnp.asarray(sl), jnp.asarray(bstarts), ctx_pk,
+            frontend=jnp.asarray(fe))
+        np.testing.assert_allclose(
+            np.asarray(out_pk.block_hidden, np.float32),
+            np.asarray(out_pad.block_hidden, np.float32), atol=1e-4)
+        # the retained sets must agree too — frontend rows are selectable
+        # exactly like text rows on both paths
+        pos_eq = (np.asarray(out_pk.cache.pos)
+                  == np.asarray(out_pad.cache.pos)).mean()
+        assert pos_eq > 0.99, pos_eq
+
+
+@pytest.mark.parametrize("arch", FRONTEND_ARCHS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_packed_reuse_matches_padded_frontend(arch, use_kernel):
+    """serve_reuse_packed for frontend archs (text-only block stream against
+    caches that may retain frontend rows) must reproduce the padded oracle."""
+    cfg = reduced(ARCHS[arch])
+    F = cfg.frontend_len
+    params = BB.init_params(cfg, KEY)
+    ctx = T.ServeContext(block_size=8, retain=24, q_chunk=32, max_seq_len=96)
+    ctx_pk = dataclasses.replace(ctx, use_flash_kernel=use_kernel)
+    rng = np.random.default_rng(31)
+    lens = [int(x) for x in rng.integers(16, 96, size=3)]
+    bs_text = np.array([((L - 8) // 8) * 8 for L in lens], np.int32)
+    bstarts = F + bs_text
+    toks, valid, fe, *_ = _frontend_batch(cfg, lens, 96, seed=1)
+    out = BB.serve_refresh(
+        params, cfg, jnp.asarray(toks), jnp.asarray(bstarts), ctx,
+        frontend=jnp.asarray(fe), token_valid=jnp.asarray(valid))
+    btok = np.stack([toks[j, bs_text[j]: bs_text[j] + 8]
+                     for j in range(len(lens))])
+    bpos = np.stack([np.arange(b, b + 8) for b in bstarts]).astype(np.int32)
+    h_pad = BB.serve_reuse(params, cfg, jnp.asarray(btok), jnp.asarray(bpos),
+                           out.cache, ctx)
+    h_pk = BB.serve_reuse_packed(
+        params, cfg, jnp.asarray(btok.reshape(-1)),
+        jnp.asarray(bpos.reshape(-1)), out.cache, ctx_pk)
+    np.testing.assert_allclose(
+        np.asarray(h_pk, np.float32).reshape(len(lens), 8, -1),
+        np.asarray(h_pad, np.float32), atol=2e-4)
+
+
+def test_embed_inputs_packed_never_clobbers_real_tail():
+    """A bucket-exact stream (t_real == tp) puts the pad requests' redirect
+    row AT a real token: embed_inputs_packed must scatter frontend rows for
+    real requests only (pad requests carry seq_len 0 and are dropped)."""
+    cfg = reduced(ARCHS["internvl2-76b"])
+    F = cfg.frontend_len
+    params = BB.init_params(cfg, KEY)
+    rng = np.random.default_rng(2)
+    tp = 32
+    flat = rng.integers(0, cfg.vocab_size - 1, tp).astype(np.int32)
+    # one real request filling the bucket exactly + one pad request whose
+    # cu points at the (real) final row, the engine's pad convention
+    cu = jnp.asarray(np.array([0, tp - 1], np.int32))
+    sl = jnp.asarray(np.array([tp, 0], np.int32))
+    fe = jnp.asarray(
+        rng.standard_normal((2, F, cfg.frontend_dim)).astype(np.float32))
+    x = BB.embed_inputs_packed(params, cfg, jnp.asarray(flat), cu, sl, fe)
+    from repro.models import lm_head as LM
+    ref = LM.embed_tokens(params["embed"], jnp.asarray(flat))
+    proj = jnp.einsum("rfe,ed->rfd", fe, params["frontend"]["proj"])
+    # prefix rows of the real request carry the projected frontend ...
+    np.testing.assert_allclose(np.asarray(x[:F]), np.asarray(proj[0]),
+                               atol=1e-6)
+    # ... and every other row, INCLUDING the final one the pad request
+    # points at, is the untouched token embedding
+    np.testing.assert_allclose(np.asarray(x[F:]), np.asarray(ref[F:]),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layout: frontend prefixes live in Refresh cu_seqlens ONLY
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 8), budget=st.integers(128, 512),
+       cap=st.integers(1, 4), seed=st.integers(0, 99))
+def test_frontend_prefix_never_leaks_into_reuse_or_logit(n, budget, cap,
+                                                         seed):
+    """Property: with frontend-carrying requests, every Refresh segment is
+    frontend_len + total_len rows while Reuse segments stay exactly
+    block_size and logit_tokens counts one TEXT block per scheduled request
+    — the prefix can never leak into the Reuse or logit streams."""
+    F, fdim = 4, 8
+    cfg = dataclasses.replace(SERVE, max_num_batched_tokens=budget)
+    sched = PhaseMultiplexedScheduler(cfg)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        plen = int(rng.integers(4, 48))
+        if plen + 16 + 8 > cfg.max_seq_len or F + plen + 16 > budget:
+            plen = 8
+        fe = rng.standard_normal((F, fdim)).astype(np.float32)
+        sched.submit(Request(rid=i, prompt=np.zeros(plen, np.int32),
+                             gen_len=16, arrival=0.0, cfg=cfg, mask_id=255,
+                             frontend=fe))
+    for _ in range(4):
+        plan = sched.plan(now=1e9)
+        layout = plan.packed_layout(cap)
+        for seg in layout.refresh_chunks:
+            assert seg.token_counts == \
+                [F + r.total_len for r in seg.requests]
+        if layout.refresh_fused:
+            assert layout.refresh_fused.token_counts == \
+                [F + r.total_len for r in plan.refresh]
+        if layout.reuse:
+            cu = layout.reuse.cu_seqlens
+            assert list(np.diff(cu)) == [cfg.block_size] * len(plan.reuse)
+        assert layout.logit_tokens == \
+            (len(plan.refresh) + len(plan.reuse)) * cfg.block_size
+        # scheduling currency counts the prefix in Refresh only
+        assert plan.query_tokens <= budget
+        for r in plan.refresh:
+            assert r.query_tokens == F + r.total_len
+        for r in plan.reuse:
+            assert r.query_tokens == cfg.block_size
+        for r in plan.refresh + plan.reuse:
+            blk = r.block_tokens().copy()
+            blk[:] = 1
+            r.advance(blk, now=0.0)
+            if r.state == State.FINISHED:
+                sched.finish(r)
+
+
+# ---------------------------------------------------------------------------
+# engine: vlm/audio serve fully packed, padded oracle agrees end-to-end
+# ---------------------------------------------------------------------------
+
+def _serve_engine(serve, arch, n=5, seed=3, forbid_padded=False):
+    cfg = reduced(ARCHS[arch])
+    eng = Engine(cfg, serve, seed=seed)
+    if forbid_padded:
+        def _boom(*a, **k):
+            raise AssertionError("pow2-padded dispatch on the packed path")
+        eng._run_refresh = _boom
+        eng._run_reuse = _boom
+        eng._decode_fn = _boom
+    rng = np.random.default_rng(seed)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                    int(rng.integers(8, 40))),
+                       gen_len=16, arrival=0.0, rid=i) for i in range(n)]
+    stats = eng.run()
+    return eng, reqs, stats
+
+
+@pytest.mark.parametrize("arch", FRONTEND_ARCHS)
+def test_engine_frontend_archs_run_packed(arch):
+    """Acceptance: under varlen_pack a vlm and an audio config serve
+    Refresh, Reuse, AND the logit stage with zero pow2-padded dispatches."""
+    eng, reqs, stats = _serve_engine(SERVE, arch, n=4, forbid_padded=True)
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert all((r.output_tokens() != eng.mask_id).all() for r in reqs)
+    assert stats.packed_refresh_calls > 0 and stats.padded_refresh_calls == 0
+    assert stats.packed_reuse_calls > 0 and stats.padded_reuse_calls == 0
+
+
+@pytest.mark.parametrize("arch", FRONTEND_ARCHS)
+def test_engine_frontend_packed_padded_same_totals(arch):
+    """The packed frontend-prefix engine and the padded oracle commit the
+    same tokens on the same workload (identical per-request outputs), and
+    packed waste is never worse on any stage."""
+    _, r_pk, s_pk = _serve_engine(SERVE, arch, n=5, seed=3)
+    _, r_pd, s_pd = _serve_engine(
+        dataclasses.replace(SERVE, varlen_pack=False), arch, n=5, seed=3)
+    assert s_pk.committed_tokens == s_pd.committed_tokens
+    assert all(r.state == State.FINISHED for r in r_pk + r_pd)
+    for a, b in zip(r_pk, r_pd):
+        assert np.array_equal(a.output_tokens(), b.output_tokens())
+    # real counts include the frontend prefix on both paths; the padded
+    # oracle pays the pow2 [batch, frontend_len + max_seq_len] rectangle
+    assert s_pk.refresh_tokens_real == s_pd.refresh_tokens_real
+    assert s_pk.refresh_tokens_exec < s_pd.refresh_tokens_exec
+    assert s_pk.refresh_waste <= s_pd.refresh_waste
+    assert s_pk.reuse_waste <= s_pd.reuse_waste
+    assert s_pk.logit_waste <= s_pd.logit_waste
+
+
+def test_engine_frontend_warmup_covers_runtime_buckets():
+    """The warmup bucket audit extends to frontend archs: runtime may never
+    request a (token, request) bucket beyond what warmup compiled."""
+    def keys(eng):
+        return {"refresh": set(eng._refresh_jit),
+                "refresh_packed": set(eng._refresh_packed_jit),
+                "reuse": set(eng._reuse_jit),
+                "reuse_packed": set(eng._reuse_packed_jit),
+                "decode": set(eng._decode_jit),
+                "decode_packed": set(eng._decode_packed_jit)}
+
+    def bound(ks):
+        t = [(k,) if isinstance(k, int) else tuple(k) for k in ks]
+        return None if not t else tuple(max(x[i] for x in t)
+                                        for i in range(len(t[0])))
+
+    cfg = reduced(ARCHS["internvl2-76b"])
+    eng = Engine(cfg, SERVE, seed=0)
+    eng.warmup()
+    warmed = {n: bound(k) for n, k in keys(eng).items()}
+    rng = np.random.default_rng(1)
+    for i in range(7):
+        eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                int(rng.integers(8, 40))),
+                   gen_len=16, arrival=0.0, rid=i)
+    eng.run()
+    for name, ks in keys(eng).items():
+        b = warmed[name]
+        if b is None:
+            assert not ks, f"{name}: compiled without any warmup"
+            continue
+        a = bound(ks)
+        assert all(x <= w for x, w in zip(a, b)), (name, a, b)

@@ -291,16 +291,8 @@ def test_windowed_stream_attention_matches_plain():
                                np.asarray(ref_out)[val], atol=2e-5)
 
 
-def test_packed_refresh_rejects_frontend():
-    """Only modality-frontend archs remain on the padded oracle — their
-    frontend rows are rectangular by construction."""
-    cfg = reduced(ARCHS["internvl2-76b"])
-    params = BB.init_params(cfg, KEY)
-    ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
-    z = jnp.zeros((32,), jnp.int32)
-    with pytest.raises(NotImplementedError):
-        BB.serve_refresh_packed(params, cfg, z, z, z, jnp.ones((32,), bool),
-                                z[:1], z[:1], z[:1], ctx)
+# modality-frontend (vlm/audio) packed-vs-padded agreement lives in
+# tests/test_frontend_packing.py — no family rejects the packed path anymore.
 
 
 # ---------------------------------------------------------------------------
@@ -650,15 +642,6 @@ def test_packed_reuse_matches_padded(arch, use_kernel):
             np.asarray(h_pad, np.float32), atol=2e-4)
 
 
-def test_packed_reuse_rejects_frontend():
-    cfg = reduced(ARCHS["internvl2-76b"])
-    params = BB.init_params(cfg, KEY)
-    ctx = T.ServeContext(block_size=8, retain=16, q_chunk=32, max_seq_len=64)
-    z = jnp.zeros((16,), jnp.int32)
-    with pytest.raises(NotImplementedError):
-        BB.serve_reuse_packed(params, cfg, z, z, None, ctx)
-
-
 def test_cross_kernel_matches_masked_reference():
     """The cross-attention varlen kernel (packed queries vs per-segment KV,
     per-head KV positions/validity) against a full-mask jnp reference."""
@@ -883,15 +866,15 @@ def test_budgeting_packed_tokens_buy_slots():
                        logit_mode="chunked")
     packed = dataclasses.replace(base, varlen_pack=True)
     assert max_exec_tokens(packed, cfg) < max_exec_tokens(base, cfg)
-    # the scan families pack now (segment-reset varlen scan) and are billed
-    # by packed tokens; only modality-frontend archs keep the padded
-    # reservation under varlen_pack (the padded-oracle fallback executes
-    # the full rectangle)
+    # every family is billed by packed tokens now: the scan families
+    # (segment-reset varlen scan) AND the modality-frontend archs
+    # (frontend-prefix segments) — no padded reservation survives under
+    # varlen_pack
     from repro.configs import get_config as _gc
     ssm_cfg = _gc("mamba2-130m")
     assert max_exec_tokens(packed, ssm_cfg) < max_exec_tokens(base, ssm_cfg)
     vlm_cfg = _gc("internvl2-76b")
-    assert max_exec_tokens(packed, vlm_cfg) == max_exec_tokens(base, vlm_cfg)
+    assert max_exec_tokens(packed, vlm_cfg) < max_exec_tokens(base, vlm_cfg)
     p_pad = plan_memory(cfg, base, 24 << 30)
     p_pk = plan_memory(cfg, packed, 24 << 30)
     assert p_pk.activation_bytes < p_pad.activation_bytes
@@ -917,12 +900,12 @@ def test_budgeting_bills_reuse_and_logit_by_packed_tokens():
         pow2_bucket(base.max_slots) * base.block_size
     assert reuse_exec_tokens(packed, cfg) < reuse_exec_tokens(base, cfg)
     assert reuse_exec_tokens(packed, cfg) % packed.token_bucket == 0
-    # the SSM family packs its Reuse stream now; only frontend archs keep
-    # the padded reservation under varlen_pack
+    # every family packs its Reuse stream now — SSM and the frontend archs
+    # included (the Reuse stream is text-only for vlm/audio too)
     ssm = get_config("mamba2-130m")
     assert reuse_exec_tokens(packed, ssm) < reuse_exec_tokens(base, ssm)
     vlm = get_config("internvl2-76b")
-    assert reuse_exec_tokens(packed, vlm) == reuse_exec_tokens(base, vlm)
+    assert reuse_exec_tokens(packed, vlm) < reuse_exec_tokens(base, vlm)
     # logit stage: ragged N → token-bucket rounding beats the pow2 bucket
     # (and the logit head packs for every family, SSM included)
     n = 2500
