@@ -1,10 +1,12 @@
 """Paper Fig.3 + Table 4: serving throughput per system/workload/arrival rate.
 
 Reported: tok/s per cell, dLLM-Serve's speedup over the best baseline (the
-paper's headline: 1.61-1.81×), and per-arch packed-vs-padded waste rows —
+paper's headline: 1.61-1.81×), per-arch packed-vs-padded waste rows —
 one family per execution path (attention stream, segment-reset SSD scan,
 hybrid, frontend-prefix segments) so a packing regression in any path shows
-up as a per-arch waste ratio, not just in the llada-only grid.
+up as a per-arch waste ratio, not just in the llada-only grid — and mesh
+rows (1×1 vs 1×2 host-device subprocess runs: per-device exec tokens +
+modeled throughput, tracking the sharded-serving trajectory).
 
 Flags and the row schema are documented in ``docs/benchmarks.md``."""
 from benchmarks._grid import SYSTEMS, WORKLOADS, best_baseline, grid, ours
@@ -50,6 +52,71 @@ def per_arch_waste(quick: bool = True):
     return out
 
 
+def mesh_rows(quick: bool = True):
+    """``throughput/mesh/<shape>/...`` rows: the same burst trace served on
+    a 1×1 vs 1×2 host-device mesh (CPU subprocesses under
+    ``--xla_force_host_platform_device_count=2``), reporting per-device exec
+    tokens, profiler-sized slots, p99 latency, and modeled throughput — the
+    sharded-serving perf trajectory. The mesh signal shows up three ways:
+    per-device exec tokens halve (TP splits the work), the per-device memory
+    plan buys ~2× slots (capacity coupling), and latency/throughput improve
+    once the trace pressures the 1-device slot count. A mesh that silently
+    collapses to fewer devices than requested raises."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+    # pin the CPU platform: --xla_force_host_platform_device_count is a
+    # no-op on a GPU/TPU backend (the mesh would fail to build); append to
+    # any pre-existing XLA_FLAGS rather than clobbering them
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    env.pop("REPRO_MESH", None)      # --mesh below is authoritative
+    n = 12 if quick else 24          # > the 1-device slot plan: slot-bound
+    out = []
+    for mesh in ("1,1", "1,2"):
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            path = f.name
+        try:
+            # saturating arrival rate (the _grid sweep's rps≈6 wall): an
+            # under-loaded trace is arrival-dominated and would show no
+            # modeled-clock separation between mesh sizes
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.serve",
+                 "--arch", "llada-8b", "--system", "dllm-serve",
+                 "--workload", "burst", "--rps", "6.0", "--n", str(n),
+                 "--mesh", mesh, "--out", path],
+                capture_output=True, text=True, env=env, timeout=900)
+            if r.returncode != 0:
+                raise RuntimeError(
+                    f"mesh={mesh} serve failed: {r.stderr[-1000:]}")
+            with open(path) as f:
+                res = json.load(f)
+        finally:
+            os.unlink(path)
+        want = 1
+        for d in mesh.split(","):
+            want *= int(d)
+        if res["mesh_devices"] != want:
+            raise RuntimeError(
+                f"mesh {mesh} collapsed to {res['mesh_devices']} device(s)")
+        tag = mesh.replace(",", "x")
+        us_per_tok = 1e6 / max(res["throughput_tok_s"], 1e-9)
+        out.append((f"throughput/mesh/{tag}/modeled_tok_s", us_per_tok,
+                    f"{res['throughput_tok_s']:.2f}tok_s"
+                    f"|devices={res['mesh_devices']}"
+                    f"|slots={res['max_slots']}"
+                    f"|p99={res['p99_latency']:.3f}s"))
+        for stage in ("refresh", "reuse", "logit"):
+            out.append((
+                f"throughput/mesh/{tag}/{stage}_exec_tokens_per_device", 0.0,
+                f"{res[f'{stage}_tokens_exec_per_device']:.0f}"
+                f"(total{res[f'{stage}_tokens_exec']})"))
+    return out
+
+
 def run(quick: bool = True):
     rows = grid(quick)
     out = []
@@ -85,4 +152,5 @@ def run(quick: bool = True):
                         f"{base['refresh_tokens_real']}real="
                         f"{base['refresh_waste']:.3f}x"))
     out.extend(per_arch_waste(quick))
+    out.extend(mesh_rows(quick))
     return out

@@ -158,6 +158,38 @@ class ServeConfig:
     use_flash_kernel: bool = False        # pallas attention in engine steps
     vocab_tile: int = 1024               # V-tile for the fused logit kernel
     dtype: str = "float32"
+    # --- mesh serving (tensor-parallel packed pipeline) ----------------------
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    # (data, model) device mesh the engine executes under. None = no mesh
+    # (the single-device path, bit-identical to a 1×1 mesh). Under a mesh the
+    # params are placed by ``launch.sharding.Rules.params``, the KV slot pool
+    # is sharded by ``Rules.cache`` (KV heads over ``model`` when divisible,
+    # retained-length fallback otherwise), every packed stage executes
+    # tensor-parallel (vocab-parallel logit argmax included), and
+    # ``plan_memory`` bills weights/activations/KV-slot bytes PER DEVICE.
+    # Pallas kernel paths don't partition — the engine rejects
+    # ``use_flash_kernel`` / ``logit_mode="fused"`` when the model axis > 1.
+    iter_log_cap: int = 0                # keep only the last N iter_log rows
+    # (0 = unlimited — a long modeled-clock run otherwise accumulates one
+    # dict per iteration forever, which a production engine cannot afford)
+
+    @property
+    def mesh_devices(self) -> int:
+        """Total devices of ``mesh_shape`` (1 when no mesh is configured)."""
+        n = 1
+        for d in self.mesh_shape or ():
+            n *= d
+        return n
+
+    @property
+    def mesh_model(self) -> int:
+        """Size of the tensor-parallel (``model``) axis; trailing mesh dim."""
+        return self.mesh_shape[-1] if self.mesh_shape else 1
+
+    @property
+    def mesh_data(self) -> int:
+        """Combined data-parallel axis size (all leading mesh dims)."""
+        return self.mesh_devices // self.mesh_model
 
     @property
     def retained_len(self) -> int:

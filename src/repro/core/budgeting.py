@@ -14,8 +14,22 @@ Two profiling modes:
   * measured  — lower + compile the actual step functions and read
     ``memory_analysis().temp_size_in_bytes`` (exact under XLA's static
     planner; used by the logit-budget benchmark).
+
+Mesh serving (``ServeConfig.mesh_shape``): every term is billed **per
+device**. ``hbm_bytes`` is per-device HBM; weights follow the exact
+``launch.sharding.Rules.params`` placement (evaluated shape-only over a
+:class:`~repro.launch.mesh.SimMesh`, so a 2-GPU plan computes inside a 1-CPU
+test process), KV-slot bytes follow the ``Rules.cache`` within-slot sharding
+(KV heads over ``model`` when divisible, retained-length fallback otherwise
+— a slot's *count* stays global: each device holds 1/TP of every slot), and
+activation/logit reservations shard over heads/FFN/vocab when divisible.
+That keeps the paper's §4.2-4.3 coupling live on an N-GPU mesh: per-device
+bytes reclaimed from weights + activations convert into MORE slots, never
+fewer. The data axis is billed conservatively (slots replicated over it).
 """
 from __future__ import annotations
+
+import functools
 
 from dataclasses import dataclass
 
@@ -24,6 +38,56 @@ from repro.configs.base import ModelConfig, ServeConfig
 
 def dtype_bytes(dtype: str) -> int:
     return {"float32": 4, "bfloat16": 2, "float16": 2}[dtype]
+
+
+def _tp_div(n: int, m: int) -> int:
+    """Shard count the model axis contributes to a dim of size ``n`` —
+    ``m`` on exact division (the Rules.div law), else 1 (replicated)."""
+    return m if m > 1 and n and n % m == 0 and n >= m else 1
+
+
+def _sharded_tree_bytes(mesh, shapes, specs) -> int:
+    """Per-device bytes of a (shape-tree, spec-tree) pair: each leaf's dims
+    divide by the combined size of the mesh axes its spec names (ceil — the
+    rules only shard on exact division anyway)."""
+    import jax
+
+    def leaf_bytes(leaf, spec):
+        total = leaf.dtype.itemsize
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            axes = (entry,) if isinstance(entry, str) else (entry or ())
+            shards = 1
+            for a in axes:
+                shards *= mesh.shape[a]
+            total *= -(-dim // shards)
+        return total
+
+    # a PartitionSpec is itself a tuple pytree — flatten the spec tree up to
+    # the shape treedef so each P stays atomic alongside its shape leaf
+    s_leaves, treedef = jax.tree.flatten(shapes)
+    p_leaves = treedef.flatten_up_to(specs)
+    return int(sum(leaf_bytes(s, p) for s, p in zip(s_leaves, p_leaves)))
+
+
+@functools.lru_cache(maxsize=None)
+def weight_bytes_per_device(cfg: ModelConfig, mesh_shape) -> int:
+    """Per-device parameter bytes under the ACTUAL serving placement.
+
+    Shape-only: ``jax.eval_shape`` over ``init_params`` + the same
+    ``Rules.params`` specs the engine places with, summed per shard (a
+    :class:`SimMesh` stands in for the devices, so any mesh size can be
+    planned from any host). ``mesh_shape=None`` bills one device."""
+    import jax
+
+    from repro.launch.mesh import SimMesh
+    from repro.launch.sharding import Rules
+    from repro.models import backbone as BB
+
+    mesh = SimMesh(mesh_shape or (1, 1))
+    shapes = jax.eval_shape(functools.partial(BB.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    specs = Rules(cfg, mesh, train=False).params(shapes)
+    return _sharded_tree_bytes(mesh, shapes, specs)
 
 
 # ---------------------------------------------------------------------------
@@ -45,36 +109,84 @@ def logit_exec_tokens(serve: ServeConfig, n_logit_tokens: int) -> int:
 def logit_activation_bytes(cfg: ModelConfig, serve: ServeConfig,
                            n_logit_tokens: int) -> int:
     """Peak bytes of the output-projection stage under each C1 mode, billed
-    by *executed* rows (the engine's bucketing policy, not the real count)."""
+    by *executed* rows (the engine's bucketing policy, not the real count).
+    Vocab-parallel under a mesh: each device materializes its [n, V/TP]
+    shard (the argmax reduces across shards, never gathering [n, V])."""
     n_exec = logit_exec_tokens(serve, n_logit_tokens)
+    v_pd = cfg.vocab_size // _tp_div(cfg.vocab_size, serve.mesh_model)
     if serve.logit_mode == "monolithic":
         # the paper's §3.2 boom: the full [N, V] tensor (f32 after softcap)
-        return n_exec * cfg.vocab_size * 4
+        return n_exec * v_pd * 4
     if serve.logit_mode == "chunked":
-        return min(n_exec, serve.max_num_logits) * cfg.vocab_size * 4
+        return min(n_exec, serve.max_num_logits) * v_pd * 4
     # fused: the Pallas online kernel holds one [T_tile, V_tile] f32 block
+    # (single-device only — the engine rejects it on a model axis > 1)
     return 256 * serve.vocab_tile * 4
 
 
-def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
-    """Static per-request KV region (§4.5): r·L tokens, head-major dense."""
-    b = dtype_bytes(serve.dtype)
-    R = serve.retained_len
+def _slot_cache_shapes(cfg: ModelConfig, serve: ServeConfig, retain: int,
+                       batch: int = 1):
+    """Shape-only cache pytree of ``batch`` slots — the engine pool's real
+    per-slot geometry (family-specific leading layer axis included). The
+    single shape model for the per-device billing here AND the Rules.cache
+    property tests (``tests/test_sharding.py``)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.sparse_select import PackedKV
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(serve.dtype)
+
+    def kv_tree(nl):
+        kshape = (nl, batch, cfg.n_kv_heads, retain, cfg.resolved_head_dim)
+        return PackedKV(k=sds(kshape, dt), v=sds(kshape, dt),
+                        pos=sds(kshape[:-1], jnp.int32),
+                        valid=sds(kshape[:-1], jnp.bool_))
+
+    def ssm_shapes():
+        from repro.models.ssm import conv_channels
+        st = sds((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                  cfg.ssm_state), jnp.float32)
+        cv = sds((cfg.n_layers, batch, cfg.ssm_conv_kernel - 1,
+                  conv_channels(cfg)), dt)
+        return st, cv
+
     if cfg.family == "ssm":
-        st = cfg.n_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
-        cv = cfg.n_layers * (cfg.ssm_conv_kernel - 1) * (
-            cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) * b
-        return st + cv
-    dh = cfg.resolved_head_dim
-    n_attn = cfg.n_layers
+        from repro.models.ssm import SSMCache
+        st, cv = ssm_shapes()
+        return SSMCache(state=st, conv=cv)
     if cfg.family == "hybrid":
-        n_attn = cfg.n_layers // max(cfg.shared_attn_interval, 1)
-        st = cfg.n_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
-    else:
-        st = 0
-    kv = n_attn * cfg.n_kv_heads * R * dh * 2 * b
-    meta = n_attn * cfg.n_kv_heads * R * 5  # pos(i32) + valid(bool)
-    return kv + meta + st
+        from repro.models.hybrid import HybridCache, group_shape
+        n_groups, _, _ = group_shape(cfg)
+        st, cv = ssm_shapes()
+        return HybridCache(ssm_state=st, conv=cv, kv=kv_tree(n_groups))
+    return kv_tree(cfg.n_layers)
+
+
+@functools.lru_cache(maxsize=None)
+def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
+    """Static per-request KV region (§4.5): r·L tokens, head-major dense.
+
+    Per DEVICE under a mesh, evaluated from the ACTUAL ``Rules.cache``
+    specs over the engine's real pool geometry — the same single source of
+    truth the engine shards its slot pool with (one law, no analytic copy
+    to drift): KV heads over ``model`` when divisible, else the retained
+    length when divisible (the idle-TP fallback), else replicated; SSM
+    states shard over heads, conv tails replicate; nothing shards over
+    data (``data_parallel=False``, matching the pool). The retained length
+    is the engine's ``min(retained_len, max_seq_len - block_size)``, so
+    the divisibility decision is billed on the dimension the pool actually
+    allocates. The slot *count* is global — ``plan_memory`` divides
+    per-device pool bytes by this."""
+    from repro.launch.mesh import SimMesh
+    from repro.launch.sharding import Rules
+
+    retain = min(serve.retained_len,
+                 max(1, serve.max_seq_len - serve.block_size))
+    mesh = SimMesh(serve.mesh_shape or (1, 1))
+    specs = Rules(cfg, mesh, train=False).cache(1, retain,
+                                                data_parallel=False)
+    shapes = _slot_cache_shapes(cfg, serve, retain)
+    return _sharded_tree_bytes(mesh, shapes, specs)
 
 
 def can_pack_tokens(cfg: ModelConfig) -> bool:
@@ -155,31 +267,39 @@ def backbone_activation_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
     """Workspace for attention/MLP over one packed batch. Scaled by the
     *executed* tokens of the widest stage — Refresh (query-token budget
     under varlen packing, the padded rectangle otherwise) or Reuse (packed
-    block stream vs pow2 batch). The packed engine's smaller reservation is
-    converted into KV slots by :func:`plan_memory`."""
+    block stream vs pow2 batch). Under a mesh the wide intermediates shard
+    over the model axis (FFN hidden / attention heads; the [T, 3D] stream
+    stays replicated), so the reservation is per device. The packed (and
+    sharded) engine's smaller reservation is converted into KV slots by
+    :func:`plan_memory`."""
     b = dtype_bytes(serve.dtype)
+    m = serve.mesh_model
     T = max(max_exec_tokens(serve, cfg), reuse_exec_tokens(serve, cfg))
-    width = max(cfg.d_ff, cfg.n_heads * cfg.resolved_head_dim,
+    width = max(cfg.d_ff // _tp_div(cfg.d_ff, m),
+                cfg.n_heads * cfg.resolved_head_dim
+                // _tp_div(cfg.n_heads, m),
                 3 * cfg.d_model)
     return T * width * b * 2  # double-buffered
 
 
 @dataclass(frozen=True)
 class MemoryPlan:
-    weights_bytes: int
+    weights_bytes: int          # PER DEVICE (== global on 1 device/no mesh)
     activation_bytes: int       # reserved (incl. logit stage under the mode)
     logit_bytes: int
-    slot_bytes: int
+    slot_bytes: int             # per-device bytes of one (global) slot
     kv_pool_bytes: int
-    max_slots: int
+    max_slots: int              # global concurrent-request capacity
+    mesh_devices: int = 1
 
     def summary(self) -> str:
         gb = 1 << 30
-        return (f"weights={self.weights_bytes/gb:.2f}GiB "
+        mesh = f" mesh={self.mesh_devices}dev" if self.mesh_devices > 1 else ""
+        return (f"weights={self.weights_bytes/gb:.2f}GiB/dev "
                 f"act={self.activation_bytes/gb:.3f}GiB "
                 f"(logit={self.logit_bytes/gb:.3f}GiB) "
                 f"kv_pool={self.kv_pool_bytes/gb:.2f}GiB "
-                f"slots={self.max_slots}")
+                f"slots={self.max_slots}{mesh}")
 
 
 def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
@@ -189,8 +309,13 @@ def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
     Worst-case N_logit = one active block per resident request is bounded by
     slots·block; we budget for the scheduler-level cap instead:
     ``max_num_batched_tokens`` query tokens all needing logits.
+
+    Every term is per device (``hbm_bytes`` = one device's HBM). Under
+    ``serve.mesh_shape`` the weight/KV-slot/activation bytes shrink by the
+    sharded fractions, and the freed per-device headroom converts into MORE
+    global slots — the §4.2-4.3 capacity coupling extended across a mesh.
     """
-    weights = cfg.n_params() * dtype_bytes(cfg.dtype)
+    weights = weight_bytes_per_device(cfg, serve.mesh_shape)
     n_logit_worst = serve.max_num_batched_tokens
     logit = logit_activation_bytes(cfg, serve, n_logit_worst)
     act = backbone_activation_bytes(cfg, serve) + logit
@@ -198,7 +323,8 @@ def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
     slot = kv_slot_bytes(cfg, serve)
     pool = max(0, hbm_bytes - weights - act - guard)
     slots = min(serve.max_slots, pool // slot) if slot else serve.max_slots
-    return MemoryPlan(weights, act, logit, slot, pool, int(slots))
+    return MemoryPlan(weights, act, logit, slot, pool, int(slots),
+                      mesh_devices=serve.mesh_devices)
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,16 @@ Static-shape policy: two execution paths for the WHOLE iteration.
 
 Every jitted entry point is cached per bucket (padded: batch bucket; packed:
 token/request-granularity bucket).
+
+Mesh serving (``ServeConfig.mesh_shape``): the same pipeline executes
+tensor-parallel under a (data, model) device mesh — params placed by
+``launch.sharding.Rules.params``, the slot pool sharded by ``Rules.cache``,
+per-stage PartitionSpecs threaded through the jitted entry points via
+``repro.jax_compat.jit_sharded``, and the logit stage running vocab-parallel
+(argmax/logsumexp reduce across vocab shards). No mesh and a 1×1 mesh are
+bit-identical to each other, so all padded-vs-packed oracles keep anchoring
+correctness; the 1-vs-2-device agreement suite (``launch/shard_check.py``)
+anchors the sharded path. See ``docs/sharding.md``.
 """
 from __future__ import annotations
 
@@ -61,7 +71,9 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import jax_compat as JC
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import diffusion
 from repro.core.budgeting import (can_pack_tokens, pow2_bucket as _bucket,
@@ -70,6 +82,7 @@ from repro.kernels import flash_varlen as FV
 from repro.core.kv_pool import KVPool
 from repro.core.request import Phase, Request, State
 from repro.core.scheduler import make_scheduler
+from repro.launch.mesh import make_serving_mesh
 from repro.models import backbone as BB
 from repro.models import lm_head as LM
 from repro.models import transformer as T
@@ -97,8 +110,15 @@ class DeviceModel:
     launch_s: float = 1e-3
     peak_flops: float = 20e9
 
-    def call_cost(self, flops: float) -> float:
-        return self.launch_s + flops / self.peak_flops
+    def call_cost(self, flops: float, work_split: float = 1.0) -> float:
+        """Virtual seconds for one device call. ``work_split`` is the factor
+        by which the per-call FLOPs genuinely divide across devices — the
+        engine passes its tensor-parallel work split (1.0 when nothing
+        shards, up to the model-axis size when the matmul weights fully
+        divide; launch overhead is paid once regardless, and serving
+        implements no data parallelism so a data axis never contributes)."""
+        return self.launch_s + flops / (self.peak_flops
+                                        * max(1.0, work_split))
 
 
 @dataclass
@@ -125,6 +145,8 @@ class EngineStats:
     padded_refresh_calls: int = 0
     packed_reuse_calls: int = 0
     padded_reuse_calls: int = 0
+    # list when unlimited; the engine swaps in a maxlen deque under
+    # ServeConfig.iter_log_cap (O(1) eviction of the oldest rows)
     iter_log: List[dict] = field(default_factory=list)
 
     @property
@@ -158,7 +180,6 @@ class Engine:
         self._n_params = cfg.n_active_params()
         if params is None:
             params = BB.init_params(cfg, jax.random.PRNGKey(seed))
-        self.params = params
         self.mask_id = diffusion.mask_token_id(cfg.vocab_size)
         retain = min(serve.retained_len,
                      serve.max_seq_len - serve.block_size)
@@ -168,9 +189,83 @@ class Engine:
             q_chunk=min(T.L.DEFAULT_Q_CHUNK, serve.max_seq_len),
             use_flash_kernel=serve.use_flash_kernel,
             max_seq_len=serve.max_seq_len)
+        # ---- device mesh (tensor-parallel serving) -----------------------
+        # mesh_shape=(data, model): params placed by Rules.params, the slot
+        # pool sharded by Rules.cache, every stage jitted with per-stage
+        # PartitionSpecs (repro.jax_compat.jit_sharded). No mesh / 1×1 mesh
+        # executes the identical computation — the single-device path is the
+        # bit-identical anchor for all padded-vs-packed oracles.
+        if serve.mesh_model > 1 and (serve.use_flash_kernel
+                                     or serve.logit_mode == "fused"):
+            raise ValueError(
+                "Pallas kernel paths (use_flash_kernel / "
+                "logit_mode='fused') do not partition over a model axis "
+                "> 1; use the jnp paths (logit_mode='chunked' or "
+                "'monolithic') under a mesh")
+        self.mesh = make_serving_mesh(serve.mesh_shape)
+        self.mesh_devices = self.mesh.devices.size if self.mesh else 1
+        pool_shardings = None
+        if self.mesh is not None:
+            from functools import partial as _partial
+
+            from repro.launch.sharding import Rules
+            self.rules = Rules(cfg, self.mesh, train=False)
+            pshapes = jax.eval_shape(_partial(BB.init_params, cfg),
+                                     jax.random.PRNGKey(0))
+            self._pspecs = self.rules.params(pshapes)
+            params = jax.device_put(params, self.rules.named(self._pspecs))
+            # ONE cache layout for the slot pool, every gathered sub-batch,
+            # and every fresh Refresh cache (data_parallel=False: slots
+            # replicate over data, the model axis shards within a slot) —
+            # batch-size-dependent specs would diverge from the pool layout
+            # and break the in_shardings contract on data > 1 meshes
+            self._cache_spec = self.rules.cache(serve.max_slots + 1, retain,
+                                                data_parallel=False)
+            pool_shardings = self.rules.named(self._cache_spec)
+            # serving activation-sharding policy: replicate the token streams
+            # at stage boundaries (weights/heads/vocab carry the TP sharding)
+            # and pin the head weight vocab-parallel at its point of use so
+            # the logit stage computes [N, V/TP] shards with the argmax
+            # reducing across them. NamedSharding leaves (not bare specs):
+            # the engine's jits don't run under a mesh context manager.
+            from repro.models import layers as Lmod
+            v_ax = self.rules.div(cfg.vocab_size)
+            Lmod.set_sharding_policy(self.rules.named({
+                "act3d": P(None, None, None),
+                "packed_h": P(None, None),
+                "logit_w": P(None, v_ax),
+                "logit_w_tied": P(v_ax, None),
+            }))
+        else:
+            self.rules = None
+            self._pspecs = None
+            # the policy is process-global: a later single-device engine must
+            # not trace against a previous mesh engine's stale NamedShardings
+            # (the newest engine owns the policy — one serving mesh per
+            # process; the dryrun/train launchers set their own in their
+            # own processes and never construct an Engine)
+            from repro.models import layers as Lmod
+            Lmod.set_sharding_policy({})
+        self.params = params
         self.scheduler = make_scheduler(serve)
-        self.pool = KVPool(serve.max_slots)
+        self.pool = KVPool(serve.max_slots, shardings=pool_shardings)
         self.stats = EngineStats()
+        if serve.iter_log_cap:
+            from collections import deque
+            self.stats.iter_log = deque(maxlen=serve.iter_log_cap)
+        # modeled-clock TP work split: credit only the fraction of per-token
+        # work that ACTUALLY shards (same exact-division law the memory
+        # planner bills by) — total/per-device param bytes on a pure-TP
+        # (1, model) mesh is 1.0 when nothing divides and approaches
+        # mesh_model as the matmul weights shard, so an indivisible mesh
+        # can never fake a modeled speedup.
+        if serve.mesh_model > 1:
+            from repro.core.budgeting import weight_bytes_per_device
+            self._tp_work_split = (
+                weight_bytes_per_device(cfg, None)
+                / max(1, weight_bytes_per_device(cfg, (1, serve.mesh_model))))
+        else:
+            self._tp_work_split = 1.0
         # modality-frontend prefix rows per request (0 for text-only archs):
         # every Refresh geometry below spans frontend_len + text rows, and
         # block/reuse positions are offset by it (full-sequence coordinates).
@@ -188,20 +283,50 @@ class Engine:
         self._decode_packed_jit: Dict[int, callable] = {}
         self._rng = np.random.default_rng(seed)
 
+    @property
+    def tp_work_split(self) -> float:
+        """Factor by which per-token work genuinely divides across the TP
+        axis (1.0 ≤ split ≤ model-axis size; the modeled clock and the
+        per-device token metrics both use it)."""
+        return self._tp_work_split
+
     # ------------------------------------------------------------------
     # jitted step functions (cached per bucket size)
     # ------------------------------------------------------------------
+    def _stage_specs(self, n_stream: int, with_cache: bool = False):
+        """in_specs for one stage entry point: params carry their Rules
+        placement, token/offset streams replicate (the serving mesh's model
+        axis shards weights/heads/vocab, not tokens), and gathered caches
+        carry the slot pool's one fixed layout. None when no mesh is
+        configured (plain ``jax.jit``)."""
+        if self.mesh is None:
+            return None
+        in_specs = (self._pspecs,) + (P(),) * n_stream
+        if with_cache:
+            in_specs += (self._cache_spec,)
+        return in_specs
+
+    def _refresh_out_specs(self):
+        """Pin Refresh outputs: block hidden replicated, the captured cache
+        already in the slot pool's ``Rules.cache`` layout (so the pool write
+        is a sharded scatter, never a reshard)."""
+        if self.mesh is None:
+            return None
+        return BB.RefreshOut(block_hidden=P(), cache=self._cache_spec)
+
     def _refresh_fn(self, n: int):
         if n not in self._refresh_jit:
             ctx = self.ctx
 
-            @jax.jit
             def fn(params, tokens, token_valid, block_start, frontend):
                 return BB.serve_refresh(params, self.cfg, tokens, block_start,
                                         ctx, frontend=frontend,
                                         token_valid=token_valid)
 
-            self._refresh_jit[n] = fn
+            in_specs = self._stage_specs(4)
+            self._refresh_jit[n] = JC.jit_sharded(
+                fn, mesh=self.mesh, in_specs=in_specs,
+                out_specs=self._refresh_out_specs())
         return self._refresh_jit[n]
 
     def _token_bucket(self, n_tokens: int) -> int:
@@ -230,7 +355,6 @@ class Engine:
         if (tp, rp) not in self._refresh_packed_jit:
             ctx = self.ctx
 
-            @jax.jit
             def fn(params, flat_tokens, positions, seg_ids, token_valid,
                    cu_seqlens, seq_lens, block_start, frontend):
                 return BB.serve_refresh_packed(
@@ -238,59 +362,70 @@ class Engine:
                     token_valid, cu_seqlens, seq_lens, block_start, ctx,
                     frontend=frontend)
 
-            self._refresh_packed_jit[(tp, rp)] = fn
+            in_specs = self._stage_specs(8)
+            self._refresh_packed_jit[(tp, rp)] = JC.jit_sharded(
+                fn, mesh=self.mesh, in_specs=in_specs,
+                out_specs=self._refresh_out_specs())
         return self._refresh_packed_jit[(tp, rp)]
 
     def _reuse_fn(self, n: int):
         if n not in self._reuse_jit:
             ctx = self.ctx
 
-            @jax.jit
             def fn(params, block_tokens, block_positions, cache):
                 return BB.serve_reuse(params, self.cfg, block_tokens,
                                       block_positions, cache, ctx)
 
-            self._reuse_jit[n] = fn
+            in_specs = self._stage_specs(2, with_cache=True)
+            self._reuse_jit[n] = JC.jit_sharded(fn, mesh=self.mesh,
+                                                in_specs=in_specs)
         return self._reuse_jit[n]
 
     def _reuse_packed_fn(self, rp: int):
         if rp not in self._reuse_packed_jit:
             ctx = self.ctx
 
-            @jax.jit
             def fn(params, flat_tokens, flat_positions, cache):
                 return BB.serve_reuse_packed(params, self.cfg, flat_tokens,
                                              flat_positions, cache, ctx)
 
-            self._reuse_packed_jit[rp] = fn
+            in_specs = self._stage_specs(2, with_cache=True)
+            self._reuse_packed_jit[rp] = JC.jit_sharded(fn, mesh=self.mesh,
+                                                        in_specs=in_specs)
         return self._reuse_packed_jit[rp]
 
     def _decode_fn(self, n: int):
         if n not in self._decode_jit:
             serve = self.serve
 
-            @jax.jit
             def fn(params, h):
+                # vocab-parallel under a mesh: the head weight stays sharded
+                # over vocab (Rules placement) so each device computes its
+                # vocab shard's logits and the argmax/logsumexp reduce across
+                # shards — the full [N, V] never gathers onto one device.
                 return LM.decode_tokens(
                     params["embed"], self.cfg, h,
                     max_num_logits=serve.max_num_logits,
                     mode=serve.logit_mode, vocab_tile=serve.vocab_tile)
 
-            self._decode_jit[n] = fn
+            in_specs = self._stage_specs(1)
+            self._decode_jit[n] = JC.jit_sharded(fn, mesh=self.mesh,
+                                                 in_specs=in_specs)
         return self._decode_jit[n]
 
     def _decode_packed_fn(self, n: int):
         if n not in self._decode_packed_jit:
             serve = self.serve
 
-            @jax.jit
             def fn(params, h, valid):
                 return LM.decode_tokens_packed(
                     params["embed"], self.cfg, h, valid,
                     max_num_logits=serve.max_num_logits,
                     mode=serve.logit_mode, vocab_tile=serve.vocab_tile)
 
-            self._decode_packed_jit[n] = fn
+            in_specs = self._stage_specs(2)
+            self._decode_packed_jit[n] = JC.jit_sharded(fn, mesh=self.mesh,
+                                                        in_specs=in_specs)
         return self._decode_packed_jit[n]
 
     # ------------------------------------------------------------------
@@ -401,10 +536,17 @@ class Engine:
                     break
                 n = min(n * 2, self._logit_bucket(max_logits))
         else:
+            # padded decode buckets: the runtime requests pow2_bucket(N,
+            # lo=Sb) for N <= max_logits rows, so the bucket-cover invariant
+            # stops exactly at pow2_bucket(max_logits, lo=Sb) — the old
+            # ``while n <= max_logits * 2`` bound compiled one pow2 bucket
+            # beyond anything the runtime can ever request.
             n = Sb
-            while n <= max_logits * 2:
+            while True:
                 self._decode_fn(n)(self.params,
                                    jnp.zeros((n, self.cfg.d_model), dt))
+                if n >= _bucket(max_logits, lo=Sb):
+                    break
                 n *= 2
         return time.perf_counter() - t0
 
@@ -512,7 +654,10 @@ class Engine:
                 * cfg.n_layers
         if kind == "decode":
             flops = 2.0 * cfg.d_model * cfg.vocab_size * tokens
-        self.vtime += self.device.call_cost(flops)
+        # only the model (TP) axis splits real work — and only the sharded
+        # fraction of it (_tp_work_split: 1.0 when nothing divides; the data
+        # axis carries no serving parallelism and must not fake a speedup)
+        self.vtime += self.device.call_cost(flops, self._tp_work_split)
 
     # ------------------------------------------------------------------
     # one engine iteration
@@ -628,6 +773,10 @@ class Engine:
             self._commit(decoded, ids, conf,
                          self.vtime if self.clock == "modeled" else now)
 
+        # under iter_log_cap the log is a maxlen deque: appending evicts the
+        # oldest row in O(1) — the aggregate counters above carry the
+        # lifetime totals, so a long modeled-clock run doesn't grow host
+        # memory one dict per iteration forever
         self.stats.iter_log.append(dict(
             t=now, q_tokens=plan.query_tokens,
             n_refresh=len(plan.refresh), n_reuse=len(plan.reuse),

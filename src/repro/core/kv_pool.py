@@ -6,6 +6,14 @@ Holds one device-resident cache pytree whose second axis is the request slot
 Refresh writes a freshly packed cache into a request's slot; Reuse gathers
 slot slices for the scheduled sub-batch. The cache content is family-specific
 (PackedKV / SSMCache / HybridCache) — the pool is shape-agnostic.
+
+Mesh serving: the engine passes the pool a ``NamedSharding`` pytree built
+from ``launch.sharding.Rules.cache`` (KV heads over the ``model`` axis when
+divisible, retained-length fallback otherwise). The pool then allocates its
+backing pytree sharded and pins the scatter's output layout with
+``out_shardings`` so repeated writes can never drift the pool off its
+planned placement — per-device pool bytes are exactly what ``plan_memory``
+billed. Without shardings (no mesh) nothing changes.
 """
 from __future__ import annotations
 
@@ -17,16 +25,16 @@ import numpy as np
 
 
 class KVPool:
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int, shardings=None):
+        """``shardings``: optional NamedSharding pytree matching the cache
+        structure (leading slot axis included) — resolved lazily against the
+        first Refresh output in :meth:`ensure`."""
         self.max_slots = max_slots
         self.scratch_slot = max_slots
+        self.shardings = shardings
         self.cache = None          # device pytree, slot axis = 1
-        self._write = jax.jit(
-            lambda pool, cache, slots: jax.tree.map(
-                lambda P, c: P.at[:, slots].set(c), pool, cache),
-            donate_argnums=0)
-        self._gather = jax.jit(
-            lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool))
+        self._write = None
+        self._gather = None
 
     def ensure(self, cache_example) -> None:
         """Lazily allocate the pool from the first Refresh output's shapes."""
@@ -34,11 +42,33 @@ class KVPool:
             return
         n = self.max_slots + 1
 
-        def alloc(c):
+        def alloc(c, ns=None):
             shape = (c.shape[0], n) + tuple(c.shape[2:])
-            return jnp.zeros(shape, c.dtype)
+            if ns is None:
+                return jnp.zeros(shape, c.dtype)
+            # allocate each device's shard directly — jnp.zeros(global) +
+            # device_put would transiently hold the WHOLE pool on one
+            # device, defeating the per-device plan at exactly the scale
+            # the sharded pool enables
+            shard = np.zeros(ns.shard_shape(shape), c.dtype)
+            return jax.make_array_from_callback(shape, ns, lambda _: shard)
 
-        self.cache = jax.tree.map(alloc, cache_example)
+        if self.shardings is None:
+            self.cache = jax.tree.map(alloc, cache_example)
+            self._write = jax.jit(
+                lambda pool, cache, slots: jax.tree.map(
+                    lambda P, c: P.at[:, slots].set(c), pool, cache),
+                donate_argnums=0)
+        else:
+            self.cache = jax.tree.map(alloc, cache_example, self.shardings)
+            # pin the pool's planned layout across writes (donation keeps the
+            # update in place; out_shardings keeps GSPMD from re-laying it out)
+            self._write = jax.jit(
+                lambda pool, cache, slots: jax.tree.map(
+                    lambda P, c: P.at[:, slots].set(c), pool, cache),
+                donate_argnums=0, out_shardings=self.shardings)
+        self._gather = jax.jit(
+            lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool))
 
     def nbytes(self) -> int:
         if self.cache is None:

@@ -51,6 +51,35 @@ def get_active_mesh():
     return None if m.empty else m
 
 
+def named_shardings(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``.
+
+    Specs are the *leaves* (a PartitionSpec is itself a pytree on some jax
+    versions, so tree ops must treat it atomically)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def jit_sharded(fn, *, mesh, in_specs=None, out_specs=None, **jit_kwargs):
+    """``jax.jit`` with PartitionSpec-valued in/out shardings on ``mesh``.
+
+    The serving engine's per-stage entry points thread their stage layouts
+    through here: host inputs are auto-placed to the given in_specs (a spec
+    leaf broadcasts over optional ``None`` args — verified on the pinned
+    0.4.37), outputs are pinned to out_specs so downstream consumers (the
+    slot pool above all) see a stable layout instead of whatever GSPMD
+    propagation happened to pick. ``mesh=None`` is a plain ``jax.jit`` —
+    the single-device path stays byte-for-byte the old code path."""
+    if mesh is None:
+        return jax.jit(fn, **jit_kwargs)
+    if in_specs is not None:
+        jit_kwargs["in_shardings"] = named_shardings(mesh, in_specs)
+    if out_specs is not None:
+        jit_kwargs["out_shardings"] = named_shardings(mesh, out_specs)
+    return jax.jit(fn, **jit_kwargs)
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     """``jax.shard_map`` with the 0.4.37 ``check_rep`` spelling fallback."""
     sm = getattr(jax, "shard_map", None)

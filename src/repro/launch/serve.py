@@ -3,11 +3,20 @@
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch llada-8b --reduced \
       --system dllm-serve --workload burst --rps 2.0 --n 12
+
+Mesh serving: ``--mesh 1,2`` (or ``REPRO_MESH=1,2`` in the environment) runs
+the whole packed pipeline tensor-parallel on a (data, model) device mesh —
+the host must expose the devices (CPU repro:
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``); a mesh that cannot
+be built fails loudly instead of collapsing to one device, and the result
+JSON records ``mesh_devices`` so harnesses can assert it. ``--mesh none``
+forces the single-device engine even when ``REPRO_MESH`` is set.
 """
 from __future__ import annotations
 
 import argparse
 import json
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -16,6 +25,7 @@ from repro.configs.base import ServeConfig
 from repro.core.baselines import size_slots, system_profiles
 from repro.core.engine import Engine
 from repro.data.workloads import make_trace, trace_prompts
+from repro.launch.mesh import parse_mesh_env
 
 
 def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
@@ -25,7 +35,8 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
               max_num_batched_tokens: int = 1024, max_num_logits: int = 128,
               time_scale: float = 1.0, length_scale: float = 0.15,
               size_by_profiler: bool = True, hbm_gb: int = 24,
-              clock: str = "modeled", quiet: bool = True) -> dict:
+              clock: str = "modeled", quiet: bool = True,
+              mesh_shape: Optional[Tuple[int, ...]] = None) -> dict:
     import dataclasses
     cfg = get_config(arch)
     full_cfg = cfg
@@ -35,13 +46,16 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         max_num_batched_tokens=max_num_batched_tokens,
         max_num_logits=max_num_logits, block_size=block_size,
         steps_per_block=steps_per_block, max_seq_len=max_seq_len,
-        max_slots=max_slots, max_refresh_per_iter=4)
+        max_slots=max_slots, max_refresh_per_iter=4,
+        mesh_shape=tuple(mesh_shape) if mesh_shape else None)
     serve = system_profiles(base)[system]
     if size_by_profiler:
         # Offline profiler (§4.2) at FULL-model geometry and paper Table 3
         # settings decides each system's concurrency: monolithic logit
         # reservations and dense caches buy fewer KV slots — the paper's
-        # capacity coupling, carried into the (scaled) serving run.
+        # capacity coupling, carried into the (scaled) serving run. The
+        # mesh_shape rides along, so an N-device mesh is sized by its
+        # per-device arithmetic (hbm_gb = one device's HBM).
         plan_serve = dataclasses.replace(
             serve, max_seq_len=2048, max_num_batched_tokens=4000,
             max_num_logits=2048, max_slots=max_slots)
@@ -49,6 +63,9 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         serve = dataclasses.replace(serve,
                                     max_slots=max(1, sized.max_slots))
     eng = Engine(cfg, serve, seed=seed, clock=clock)
+    if mesh_shape and not quiet:
+        print(f"mesh: {eng.mesh_devices} devices "
+              f"({'x'.join(map(str, serve.mesh_shape))})")
     warmup_s = eng.warmup()      # AOT compile outside the measured window
     trace = make_trace(workload, n, rps, seed=seed, scale=length_scale)
     prompts = trace_prompts(trace, cfg.vocab_size, seed=seed)
@@ -89,6 +106,17 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         padded_reuse_calls=stats.padded_reuse_calls,
         warmup_s=warmup_s,
         max_slots=serve.max_slots,
+        mesh_shape=list(serve.mesh_shape) if serve.mesh_shape else None,
+        mesh_devices=eng.mesh_devices,
+        # per-device executed tokens under the engine's ACTUAL TP work
+        # split (1.0 when no dim divides — an indivisible or data-only mesh
+        # must not deflate this metric; no serving DP yet)
+        refresh_tokens_exec_per_device=stats.refresh_tokens_exec
+        / eng.tp_work_split,
+        reuse_tokens_exec_per_device=stats.reuse_tokens_exec
+        / eng.tp_work_split,
+        logit_tokens_exec_per_device=stats.logit_tokens_exec
+        / eng.tp_work_split,
     )
     return out
 
@@ -105,10 +133,20 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="use the full config (CPU-hostile; default reduced)")
+    ap.add_argument("--mesh", default="env",
+                    help="serving mesh: 'd,m' shape, 'none', or 'env' "
+                         "(default: honor REPRO_MESH)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.mesh == "env":
+        mesh_shape = parse_mesh_env()
+    elif args.mesh in ("none", ""):
+        mesh_shape = None
+    else:
+        mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     res = run_serve(args.arch, args.system, args.workload, args.rps, args.n,
-                    use_reduced=not args.full, seed=args.seed, quiet=False)
+                    use_reduced=not args.full, seed=args.seed, quiet=False,
+                    mesh_shape=mesh_shape)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -20,7 +20,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import axis_size, data_axes
@@ -120,12 +120,38 @@ class Rules:
         return P(self.dp, None, None)
 
     # -- serving cache ------------------------------------------------------
-    def packed_kv(self, batch: int, retain: int) -> object:
-        """PackedKV specs: [L, B, K, R, dh] (+pos/valid [L, B, K, R])."""
+    def _divisible_axes(self, n: int, axes: tuple) -> tuple:
+        """Greedy prefix of ``axes`` whose combined size divides ``n``.
+
+        Sharding is only legal on exact divisions (jax rejects uneven
+        shards), so each candidate axis is kept only while the accumulated
+        shard count still divides the dim — e.g. retain=96 on a ('data',
+        'model') = (2, 64) request drops 'model' and shards over data only.
+        """
+        kept, prod = [], 1
+        for a in axes:
+            sz = prod * axis_size(self.mesh, a)
+            if n % sz == 0 and n >= sz:
+                kept.append(a)
+                prod = sz
+        return tuple(kept)
+
+    def packed_kv(self, batch: int, retain: int, *,
+                  data_parallel: bool = True) -> object:
+        """PackedKV specs: [L, B, K, R, dh] (+pos/valid [L, B, K, R]).
+
+        ``data_parallel=False`` keeps the data axis out entirely (batch AND
+        retained length): the serving engine's slot pool uses this — one
+        layout for the pool, every gathered sub-batch, and every fresh
+        Refresh cache regardless of its batch size (slots replicate over
+        data; only the model axis shards within a slot), which is exactly
+        how ``plan_memory`` bills it."""
         from repro.models.sparse_select import PackedKV
         cfg = self.cfg
         dpn = axis_size(self.mesh, self.dp)
-        if batch % dpn == 0 and batch >= dpn:
+        if not data_parallel:
+            b_ax, seq_axes = None, ()
+        elif batch % dpn == 0 and batch >= dpn:
             b_ax, seq_axes = self.dp, ()
         else:
             b_ax, seq_axes = None, self.dp    # batch=1: sequence parallelism
@@ -133,35 +159,40 @@ class Rules:
         r_axes = tuple(seq_axes)
         if k_ax is None:
             r_axes = r_axes + ("model",)      # engage idle TP on retained len
+        r_axes = self._divisible_axes(retain, r_axes)
         r_ax = r_axes if r_axes else None
         kv = P(None, b_ax, k_ax, r_ax, None)
         meta = P(None, b_ax, k_ax, r_ax)
         return PackedKV(k=kv, v=kv, pos=meta, valid=meta)
 
-    def ssm_cache(self, batch: int) -> object:
+    def ssm_cache(self, batch: int, *, data_parallel: bool = True) -> object:
         from repro.models.ssm import SSMCache
         cfg = self.cfg
         dpn = axis_size(self.mesh, self.dp)
-        b_ax = self.dp if batch % dpn == 0 and batch >= dpn else None
+        b_ax = self.dp if data_parallel and batch % dpn == 0 \
+            and batch >= dpn else None
         h_ax = self.div(cfg.ssm_heads)
         return SSMCache(state=P(None, b_ax, h_ax, None, None),
                         conv=P(None, b_ax, None, None))
 
-    def hybrid_cache(self, batch: int, retain: int) -> object:
+    def hybrid_cache(self, batch: int, retain: int, *,
+                     data_parallel: bool = True) -> object:
         from repro.models.hybrid import HybridCache
-        sc = self.ssm_cache(batch)
+        sc = self.ssm_cache(batch, data_parallel=data_parallel)
         return HybridCache(ssm_state=sc.state, conv=sc.conv,
-                           kv=self.packed_kv(batch, retain))
+                           kv=self.packed_kv(batch, retain,
+                                             data_parallel=data_parallel))
 
-    def cache(self, batch: int, retain: int):
+    def cache(self, batch: int, retain: int, *, data_parallel: bool = True):
         fam = self.cfg.family
         if fam == "ssm":
-            return self.ssm_cache(batch)
+            return self.ssm_cache(batch, data_parallel=data_parallel)
         if fam == "hybrid":
-            return self.hybrid_cache(batch, retain)
-        return self.packed_kv(batch, retain)
+            return self.hybrid_cache(batch, retain,
+                                     data_parallel=data_parallel)
+        return self.packed_kv(batch, retain, data_parallel=data_parallel)
 
     # ------------------------------------------------------------------
     def named(self, spec_tree):
-        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
-                            is_leaf=lambda x: isinstance(x, P))
+        from repro.jax_compat import named_shardings
+        return named_shardings(self.mesh, spec_tree)

@@ -259,7 +259,10 @@ def serve_refresh_packed(
         h, cache = HY.forward_full_packed(
             params["stack"], ccfg, x, positions[None], seg_ids[None],
             token_valid[None], cu_seqlens, seq_lens, block_start, serve)
-    hn = _final(params, cfg, h)[0]                            # [T, D]
+    # pin the packed hidden stream at the stage boundary: under a serving
+    # mesh GSPMD otherwise inherits the vocab-sharded embedding layout into
+    # the [T, D] stream and the select/pack gathers downstream of it
+    hn = L.constrain(_final(params, cfg, h)[0], "packed_h")   # [T, D]
     rows = T.packed_block_rows(cu_seqlens, block_start, serve.block_size,
                                hn.shape[0])
     return RefreshOut(block_hidden=hn[rows], cache=cache)
@@ -317,7 +320,9 @@ def serve_reuse_packed(
         h = HY.forward_block_packed(params["stack"], cfg, xb,
                                     flat_positions.reshape(R, Sb), cache,
                                     serve=serve)
-    return _final(params, cfg, h).reshape(Tq, -1)
+    # same boundary pin as the packed Refresh stream: the flat hidden rows
+    # feed the (vocab-parallel) logit stage replicated over the mesh
+    return L.constrain(_final(params, cfg, h).reshape(Tq, -1), "packed_h")
 
 
 def serve_reuse(

@@ -196,6 +196,37 @@ def test_warmup_covers_runtime_worst_case_buckets(varlen, mrpi, sched):
             (name, after, bound)
 
 
+def test_warmup_padded_decode_stops_at_bucket_cover():
+    """The padded decode warmup must stop exactly at the pow2 cover of the
+    largest row count the runtime can request — the old ``while n <=
+    max_logits * 2`` bound compiled one pow2 bucket beyond it whenever the
+    cap was itself a power of two (here cap = (8+8)·8 = 128 rows: the old
+    loop compiled a dead 256-row bucket)."""
+    from repro.core.budgeting import pow2_bucket
+    serve = dataclasses.replace(BASE, max_refresh_per_iter=0)  # cap pow2
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0)
+    eng.warmup()
+    Sb = serve.block_size
+    cap = (serve.refresh_slots + serve.max_slots) * Sb
+    assert max(eng._decode_jit) == pow2_bucket(cap, lo=Sb), \
+        sorted(eng._decode_jit)
+
+
+def test_iter_log_cap_bounds_growth():
+    """iter_log_cap keeps only the newest rows (0 = unlimited): a long
+    modeled-clock run must not grow host memory one dict per iteration."""
+    serve = dataclasses.replace(BASE, iter_log_cap=4)
+    eng, reqs, stats = serve_some(serve, n=5)
+    assert stats.iterations > 4
+    assert len(stats.iter_log) == 4
+    # the retained rows are the NEWEST ones and aggregates stay lifetime
+    assert stats.iter_log[-1]["t"] >= stats.iter_log[0]["t"]
+    assert stats.committed_tokens == sum(r.gen_len for r in reqs)
+    _, _, unlimited = serve_some(BASE, n=5)
+    assert len(unlimited.iter_log) > 4
+
+
 def test_warmup_survives_sub_block_token_budget():
     """max_num_batched_tokens < block_size is a degenerate config: warmup
     must still bound-compile without crashing (the engine then surfaces the
