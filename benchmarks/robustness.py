@@ -1,0 +1,85 @@
+"""Robustness benchmark: overload + chaos behaviour of the serving engine.
+
+Two scenarios (docs/robustness.md):
+
+* ``overload`` — a Burst trace at a saturating arrival rate through a
+  bounded queue with deadlines and preempt-and-requeue enabled.  The row
+  set reports the tail (p99), goodput next to raw throughput, the full
+  outcome taxonomy (finished / shed / rejected / preempted), and the
+  conservation law ``submitted == finished + shed + rejected`` — overload
+  must degrade into structured outcomes, never an engine error.
+* ``chaos`` — the same engine under a seeded ``FaultPlan`` (dispatch
+  faults below the retry limit, alloc faults, mem-pressure slot steals,
+  slow iterations).  Faults must be absorbed (retries, deferred
+  admission) without breaking conservation.
+
+``record(quick)`` returns the JSON dict committed as
+``BENCH_robustness.json`` by ``benchmarks.run --record``.
+"""
+from repro.launch.serve import run_serve
+
+
+def _overload(quick: bool = True) -> dict:
+    # rps far beyond the admissible rate for 4 slots: the queue saturates
+    # and the engine must shed.  size_by_profiler=False pins max_slots so
+    # the recorded artifact is stable across profiler changes.
+    return run_serve("llada-8b", "dllm-serve", "burst",
+                     rps=8.0, n=16 if quick else 32, seed=0,
+                     queue_cap=4, queue_policy="evict", deadline_slack=3.0,
+                     preempt_starvation_s=0.5, max_slots=4,
+                     size_by_profiler=False)
+
+
+def _chaos(quick: bool = True) -> dict:
+    return run_serve("llada-8b", "dllm-serve", "burst",
+                     rps=2.0, n=8 if quick else 16, seed=0,
+                     preempt_starvation_s=0.5, max_slots=4,
+                     size_by_profiler=False, fault_seed=1)
+
+
+def _conserved(r: dict) -> bool:
+    return r["n_submitted"] == r["n_finished"] + r["n_shed"] + r["n_rejected"]
+
+
+def run(quick: bool = True):
+    out = []
+    ov = _overload(quick)
+    out.append(("robustness/overload/p99_latency_s", 0.0,
+                f"{ov['p99_latency']:.3f}s"))
+    out.append(("robustness/overload/goodput_tok_s", 0.0,
+                f"{ov['goodput_tok_s']:.2f}good/"
+                f"{ov['throughput_tok_s']:.2f}raw"))
+    out.append(("robustness/overload/outcomes", 0.0,
+                f"fin={ov['n_finished']}|shed={ov['n_shed']}"
+                f"|rej={ov['n_rejected']}|preempt={ov['n_preemptions']}"))
+    out.append(("robustness/overload/conservation", 0.0,
+                "ok" if _conserved(ov) else "VIOLATED"))
+    ch = _chaos(quick)
+    out.append(("robustness/chaos/faults_absorbed", 0.0,
+                f"retries={ch['dispatch_retries']}"
+                f"|alloc_iters={ch['alloc_fault_iters']}"
+                f"|recomputed={ch['recomputed_tokens']}"))
+    out.append(("robustness/chaos/conservation", 0.0,
+                "ok" if _conserved(ch) else "VIOLATED"))
+    return out
+
+
+def record(quick: bool = True) -> dict:
+    """The committed-artifact view: scenario parameters + the stats a
+    regression harness should diff."""
+    ov, ch = _overload(quick), _chaos(quick)
+    keys = ("rps", "n", "throughput_tok_s", "goodput_tok_s", "wall_time",
+            "p50_latency", "p99_latency", "n_submitted", "n_finished",
+            "n_shed", "n_rejected", "shed_deadline", "shed_queue",
+            "rejected_oversized", "rejected_queue_full", "n_preemptions",
+            "recomputed_tokens", "dispatch_retries", "alloc_fault_iters",
+            "max_slots")
+    return {
+        "overload": {k: ov[k] for k in keys},
+        "overload_conserved": _conserved(ov),
+        "chaos": {k: ch[k] for k in keys},
+        "chaos_conserved": _conserved(ch),
+        "config": {"workload": "burst", "queue_cap": 4,
+                   "queue_policy": "evict", "deadline_slack": 3.0,
+                   "preempt_starvation_s": 0.5, "fault_seed_chaos": 1},
+    }

@@ -3,8 +3,14 @@
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only name]``
 prints ``name,us_per_call,derived`` CSV rows (us_per_call = 0.0 for
 pure-derived metrics).
+
+``--record`` additionally calls each module's ``record(quick)`` hook (if
+it has one) and writes the returned dict to ``BENCH_<name>.json`` at the
+repo root — the committed regression artifact.
 """
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -20,13 +26,19 @@ MODULES = [
     "sensitivity",       # Fig. 7
     "ablation",          # Fig. 8
     "roofline_report",   # §Roofline (from dry-run artifacts)
+    "robustness",        # overload + chaos (docs/robustness.md)
 ]
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--record", action="store_true",
+                    help="write BENCH_<name>.json for modules with a "
+                         "record() hook")
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
     print("name,us_per_call,derived")
@@ -38,6 +50,12 @@ def main() -> None:
             rows = mod.run(quick=not args.full)
             for n, us, derived in rows:
                 print(f"{n},{us:.3f},{derived}")
+            if args.record and hasattr(mod, "record"):
+                path = os.path.join(ROOT, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(mod.record(quick=not args.full), f, indent=2,
+                              sort_keys=True)
+                print(f"# recorded {path}", file=sys.stderr)
         except Exception:
             traceback.print_exc()
             print(f"{name},0.000,ERROR")

@@ -127,8 +127,18 @@ def run(quick: bool = True):
                 r = [x for x in rows
                      if (x["workload"], x["system"], x["rps"]) == (wl, s, rps)][0]
                 us_per_tok = 1e6 / max(r["throughput_tok_s"], 1e-9)
+                # outcome/goodput keys via .get(): a serve_grid.json cached
+                # before the robustness layer lacks them — raw tok/s rows
+                # must keep printing (delete the cache to refresh)
+                good = r.get("goodput_tok_s")
+                detail = f"{r['throughput_tok_s']:.2f}tok_s"
+                if good is not None:
+                    detail += (f"|good={good:.2f}"
+                               f"|fin={r.get('n_finished', '?')}"
+                               f"|shed={r.get('n_shed', '?')}"
+                               f"|rej={r.get('n_rejected', '?')}")
                 out.append((f"throughput/{wl}/rps{rps}/{s}", us_per_tok,
-                            f"{r['throughput_tok_s']:.2f}tok_s"))
+                            detail))
         hi_rps = rps_points[-1]
         speedup = ours(rows, wl, hi_rps) / best_baseline(rows, wl, hi_rps)
         out.append((f"throughput/{wl}/speedup_vs_best_baseline", 0.0,

@@ -172,6 +172,20 @@ class ServeConfig:
     iter_log_cap: int = 0                # keep only the last N iter_log rows
     # (0 = unlimited — a long modeled-clock run otherwise accumulates one
     # dict per iteration forever, which a production engine cannot afford)
+    # --- robustness layer (admission control / shedding / preemption) --------
+    # Defaults keep every knob OFF: unbounded queue, no deadlines enforced
+    # beyond what requests carry, no preemption, 3 dispatch retries — the
+    # no-faults configuration is bit-identical to the pre-robustness engine.
+    queue_cap: int = 0                   # bounded waiting queue (0 = unbounded)
+    queue_policy: str = "reject"         # "reject" new arrivals when full, or
+    # "evict" the oldest waiter (it is shed with Outcome.SHED_QUEUE)
+    preempt_starvation_s: float = 0.0    # preempt the youngest Reuse-phase
+    # resident when the head waiter has starved this long with no free slot
+    # (0 = preemption disabled)
+    max_preemptions: int = 2             # per-request preemption cap (bounds
+    # requeue thrash; a capped request simply finishes as a resident)
+    fault_retries: int = 3               # dispatch attempts before a
+    # FaultError becomes permanent (exponential backoff between attempts)
 
     @property
     def mesh_devices(self) -> int:

@@ -207,6 +207,25 @@ def can_pack_tokens(cfg: ModelConfig) -> bool:
     return True
 
 
+def admission_block_reason(serve: ServeConfig, req) -> "str | None":
+    """Why ``req`` can NEVER be admitted under ``serve`` (None = admittable).
+
+    The single source of truth for structured rejection — checked by
+    ``Engine.submit`` (fail fast, before the queue) and by both schedulers'
+    ``plan()`` sweeps (so a never-admittable request cannot head-of-line
+    block the FCFS queue). Geometry only: transient conditions (no free
+    slot, budget consumed this iteration) are deferrals, not rejections."""
+    if req.total_len > serve.max_seq_len:
+        return (f"total_len {req.total_len} (prompt {req.prompt_len} + gen "
+                f"{req.gen_len}) exceeds max_seq_len {serve.max_seq_len}")
+    if req.refresh_len > serve.max_num_batched_tokens:
+        return (f"Refresh cost {req.refresh_len} (frontend {req.frontend_len}"
+                f" + total {req.total_len}) exceeds the token budget "
+                f"max_num_batched_tokens={serve.max_num_batched_tokens}; "
+                f"the request can never be scheduled")
+    return None
+
+
 def pow2_bucket(n: int, lo: int = 1) -> int:
     """Smallest power-of-two multiple of ``lo`` that is ≥ n (the static-shape
     bucketing policy shared by the engine's jit caches and this profiler)."""

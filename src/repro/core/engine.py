@@ -63,6 +63,8 @@ anchors the sharded path. See ``docs/sharding.md``.
 """
 from __future__ import annotations
 
+import itertools
+import math
 import time
 from dataclasses import dataclass, field
 from functools import partial
@@ -76,11 +78,12 @@ from jax.sharding import PartitionSpec as P
 from repro import jax_compat as JC
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import diffusion
-from repro.core.budgeting import (can_pack_tokens, pow2_bucket as _bucket,
-                                  token_bucket_round)
+from repro.core.budgeting import (admission_block_reason, can_pack_tokens,
+                                  pow2_bucket as _bucket, token_bucket_round)
+from repro.core.faults import FaultError, FaultPlan
 from repro.kernels import flash_varlen as FV
 from repro.core.kv_pool import KVPool
-from repro.core.request import Phase, Request, State
+from repro.core.request import Outcome, Phase, Request, State
 from repro.core.scheduler import make_scheduler
 from repro.launch.mesh import make_serving_mesh
 from repro.models import backbone as BB
@@ -145,9 +148,37 @@ class EngineStats:
     padded_refresh_calls: int = 0
     packed_reuse_calls: int = 0
     padded_reuse_calls: int = 0
+    # -- request lifecycle / robustness accounting (docs/robustness.md) ----
+    # Conservation law (asserted by the chaos suite): every submitted
+    # request reaches exactly one terminal outcome —
+    # ``submitted == finished + shed + rejected``.
+    submitted: int = 0
+    finished: int = 0
+    rejected_oversized: int = 0
+    rejected_queue_full: int = 0
+    shed_deadline: int = 0
+    shed_queue: int = 0
+    preemptions: int = 0          # preempt-and-requeue events (not terminal)
+    recomputed_tokens: int = 0    # commits discarded by preemption rollbacks
+    dispatch_retries: int = 0     # transient dispatch faults absorbed
+    alloc_fault_iters: int = 0    # iterations whose admission hit an
+    #                               injected slot-allocation failure
+    slow_fault_s: float = 0.0     # injected slow-iteration delay absorbed
     # list when unlimited; the engine swaps in a maxlen deque under
     # ServeConfig.iter_log_cap (O(1) eviction of the oldest rows)
     iter_log: List[dict] = field(default_factory=list)
+
+    @property
+    def rejected(self) -> int:
+        return self.rejected_oversized + self.rejected_queue_full
+
+    @property
+    def shed(self) -> int:
+        return self.shed_deadline + self.shed_queue
+
+    def conserved(self) -> bool:
+        """The lifecycle conservation law; True once the engine drains."""
+        return self.submitted == self.finished + self.shed + self.rejected
 
     @property
     def refresh_waste(self) -> float:
@@ -171,10 +202,12 @@ class Engine:
     def __init__(self, cfg: ModelConfig, serve: ServeConfig,
                  params: Optional[dict] = None, seed: int = 0,
                  clock: str = "wall",
-                 device_model: Optional[DeviceModel] = None):
+                 device_model: Optional[DeviceModel] = None,
+                 faults: Optional[FaultPlan] = None):
         self.cfg = cfg
         self.serve = serve
         self.clock = clock
+        self.faults = faults
         self.device = device_model or DeviceModel()
         self.vtime = 0.0
         self._n_params = cfg.n_active_params()
@@ -249,6 +282,13 @@ class Engine:
         self.params = params
         self.scheduler = make_scheduler(serve)
         self.pool = KVPool(serve.max_slots, shardings=pool_shardings)
+        # robustness wiring: the scheduler drives the pool's take/free
+        # generation ledger on admit/finish/preempt, and consumes the fault
+        # plan's alloc-failure / mem-steal tokens at admission time
+        self.scheduler.pool = self.pool
+        self.scheduler.faults = faults
+        self._iter = 0              # engine iteration counter (fault schedule)
+        self._fault_blocked = False  # last plan suppressed by injected faults
         self.stats = EngineStats()
         if serve.iter_log_cap:
             from collections import deque
@@ -281,7 +321,11 @@ class Engine:
         self._reuse_packed_jit: Dict[int, callable] = {}
         self._decode_jit: Dict[int, callable] = {}
         self._decode_packed_jit: Dict[int, callable] = {}
+        # rng only feeds synthetic frontend payload stand-ins; request ids
+        # come from a monotonic counter (rng-drawn rids could collide and
+        # silently merge two requests' stats)
         self._rng = np.random.default_rng(seed)
+        self._rid_counter = itertools.count()
 
     @property
     def tp_work_split(self) -> float:
@@ -552,12 +596,22 @@ class Engine:
 
     def submit(self, prompt: np.ndarray, gen_len: int, arrival: float = 0.0,
                rid: Optional[int] = None,
-               frontend: Optional[np.ndarray] = None) -> Request:
+               frontend: Optional[np.ndarray] = None,
+               deadline: float = math.inf) -> Request:
         """Queue a request. For modality-frontend archs ``frontend`` carries
         the request's precomputed patch/frame embeddings
         ``[frontend_len, frontend_dim]`` (the stub contract: the vision/audio
         tower runs offline); omitted, a deterministic stand-in is drawn from
-        the engine rng so synthetic workloads exercise the real geometry."""
+        the engine rng so synthetic workloads exercise the real geometry.
+
+        Admission control (docs/robustness.md): a request that can NEVER be
+        admitted (total_len > max_seq_len, or Refresh cost > the token
+        budget) is returned immediately in a terminal REJECTED state with a
+        per-request ``error`` — it is never enqueued and cannot stall the
+        engine. Under ``queue_cap`` the bounded-queue policy may reject this
+        request or shed the oldest waiter instead; check ``req.outcome``.
+        ``deadline`` is absolute trace time (inf = none): expired waiters
+        are shed at plan time with Outcome.SHED_DEADLINE."""
         if self.cfg.frontend_dim:
             if frontend is None:
                 frontend = self._rng.standard_normal(
@@ -569,24 +623,56 @@ class Engine:
         else:
             assert frontend is None, \
                 f"{self.cfg.name} is text-only but got frontend embeddings"
-        req = Request(rid=rid if rid is not None else self._rng.integers(1 << 30),
+        req = Request(rid=rid if rid is not None else next(self._rid_counter),
                       prompt=np.asarray(prompt, np.int32), gen_len=gen_len,
                       arrival=arrival, cfg=self.serve, mask_id=self.mask_id,
-                      frontend=frontend)
-        self.scheduler.submit(req)
+                      frontend=frontend, deadline=deadline)
+        self.stats.submitted += 1
+        reason = admission_block_reason(self.serve, req)
+        if reason is not None:
+            req.state = State.REJECTED
+            req.outcome = Outcome.REJECTED_OVERSIZED
+            req.error = reason
+            self._tally(req)
+            return req
+        for casualty in self.scheduler.submit(req):
+            self._tally(casualty)     # bounded-queue reject/evict victims
         return req
+
+    def _tally(self, req: Request) -> None:
+        """Record a terminal outcome in the conservation counters."""
+        o = req.outcome
+        if o is Outcome.FINISHED:
+            self.stats.finished += 1
+        elif o is Outcome.REJECTED_OVERSIZED:
+            self.stats.rejected_oversized += 1
+        elif o is Outcome.REJECTED_QUEUE_FULL:
+            self.stats.rejected_queue_full += 1
+        elif o is Outcome.SHED_DEADLINE:
+            self.stats.shed_deadline += 1
+        elif o is Outcome.SHED_QUEUE:
+            self.stats.shed_queue += 1
+        else:                          # pragma: no cover - defensive
+            raise AssertionError(f"tally of non-terminal request {req.rid}")
 
     def run(self, time_scale: float = 1.0, max_iters: int = 100_000,
             quiet: bool = True) -> EngineStats:
-        """Serve until all submitted requests finish.
+        """Serve until every submitted request reaches a terminal state
+        (FINISHED, or SHED / REJECTED by the admission-control layer).
 
         wall clock: ``time_scale`` maps trace seconds to wall seconds.
         modeled clock: arrivals/latencies in virtual device seconds.
 
-        A zero-progress iteration with no *future* arrival to wait for is a
-        permanent stall (admission and deferral depend only on budget/slot
-        state, which time alone cannot change) and raises ``RuntimeError``
-        instead of silently breaking — the old break exited with unfinished
+        Overload is NOT an error (docs/robustness.md): never-admittable
+        requests are rejected with a structured per-request outcome at
+        submit/plan time, deadline-expired waiters are shed, bounded queues
+        apply backpressure, and starvation triggers preempt-and-requeue —
+        the engine degrades instead of dying. The ``RuntimeError`` below is
+        reserved for a TRUE invariant violation: a zero-progress iteration
+        with admittable work resident and no future arrival, deadline, or
+        pending injected fault that could unblock it (admission and
+        deferral depend only on budget/slot state, which time alone cannot
+        change). The old silent ``break`` here exited with unfinished
         requests still resident and recorded bogus throughput/latency
         stats for them."""
         start = time.perf_counter()
@@ -598,25 +684,38 @@ class Engine:
                 now = (time.perf_counter() - start) / time_scale
             progressed = self.step(now)
             if not progressed:
-                nxt = min((r.arrival for r in self.scheduler.waiting),
-                          default=None)
-                if nxt is None or nxt <= now:
+                # time CAN unblock two things: a future arrival (admission)
+                # and a future deadline (shedding a waiter that will never
+                # fit alongside the current residents)
+                events = [r.arrival for r in self.scheduler.waiting
+                          if r.arrival > now]
+                events += [r.deadline for r in self.scheduler.waiting
+                           if now < r.deadline < math.inf]
+                nxt = min(events, default=None)
+                if nxt is None and self._fault_blocked:
+                    # injected alloc faults / mem-pressure steals suppress
+                    # admission transiently; the schedule is finite and
+                    # advances per iteration, so spin — never a stall
+                    it += 1
+                    continue
+                if nxt is None:
                     n_run = len(self.scheduler.running)
                     n_wait = len(self.scheduler.waiting)
                     raise RuntimeError(
                         f"engine stalled with work left at t={now:.3f}: "
                         f"{n_run} running / {n_wait} waiting requests and "
-                        f"an empty iteration plan that no future arrival "
-                        f"can unblock. Check the serve limits against the "
-                        f"workload (max_num_batched_tokens="
+                        f"an empty iteration plan that no future arrival, "
+                        f"deadline, or fault schedule can unblock — an "
+                        f"engine/scheduler invariant violation (oversized, "
+                        f"expired, and overload traffic is rejected or "
+                        f"shed with structured outcomes before this "
+                        f"point). Serve limits: max_num_batched_tokens="
                         f"{self.serve.max_num_batched_tokens}, block_size="
                         f"{self.serve.block_size}, max_slots="
                         f"{self.serve.max_slots}, refresh cap="
-                        f"{self.serve.refresh_slots}) — e.g. a request "
-                        f"whose Refresh cost (frontend prefix + total_len) "
-                        f"exceeds the token budget can never be admitted.")
+                        f"{self.serve.refresh_slots}.")
                 if self.clock == "modeled":
-                    self.vtime = max(self.vtime, nxt)   # jump to next arrival
+                    self.vtime = max(self.vtime, nxt)   # jump to next event
                 else:
                     wait = nxt * time_scale - (time.perf_counter() - start)
                     if wait > 0:
@@ -663,9 +762,34 @@ class Engine:
     # one engine iteration
     # ------------------------------------------------------------------
     def step(self, now: float) -> bool:
+        """One engine iteration. Returns True when the iteration made
+        progress — executed work OR a lifecycle event (shed / rejected /
+        preempted request), which also changes engine state."""
+        self._iter += 1
+        if self.faults is not None:
+            self.faults.begin_iteration(self._iter)
+            d = self.faults.take_slow_delay()
+            if d:
+                self.stats.slow_fault_s += d
+                if self.clock == "modeled":
+                    self.vtime += d
+                else:
+                    time.sleep(min(d, 0.05))
         plan = self.scheduler.plan(now)
+        for r in plan.rejected + plan.shed:
+            self._tally(r)
+        self.stats.preemptions += len(plan.preempted)
+        self.stats.recomputed_tokens += plan.recomputed_tokens
+        if plan.alloc_faults:
+            self.stats.alloc_fault_iters += 1
+        # a fault-suppressed iteration must not be mistaken for a stall:
+        # run() spins through it (the schedule is finite) instead of raising
+        self._fault_blocked = plan.alloc_faults > 0 or (
+            self.faults is not None and bool(self.scheduler.waiting)
+            and self.faults.blocking())
+        lifecycle = bool(plan.rejected or plan.shed or plan.preempted)
         if not plan.refresh and not plan.reuse:
-            return False
+            return lifecycle
         self.stats.deferred_steps += len(plan.deferred)
         self.stats.peak_query_tokens = max(self.stats.peak_query_tokens,
                                            plan.query_tokens)
@@ -743,13 +867,15 @@ class Engine:
                     h = jnp.pad(h, ((0, b - N), (0, 0)))
                 valid = np.zeros((b,), bool)
                 valid[:N] = True
-                ids, conf = self._decode_packed_fn(b)(self.params, h,
-                                                      jnp.asarray(valid))
+                ids, conf = self._dispatch(
+                    "decode", lambda: self._decode_packed_fn(b)(
+                        self.params, h, jnp.asarray(valid)))
             else:
                 b = _bucket(N, lo=self.serve.block_size)
                 if b != N:
                     h = jnp.pad(h, ((0, b - N), (0, 0)))
-                ids, conf = self._decode_fn(b)(self.params, h)
+                ids, conf = self._dispatch(
+                    "decode", lambda: self._decode_fn(b)(self.params, h))
             # one blocking transfer instead of two per-array host syncs
             ids, conf = jax.device_get((ids, conf))
             ids = ids[:N]
@@ -787,6 +913,53 @@ class Engine:
         return True
 
     # ------------------------------------------------------------------
+    def _dispatch(self, stage: str, thunk):
+        """Run one jitted stage call under the fault-injection harness.
+
+        An injected (or real) :class:`FaultError` is retried with
+        exponential backoff — charged to the modeled clock, slept on wall —
+        up to ``ServeConfig.fault_retries`` attempts, after which it
+        propagates as permanent. Without a fault plan this is a plain
+        call (zero overhead on the no-faults path)."""
+        if self.faults is None:
+            return thunk()
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                if self.faults.take_dispatch_fault(stage):
+                    raise FaultError(
+                        f"injected {stage} dispatch fault "
+                        f"(iter {self._iter}, attempt {attempt})")
+                return thunk()
+            except FaultError:
+                if attempt >= self.serve.fault_retries:
+                    raise
+                self.stats.dispatch_retries += 1
+                backoff = self.device.launch_s * (2 ** (attempt - 1))
+                if self.clock == "modeled":
+                    self.vtime += backoff
+                else:
+                    time.sleep(min(backoff, 0.05))
+
+    def _check_slots(self, reqs: List[Request]) -> None:
+        """Slot-handle integrity guard before any pool write/gather: a None
+        slot or a generation mismatch means a freed-and-recycled slot is
+        about to be touched for a stale holder — always an engine bug (or a
+        deliberate test injection), never a recoverable serving condition."""
+        for r in reqs:
+            if r.slot is None or r.slot_gen is None:
+                raise RuntimeError(
+                    f"stale slot handle: request {r.rid} scheduled with no "
+                    f"slot (state={r.state})")
+            gen = self.pool.generation(r.slot)
+            if gen != r.slot_gen:
+                raise RuntimeError(
+                    f"stale slot handle: request {r.rid} holds slot "
+                    f"{r.slot}@gen{r.slot_gen} but the pool is at gen "
+                    f"{gen} — the slot was freed and recycled under the "
+                    f"request")
+
     def _run_refresh(self, chunk: List[Request]) -> Tuple[jax.Array, int]:
         """Padded-oracle Refresh. For modality-frontend archs the embedded
         batch is ``[b, frontend_len + max_seq_len]`` (prefix rows first), so
@@ -807,9 +980,10 @@ class Engine:
             bstart[j] = F + r.block_start
             if F:
                 fe[j] = r.frontend
-        out = self._refresh_fn(b)(self.params, jnp.asarray(tokens),
-                                  jnp.asarray(valid), jnp.asarray(bstart),
-                                  jnp.asarray(fe) if F else None)
+        self._check_slots(chunk)
+        out = self._dispatch("refresh", lambda: self._refresh_fn(b)(
+            self.params, jnp.asarray(tokens), jnp.asarray(valid),
+            jnp.asarray(bstart), jnp.asarray(fe) if F else None))
         slots = [r.slot for r in chunk] + \
                 [self.pool.scratch_slot] * (b - n)
         self.pool.write(slots, out.cache)
@@ -863,11 +1037,13 @@ class Engine:
             bstart[j] = F + r.block_start
             if F:
                 fe[j] = r.frontend
-        out = self._refresh_packed_fn(tp, rp)(
+        self._check_slots(list(chunk))
+        out = self._dispatch("refresh", lambda: self._refresh_packed_fn(
+            tp, rp)(
             self.params, jnp.asarray(tokens), jnp.asarray(pos),
             jnp.asarray(seg), jnp.asarray(valid), jnp.asarray(cu),
             jnp.asarray(lens), jnp.asarray(bstart),
-            jnp.asarray(fe) if F else None)
+            jnp.asarray(fe) if F else None))
         slots = [r.slot for r in chunk] + \
                 [self.pool.scratch_slot] * (rp - n)
         self.pool.write(slots, out.cache)
@@ -890,9 +1066,10 @@ class Engine:
             btok[j] = r.block_tokens()
             bpos[j] = np.arange(F + r.block_start, F + r.block_start + Sb)
             slots[j] = r.slot
+        self._check_slots(reqs)
         cache = self.pool.gather(slots)
-        h = self._reuse_fn(b)(self.params, jnp.asarray(btok),
-                              jnp.asarray(bpos), cache)
+        h = self._dispatch("reuse", lambda: self._reuse_fn(b)(
+            self.params, jnp.asarray(btok), jnp.asarray(bpos), cache))
         self.stats.padded_reuse_calls += 1
         self.stats.reuse_tokens_real += n * Sb
         self.stats.reuse_tokens_exec += b * Sb
@@ -919,9 +1096,10 @@ class Engine:
             bpos[off: off + Sb] = np.arange(F + r.block_start,
                                             F + r.block_start + Sb)
             slots[j] = r.slot
+        self._check_slots(list(reqs))
         cache = self.pool.gather(slots)
-        h = self._reuse_packed_fn(rp)(self.params, jnp.asarray(btok),
-                                      jnp.asarray(bpos), cache)
+        h = self._dispatch("reuse", lambda: self._reuse_packed_fn(rp)(
+            self.params, jnp.asarray(btok), jnp.asarray(bpos), cache))
         self.stats.packed_reuse_calls += 1
         self.stats.reuse_tokens_real += n * Sb
         self.stats.reuse_tokens_exec += tq
@@ -943,3 +1121,4 @@ class Engine:
             r.advance(newblk, now)
             if r.state == State.FINISHED:
                 self.scheduler.finish(r)
+                self._tally(r)

@@ -14,6 +14,13 @@ backing pytree sharded and pins the scatter's output layout with
 ``out_shardings`` so repeated writes can never drift the pool off its
 planned placement — per-device pool bytes are exactly what ``plan_memory``
 billed. Without shardings (no mesh) nothing changes.
+
+Slot lifecycle (robustness layer): :meth:`take` / :meth:`free` keep an
+explicit free-set plus a per-slot **generation counter**. ``free`` bumps the
+slot's generation, so a request holding a handle from before the free (a
+preempted-then-recycled slot) can be detected: its recorded generation no
+longer matches :meth:`generation`. Double-free and double-take raise — slot
+leaks and aliasing are bugs, never silent.
 """
 from __future__ import annotations
 
@@ -35,6 +42,39 @@ class KVPool:
         self.cache = None          # device pytree, slot axis = 1
         self._write = None
         self._gather = None
+        # slot lifecycle ledger (content arrays above are allocation-lazy;
+        # the ledger is live from construction so schedulers can use it
+        # before the first Refresh materializes the pool)
+        self._free = set(range(max_slots))
+        self._gen = np.zeros(max_slots + 1, np.int64)
+
+    # -- slot lifecycle ----------------------------------------------------
+    @property
+    def slots_in_use(self) -> list:
+        return sorted(set(range(self.max_slots)) - self._free)
+
+    def take(self, slot: int) -> int:
+        """Claim ``slot``; returns its current generation (the handle a
+        holder must present at gather time). Raises if already in use."""
+        if slot not in self._free:
+            raise RuntimeError(f"KVPool: slot {slot} taken while in use "
+                               f"(free={sorted(self._free)})")
+        self._free.discard(slot)
+        return int(self._gen[slot])
+
+    def free(self, slots: Sequence[int]) -> None:
+        """Return slots to the pool, bumping each generation so stale
+        handles become detectable. Raises on double-free."""
+        for s in slots:
+            if s in self._free:
+                raise RuntimeError(f"KVPool: double-free of slot {s}")
+            if not 0 <= s < self.max_slots:
+                raise RuntimeError(f"KVPool: free of invalid slot {s}")
+            self._free.add(s)
+            self._gen[s] += 1
+
+    def generation(self, slot: int) -> int:
+        return int(self._gen[slot])
 
     def ensure(self, cache_example) -> None:
         """Lazily allocate the pool from the first Refresh output's shapes."""

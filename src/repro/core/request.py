@@ -4,10 +4,26 @@ A request iterates over denoising steps, alternating **Refresh** and
 **Reuse** phases. Phase is derived from the cache policy: the first step of
 every block refreshes (block transition), and a fixed ``refresh_interval``
 forces periodic refreshes inside a block (the K_int cadence of §2.3).
+
+Lifecycle (the robustness layer, ``docs/robustness.md``)::
+
+    WAITING --admit--> RUNNING --all blocks done--> FINISHED
+       |  ^               |
+       |  '---preempt-----'      (rollback_block + tail requeue; repeatable
+       |                          up to ServeConfig.max_preemptions)
+       +--deadline expired--> SHED       (Outcome.SHED_DEADLINE / SHED_QUEUE)
+       +--never admittable--> REJECTED   (Outcome.REJECTED_* + .error)
+
+Terminal states always carry a structured :class:`Outcome`; REJECTED
+additionally carries a human-readable ``error``. Preemption is NOT terminal:
+the request rolls its active block back to all-mask and re-enters the
+waiting queue, so its next step is a normal Refresh and the block's
+denoising trajectory replays bit-identically (the preemption oracle).
 """
 from __future__ import annotations
 
 import enum
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -21,6 +37,18 @@ class State(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
+    SHED = "shed"            # terminal: dropped by deadline/backpressure policy
+    REJECTED = "rejected"    # terminal: never admittable (oversized/queue full)
+
+
+class Outcome(enum.Enum):
+    """Structured terminal outcome (EngineStats conservation law:
+    ``submitted == finished + shed + rejected``)."""
+    FINISHED = "finished"
+    REJECTED_OVERSIZED = "rejected_oversized"      # can never fit the budget
+    REJECTED_QUEUE_FULL = "rejected_queue_full"    # bounded queue, reject-new
+    SHED_DEADLINE = "shed_deadline"                # deadline expired waiting
+    SHED_QUEUE = "shed_queue"                      # bounded queue, evict-oldest
 
 
 class Phase(enum.Enum):
@@ -42,13 +70,26 @@ class Request:
     # in every Refresh — they count as query tokens and as packed-stream rows
     # (the fixed-length segment prefix of the flattened engine).
     frontend: Optional[np.ndarray] = None   # [F, frontend_dim] float32
+    # absolute trace-time deadline (inf = none). Deadline-expired WAITING
+    # requests are shed with Outcome.SHED_DEADLINE; residents always run to
+    # completion (shedding in-flight work would waste its compute).
+    deadline: float = math.inf
 
     state: State = State.WAITING
     slot: Optional[int] = None
+    # generation of ``slot`` at allocation time (KVPool.take). A mismatch
+    # against the pool's live counter means the slot was freed and recycled
+    # under this request — the engine raises instead of gathering stale KV.
+    slot_gen: Optional[int] = None
     tokens: Optional[np.ndarray] = None  # [max_seq_len]
     block_idx: int = 0
     step_in_block: int = 0
     steps_done: int = 0
+    # robustness bookkeeping
+    n_preempted: int = 0                 # times preempted (capped by config)
+    recomputed_tokens: int = 0           # commits discarded by rollbacks
+    outcome: Optional[Outcome] = None    # terminal outcome (None while live)
+    error: Optional[str] = None          # per-request error on rejection
     # metrics
     t_admitted: float = -1.0
     t_first_commit: float = -1.0
@@ -57,8 +98,13 @@ class Request:
     def __post_init__(self):
         pad = (-self.gen_len) % self.cfg.block_size
         self.gen_len += pad
-        self.tokens = diffusion.build_sequence(
-            self.prompt, self.gen_len, self.cfg.max_seq_len, self.mask_id)
+        # oversized geometry stays constructable (tokens=None) so admission
+        # control can return the request with a structured REJECTED_OVERSIZED
+        # outcome instead of asserting in the constructor — the owner must
+        # reject it (budgeting.admission_block_reason) before scheduling it.
+        if self.total_len <= self.cfg.max_seq_len:
+            self.tokens = diffusion.build_sequence(
+                self.prompt, self.gen_len, self.cfg.max_seq_len, self.mask_id)
 
     # -- geometry ----------------------------------------------------------
     @property
@@ -132,7 +178,24 @@ class Request:
             self.step_in_block = 0
             if self.block_idx >= self.n_blocks:
                 self.state = State.FINISHED
+                self.outcome = Outcome.FINISHED
                 self.t_finished = now
+
+    def rollback_block(self) -> int:
+        """Preemption rollback: discard the active block's partial progress.
+
+        The block region returns to all-mask and the step counter to 0, so
+        on re-admission the phase machine's first step is a normal Refresh
+        (step 0 of a block always refreshes) and the block's denoising
+        trajectory — a deterministic function of the unchanged preceding
+        context — replays bit-identically to the unpreempted run. Returns
+        the number of discarded commits (recompute debt)."""
+        blk = self.block_tokens()
+        n = int((blk != self.mask_id).sum())
+        blk[:] = self.mask_id
+        self.step_in_block = 0
+        self.recomputed_tokens += n
+        return n
 
     def output_tokens(self) -> np.ndarray:
         return self.tokens[self.prompt_len: self.total_len]
@@ -140,3 +203,8 @@ class Request:
     @property
     def latency(self) -> float:
         return self.t_finished - self.arrival
+
+    @property
+    def met_deadline(self) -> bool:
+        """Finished and finished in time (goodput numerator)."""
+        return self.state == State.FINISHED and self.t_finished <= self.deadline

@@ -6,6 +6,18 @@ Invariant (strict, property-tested): the packed iteration never carries more
 scheduling currency because per-iteration activation workspace scales with
 them, while KV sits in the pre-allocated pool and logits are bounded
 separately by ``max_num_logits`` (C1).
+
+Robustness layer (``docs/robustness.md``): ``plan()`` additionally (a)
+rejects never-admittable waiters (a whole-queue sweep, so an oversized head
+can no longer head-of-line block traffic behind it), (b) sheds waiters whose
+deadline expired, (c) under ``queue_cap`` bounds the waiting queue at submit
+time (reject-new or evict-oldest), and (d) with ``preempt_starvation_s`` set
+preempts the youngest Reuse-phase resident when the head waiter starves with
+no free slot — the victim rolls its active block back and requeues at the
+TAIL (tail placement is what makes preemption convergent: an arrival-ordered
+reinsert would put the victim back ahead of the starved head and loop).
+Shed/rejected/preempted requests are reported on the plan for the engine's
+stats; the scheduler never raises for overload.
 """
 from __future__ import annotations
 
@@ -15,7 +27,8 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ServeConfig
-from repro.core.request import Phase, Request, State
+from repro.core.budgeting import admission_block_reason
+from repro.core.request import Outcome, Phase, Request, State
 
 
 @dataclass(frozen=True)
@@ -77,6 +90,12 @@ class IterationPlan:
     reuse: List[Request] = field(default_factory=list)
     deferred: List[Request] = field(default_factory=list)
     admitted: List[Request] = field(default_factory=list)
+    # robustness events this iteration (terminal requests carry Outcome)
+    rejected: List[Request] = field(default_factory=list)
+    shed: List[Request] = field(default_factory=list)
+    preempted: List[Request] = field(default_factory=list)   # requeued, live
+    alloc_faults: int = 0        # injected transient slot-alloc failures hit
+    recomputed_tokens: int = 0   # commits discarded by preemption rollbacks
 
     @property
     def query_tokens(self) -> int:
@@ -155,19 +174,109 @@ class PhaseMultiplexedScheduler:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self._free_slots = list(range(cfg.max_slots))[::-1]
+        # wired by the engine: slot-lifecycle ledger + fault schedule. Both
+        # optional — the scheduler runs standalone in unit tests without them.
+        self.pool = None            # KVPool (take/free generation ledger)
+        self.faults = None          # FaultPlan (alloc faults, mem steals)
 
     # -- queue ops ----------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> List[Request]:
+        """Enqueue ``req``; returns the requests the bounded-queue policy
+        dropped (terminal, Outcome set) — empty with ``queue_cap=0``."""
+        cap = self.cfg.queue_cap
+        if cap and len(self.waiting) >= cap:
+            if self.cfg.queue_policy == "evict":
+                victim = self.waiting.pop(0)
+                self._terminal(victim, State.SHED, Outcome.SHED_QUEUE,
+                               f"evicted: queue_cap={cap} reached")
+                self.waiting.append(req)
+                return [victim]
+            self._terminal(req, State.REJECTED, Outcome.REJECTED_QUEUE_FULL,
+                           f"rejected: queue_cap={cap} reached")
+            return [req]
         self.waiting.append(req)
+        return []
 
     def finish(self, req: Request) -> None:
         self.running.remove(req)
-        self._free_slots.append(req.slot)
+        self._release_slot(req)
+
+    def _release_slot(self, req: Request) -> None:
+        if req.slot is not None:
+            if self.pool is not None:
+                self.pool.free([req.slot])
+            self._free_slots.append(req.slot)
         req.slot = None
+        req.slot_gen = None
+
+    def _claim_slot(self, req: Request) -> None:
+        slot = self._free_slots.pop()
+        req.slot = slot
+        req.slot_gen = self.pool.take(slot) if self.pool is not None else 0
+
+    @staticmethod
+    def _terminal(req: Request, state: State, outcome: Outcome,
+                  error: Optional[str] = None) -> None:
+        req.state = state
+        req.outcome = outcome
+        req.error = error
 
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    # -- robustness sweeps ---------------------------------------------------
+    def _shed_and_reject(self, now: float, plan: IterationPlan) -> None:
+        """Whole-queue sweep (NOT just the head — a never-admittable or
+        expired head must not head-of-line block live traffic behind it):
+        reject requests that can never be admitted, shed expired ones."""
+        keep = []
+        for r in self.waiting:
+            reason = admission_block_reason(self.cfg, r)
+            if reason is not None:
+                self._terminal(r, State.REJECTED,
+                               Outcome.REJECTED_OVERSIZED, reason)
+                plan.rejected.append(r)
+            elif r.deadline <= now:
+                self._terminal(r, State.SHED, Outcome.SHED_DEADLINE)
+                plan.shed.append(r)
+            else:
+                keep.append(r)
+        self.waiting = keep
+
+    def _stolen(self) -> int:
+        return self.faults.stolen_slots() if self.faults is not None else 0
+
+    def _maybe_preempt(self, now: float, plan: IterationPlan) -> None:
+        """Preempt-to-reclaim: when the head waiter has starved past
+        ``preempt_starvation_s`` with no usable free slot, the youngest
+        Reuse-phase resident rolls its active block back, frees its slot,
+        and requeues at the TAIL of the waiting queue (tail placement bounds
+        thrash — reinserting in arrival order would put the victim back
+        ahead of the very head it was preempted for). Per-request
+        ``max_preemptions`` caps repeat victims."""
+        thr = self.cfg.preempt_starvation_s
+        if not thr or not self.waiting:
+            return
+        head = self.waiting[0]
+        if head.arrival > now or now - head.arrival < thr:
+            return
+        if len(self._free_slots) - self._stolen() > 0:
+            return                      # a slot is free; admission will run
+        for victim in reversed(self.running):
+            if victim.phase is not Phase.REUSE:
+                continue                # Refresh-phase work is about to pay
+                                        # its recompute anyway; skip it
+            if victim.n_preempted >= self.cfg.max_preemptions:
+                continue
+            self.running.remove(victim)
+            self._release_slot(victim)
+            plan.recomputed_tokens += victim.rollback_block()
+            victim.n_preempted += 1
+            victim.state = State.WAITING
+            self.waiting.append(victim)
+            plan.preempted.append(victim)
+            return
 
     # -- planning -------------------------------------------------------------
     def plan(self, now: float) -> IterationPlan:
@@ -178,6 +287,12 @@ class PhaseMultiplexedScheduler:
         # Refresh compared ``len < 0`` false, was deferred forever, and
         # blocked admission with it.
         refresh_slots = self.cfg.refresh_slots
+
+        # 0) robustness sweeps: structured rejection/shedding, then
+        # starvation-triggered preemption (frees a slot admission can use
+        # in this same iteration)
+        self._shed_and_reject(now, plan)
+        self._maybe_preempt(now, plan)
 
         # 1) running requests, FCFS
         for r in self.running:
@@ -195,8 +310,13 @@ class PhaseMultiplexedScheduler:
                 else:
                     plan.deferred.append(r)
 
-        # 2) greedy FCFS admission into released headroom
-        while (self.waiting and self._free_slots
+        # 2) greedy FCFS admission into released headroom. The sweep in (0)
+        # already removed never-admittable requests, so a ``break`` here is
+        # always a TRANSIENT condition (future arrival, budget consumed this
+        # iteration, mem-pressure steal, injected alloc fault) — head-of-line
+        # waiting, never head-of-line deadlock.
+        stolen = self._stolen()
+        while (self.waiting and len(self._free_slots) - stolen > 0
                and len(plan.refresh) < refresh_slots):
             cand = self.waiting[0]
             if cand.arrival > now:
@@ -204,8 +324,11 @@ class PhaseMultiplexedScheduler:
             cost = cand.refresh_len  # first step is a Refresh (prefix + text)
             if cost > budget:
                 break
+            if self.faults is not None and self.faults.take_alloc_fault():
+                plan.alloc_faults += 1     # transient: admit next iteration
+                break
             self.waiting.pop(0)
-            cand.slot = self._free_slots.pop()
+            self._claim_slot(cand)
             cand.state = State.RUNNING
             cand.t_admitted = now
             self.running.append(cand)
@@ -230,6 +353,12 @@ class RequestLevelScheduler(PhaseMultiplexedScheduler):
         plan = IterationPlan()
         budget = self.cfg.max_num_batched_tokens
 
+        # same structured rejection/shedding sweep as the phase scheduler —
+        # static batching is even MORE exposed to head-of-line deadlock (an
+        # oversized head would block every future batch). No preemption:
+        # the baseline's batches run to completion by definition.
+        self._shed_and_reject(now, plan)
+
         # conservative: every running request is charged its worst case
         for r in self.running:
             budget -= r.refresh_len
@@ -238,12 +367,16 @@ class RequestLevelScheduler(PhaseMultiplexedScheduler):
         # static batching: admit only when the previous batch fully drained
         # (the engine executes oversized refresh sets in serial chunks)
         drained = not self.running
-        while drained and self.waiting and self._free_slots:
+        stolen = self._stolen()
+        while drained and self.waiting and len(self._free_slots) - stolen > 0:
             cand = self.waiting[0]
             if cand.arrival > now or cand.refresh_len > budget:
                 break
+            if self.faults is not None and self.faults.take_alloc_fault():
+                plan.alloc_faults += 1
+                break
             self.waiting.pop(0)
-            cand.slot = self._free_slots.pop()
+            self._claim_slot(cand)
             cand.state = State.RUNNING
             cand.t_admitted = now
             self.running.append(cand)

@@ -28,6 +28,11 @@ class TraceRequest:
     arrival: float      # seconds
     prompt_len: int
     gen_len: int
+    # absolute completion deadline (inf = none). Traces derive it as
+    # ``arrival + deadline_slack`` — a pure function of the arrival, NO rng
+    # draw, so enabling deadlines never perturbs the trace's random stream
+    # (the determinism tests pin the stream).
+    deadline: float = float("inf")
 
 
 def _poisson_arrivals(n: int, rps: float, rng) -> np.ndarray:
@@ -51,7 +56,11 @@ def _burst_arrivals(n: int, rps: float, rng, burst_factor: float = 6.0,
 
 
 def make_trace(name: str, n: int, rps: float, seed: int = 0,
-               scale: float = 1.0) -> List[TraceRequest]:
+               scale: float = 1.0,
+               deadline_slack: float = float("inf")) -> List[TraceRequest]:
+    """``deadline_slack``: seconds after arrival by which each request must
+    finish (inf = no deadline). Applied post-hoc to the arrival — identical
+    rng stream with or without deadlines."""
     rng = np.random.default_rng(seed)
     if name == "livebench":
         arr = _poisson_arrivals(n, rps, rng)
@@ -68,7 +77,8 @@ def make_trace(name: str, n: int, rps: float, seed: int = 0,
     else:
         raise ValueError(name)
     return [TraceRequest(float(a), max(4, int(p * scale)),
-                         max(4, int(g * scale)))
+                         max(4, int(g * scale)),
+                         deadline=float(a) + deadline_slack)
             for a, p, g in zip(arr, plen, glen)]
 
 

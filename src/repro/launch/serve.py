@@ -24,6 +24,8 @@ from repro.configs import get_config, reduced
 from repro.configs.base import ServeConfig
 from repro.core.baselines import size_slots, system_profiles
 from repro.core.engine import Engine
+from repro.core.faults import FaultPlan
+from repro.core.request import State
 from repro.data.workloads import make_trace, trace_prompts
 from repro.launch.mesh import parse_mesh_env
 
@@ -36,7 +38,11 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
               time_scale: float = 1.0, length_scale: float = 0.15,
               size_by_profiler: bool = True, hbm_gb: int = 24,
               clock: str = "modeled", quiet: bool = True,
-              mesh_shape: Optional[Tuple[int, ...]] = None) -> dict:
+              mesh_shape: Optional[Tuple[int, ...]] = None,
+              queue_cap: int = 0, queue_policy: str = "reject",
+              deadline_slack: float = float("inf"),
+              preempt_starvation_s: float = 0.0,
+              fault_seed: Optional[int] = None) -> dict:
     import dataclasses
     cfg = get_config(arch)
     full_cfg = cfg
@@ -47,7 +53,9 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         max_num_logits=max_num_logits, block_size=block_size,
         steps_per_block=steps_per_block, max_seq_len=max_seq_len,
         max_slots=max_slots, max_refresh_per_iter=4,
-        mesh_shape=tuple(mesh_shape) if mesh_shape else None)
+        mesh_shape=tuple(mesh_shape) if mesh_shape else None,
+        queue_cap=queue_cap, queue_policy=queue_policy,
+        preempt_starvation_s=preempt_starvation_s)
     serve = system_profiles(base)[system]
     if size_by_profiler:
         # Offline profiler (§4.2) at FULL-model geometry and paper Table 3
@@ -62,26 +70,48 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         sized = size_slots(full_cfg, plan_serve, hbm_gb << 30)
         serve = dataclasses.replace(serve,
                                     max_slots=max(1, sized.max_slots))
-    eng = Engine(cfg, serve, seed=seed, clock=clock)
+    faults = FaultPlan.seeded(fault_seed) if fault_seed is not None else None
+    eng = Engine(cfg, serve, seed=seed, clock=clock, faults=faults)
     if mesh_shape and not quiet:
         print(f"mesh: {eng.mesh_devices} devices "
               f"({'x'.join(map(str, serve.mesh_shape))})")
     warmup_s = eng.warmup()      # AOT compile outside the measured window
-    trace = make_trace(workload, n, rps, seed=seed, scale=length_scale)
+    trace = make_trace(workload, n, rps, seed=seed, scale=length_scale,
+                       deadline_slack=deadline_slack)
     prompts = trace_prompts(trace, cfg.vocab_size, seed=seed)
     reqs = []
     for i, (t, p) in enumerate(zip(trace, prompts)):
         gl = min(t.gen_len, max_seq_len - len(p) - block_size)
         gl = max(block_size, gl)
         pl = min(len(p), max_seq_len - gl - block_size)
-        reqs.append(eng.submit(p[:pl], gen_len=gl, arrival=t.arrival, rid=i))
+        reqs.append(eng.submit(p[:pl], gen_len=gl, arrival=t.arrival, rid=i,
+                               deadline=t.deadline))
     stats = eng.run(time_scale=time_scale, quiet=quiet)
-    lats = np.array([r.latency for r in reqs])
+    # latency percentiles over FINISHED requests only — shed/rejected
+    # requests have no completion time and must not skew (or zero) the tail
+    fin = [r for r in reqs if r.state == State.FINISHED]
+    lats = np.array([r.latency for r in fin]) if fin else np.zeros(1)
+    # goodput: tokens of requests that finished BEFORE their deadline —
+    # shedding (or blowing deadlines) can't masquerade as throughput
+    good_tokens = sum(r.gen_len for r in fin if r.met_deadline)
     out = dict(
         system=system, workload=workload, rps=rps, n=n,
         throughput_tok_s=stats.throughput,
+        goodput_tok_s=good_tokens / max(stats.wall_time, 1e-9),
         committed_tokens=stats.committed_tokens,
         wall_time=stats.wall_time,
+        n_submitted=stats.submitted,
+        n_finished=stats.finished,
+        n_shed=stats.shed,
+        n_rejected=stats.rejected,
+        shed_deadline=stats.shed_deadline,
+        shed_queue=stats.shed_queue,
+        rejected_oversized=stats.rejected_oversized,
+        rejected_queue_full=stats.rejected_queue_full,
+        n_preemptions=stats.preemptions,
+        recomputed_tokens=stats.recomputed_tokens,
+        dispatch_retries=stats.dispatch_retries,
+        alloc_fault_iters=stats.alloc_fault_iters,
         avg_latency=float(lats.mean()),
         p50_latency=float(np.percentile(lats, 50)),
         p99_latency=float(np.percentile(lats, 99)),
@@ -136,6 +166,19 @@ def main():
     ap.add_argument("--mesh", default="env",
                     help="serving mesh: 'd,m' shape, 'none', or 'env' "
                          "(default: honor REPRO_MESH)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bounded waiting queue (0 = unbounded)")
+    ap.add_argument("--queue-policy", default="reject",
+                    choices=["reject", "evict"],
+                    help="full-queue backpressure: reject new vs evict oldest")
+    ap.add_argument("--deadline", type=float, default=float("inf"),
+                    help="per-request deadline slack in trace seconds "
+                         "(inf = none); expired waiters are shed")
+    ap.add_argument("--preempt-starvation", type=float, default=0.0,
+                    help="starvation threshold (s) that triggers "
+                         "preempt-and-requeue (0 = disabled)")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="run under a seeded FaultPlan (chaos mode)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mesh == "env":
@@ -146,7 +189,11 @@ def main():
         mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     res = run_serve(args.arch, args.system, args.workload, args.rps, args.n,
                     use_reduced=not args.full, seed=args.seed, quiet=False,
-                    mesh_shape=mesh_shape)
+                    mesh_shape=mesh_shape, queue_cap=args.queue_cap,
+                    queue_policy=args.queue_policy,
+                    deadline_slack=args.deadline,
+                    preempt_starvation_s=args.preempt_starvation,
+                    fault_seed=args.faults)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

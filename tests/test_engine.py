@@ -109,16 +109,40 @@ def test_zero_refresh_cap_serves_padded_path():
     assert all(r.state == State.FINISHED for r in reqs)
 
 
-def test_run_raises_on_never_admittable_request():
-    """A request whose total_len exceeds the token budget can never be
-    admitted; run() must surface the stall instead of spinning or silently
-    breaking with bogus stats."""
-    serve = dataclasses.replace(BASE, max_num_batched_tokens=16)
+def test_never_admittable_request_rejected_at_submit():
+    """A request whose Refresh cost exceeds the token budget can never be
+    admitted. It must come back from submit() in a terminal REJECTED state
+    with a per-request error — and the engine must keep serving the rest of
+    the traffic instead of raising the engine-wide stall RuntimeError (the
+    pre-robustness behavior, which killed every resident request)."""
+    from repro.core.request import Outcome
+    serve = dataclasses.replace(BASE, max_num_batched_tokens=64)
     cfg = reduced(ARCHS["llada-8b"])
     eng = Engine(cfg, serve, seed=0)
-    eng.submit(np.zeros(30, np.int32), gen_len=16, arrival=0.0, rid=0)
-    with pytest.raises(RuntimeError, match="stalled"):
-        eng.run()
+    bad = eng.submit(np.zeros(60, np.int32), gen_len=16, arrival=0.0, rid=0)
+    assert bad.state == State.REJECTED
+    assert bad.outcome == Outcome.REJECTED_OVERSIZED
+    assert "token budget" in bad.error
+    ok = eng.submit(np.zeros(16, np.int32), gen_len=16, arrival=0.0, rid=1)
+    stats = eng.run()                       # must NOT raise
+    assert ok.state == State.FINISHED
+    assert stats.submitted == 2 and stats.finished == 1
+    assert stats.rejected_oversized == 1
+    assert stats.conserved()
+
+
+def test_oversized_for_max_seq_len_rejected_at_submit():
+    """total_len > max_seq_len used to assert inside build_sequence; it must
+    now surface as a structured rejection instead of a crash."""
+    from repro.core.request import Outcome
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0)
+    bad = eng.submit(np.zeros(BASE.max_seq_len, np.int32), gen_len=16,
+                     arrival=0.0, rid=0)
+    assert bad.state == State.REJECTED
+    assert bad.outcome == Outcome.REJECTED_OVERSIZED
+    assert "max_seq_len" in bad.error
+    eng.run()                               # empty queue, no raise
 
 
 def test_run_raises_when_running_requests_all_deferred():
@@ -126,7 +150,8 @@ def test_run_raises_when_running_requests_all_deferred():
     progress while unfinished RUNNING requests remain (and no future
     arrival can unblock them) must raise, not exit recording bogus stats.
     The post-fix scheduler cannot produce this state itself, so force it
-    by deferring every running request at plan time."""
+    by deferring every running request at plan time. The message must name
+    the stall and the stuck population (the operator's first triage cues)."""
     from repro.core.scheduler import IterationPlan
     cfg = reduced(ARCHS["llada-8b"])
     eng = Engine(cfg, BASE, seed=0)
@@ -139,9 +164,39 @@ def test_run_raises_when_running_requests_all_deferred():
         return IterationPlan(deferred=list(eng.scheduler.running))
 
     eng.scheduler.plan = defer_after_admission
-    with pytest.raises(RuntimeError, match="running"):
+    with pytest.raises(RuntimeError, match="stalled") as ei:
         eng.run()
+    msg = str(ei.value)
+    assert "1 running" in msg and "0 waiting" in msg
+    assert "invariant violation" in msg
+    assert f"max_slots={BASE.max_slots}" in msg
     assert eng.scheduler.has_work          # nothing was silently dropped
+
+
+def test_max_iters_exhaustion_returns_with_work_left():
+    """max_iters is a hard iteration budget, not an error: run() must return
+    the stats accumulated so far with unfinished requests still resident
+    (resumable), never raise or mark them terminal."""
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0)
+    r = eng.submit(np.zeros(16, np.int32), gen_len=16, arrival=0.0, rid=0)
+    stats = eng.run(max_iters=2)
+    assert stats.iterations == 2
+    assert r.state == State.RUNNING and r.outcome is None
+    assert eng.scheduler.has_work
+    assert not stats.conserved()           # by design: work is unfinished
+    stats = eng.run(max_iters=100_000)     # resumable to completion
+    assert r.state == State.FINISHED and stats.conserved()
+
+
+def test_monotonic_rids_no_collision():
+    """Engine-assigned rids are a monotonic counter (rng draws could collide
+    and silently merge two requests' stats)."""
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0)
+    rids = [eng.submit(np.zeros(8, np.int32), gen_len=8).rid
+            for _ in range(20)]
+    assert rids == list(range(20))
 
 
 def _jit_cache_keys(eng):

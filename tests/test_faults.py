@@ -1,0 +1,171 @@
+"""Chaos suite: deterministic fault injection (core/faults.py).
+
+End-state equivalence under every seeded schedule: same token ids as the
+fault-free run for all non-shed requests, zero leaked slots, and the
+EngineStats conservation law ``submitted == finished + shed + rejected``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ServeConfig
+from repro.core.engine import Engine
+from repro.core.faults import FaultError, FaultEvent, FaultPlan
+from repro.core.request import State
+
+BASE = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                   block_size=8, steps_per_block=8, max_seq_len=128,
+                   max_slots=4, max_refresh_per_iter=2,
+                   selection="head", scheduler="phase", logit_mode="chunked",
+                   preempt_starvation_s=0.05)
+
+
+def _serve(faults=None, serve=BASE, n=5, arch="llada-8b"):
+    cfg = reduced(ARCHS[arch])
+    eng = Engine(cfg, serve, seed=0, clock="modeled", faults=faults)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
+                                    int(rng.integers(8, 40))),
+                       gen_len=16, arrival=0.05 * i, rid=i)
+            for i in range(n)]
+    stats = eng.run()
+    return eng, reqs, stats
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_deterministic():
+    a, b = FaultPlan.seeded(3), FaultPlan.seeded(3)
+    assert a.events == b.events
+    assert FaultPlan.seeded(4).events != a.events
+
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultEvent("disk", at_iter=1)
+
+
+def test_fault_plan_activation_and_consumption():
+    plan = FaultPlan([FaultEvent("dispatch", at_iter=3, count=2),
+                      FaultEvent("mem", at_iter=2, count=1, duration=2)])
+    plan.begin_iteration(1)
+    assert not plan.take_dispatch_fault("refresh")
+    assert plan.stolen_slots() == 0 and plan.blocking()
+    plan.begin_iteration(2)
+    assert plan.stolen_slots() == 1
+    plan.begin_iteration(3)
+    assert plan.take_dispatch_fault("refresh")
+    assert plan.take_dispatch_fault("decode")
+    assert not plan.take_dispatch_fault("reuse")   # both tokens consumed
+    plan.begin_iteration(4)
+    assert plan.stolen_slots() == 0                # steal expired
+    assert not plan.blocking()
+
+
+def test_stage_scoped_dispatch_fault():
+    plan = FaultPlan([FaultEvent("dispatch", at_iter=1, stage="decode")])
+    plan.begin_iteration(1)
+    assert not plan.take_dispatch_fault("refresh")
+    assert plan.take_dispatch_fault("decode")
+
+
+# ---------------------------------------------------------------------------
+# chaos equivalence (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
+def test_chaos_end_state_equivalence(seed):
+    """Every seeded schedule (dispatch faults below the retry limit, alloc
+    faults, mem steals, slow iterations) must degrade — never corrupt:
+    token ids identical to the fault-free run, no leaked slots, stats
+    conservation."""
+    _, ref_reqs, ref_stats = _serve()
+    eng, reqs, stats = _serve(faults=FaultPlan.seeded(seed, horizon=60))
+    assert stats.conserved()
+    assert stats.finished == len(reqs)
+    assert eng.pool.slots_in_use == []
+    for a, b in zip(ref_reqs, reqs):
+        assert b.state == State.FINISHED
+        assert np.array_equal(a.output_tokens(), b.output_tokens()), \
+            f"rid {b.rid} corrupted under fault seed {seed}"
+    # commits discarded by preemption rollbacks are re-committed on replay,
+    # so the lifetime counter exceeds the fault-free run by exactly the
+    # recompute debt
+    assert stats.committed_tokens == \
+        ref_stats.committed_tokens + stats.recomputed_tokens
+
+
+def test_chaos_packed_path():
+    serve = dataclasses.replace(BASE, varlen_pack=True, token_bucket=64)
+    _, ref_reqs, _ = _serve(serve=serve)
+    eng, reqs, stats = _serve(faults=FaultPlan.seeded(9, horizon=60),
+                              serve=serve)
+    assert stats.conserved() and eng.pool.slots_in_use == []
+    for a, b in zip(ref_reqs, reqs):
+        assert np.array_equal(a.output_tokens(), b.output_tokens())
+
+
+# ---------------------------------------------------------------------------
+# per-kind engine behaviour
+# ---------------------------------------------------------------------------
+
+def test_transient_dispatch_fault_retries_and_succeeds():
+    plan = FaultPlan([FaultEvent("dispatch", at_iter=1, count=2)])
+    eng, reqs, stats = _serve(faults=plan, n=2)
+    assert stats.dispatch_retries == 2
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert plan.injected["dispatch"] == 2
+
+
+def test_permanent_dispatch_fault_raises_fault_error():
+    """More consecutive failures than fault_retries = a real outage: the
+    engine surfaces FaultError instead of retrying forever."""
+    plan = FaultPlan([FaultEvent("dispatch", at_iter=1, count=10)])
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0, clock="modeled", faults=plan)
+    eng.submit(np.zeros(16, np.int32), gen_len=8, arrival=0.0, rid=0)
+    with pytest.raises(FaultError, match="dispatch fault"):
+        eng.run()
+
+
+def test_retry_backoff_charges_modeled_clock():
+    plan = FaultPlan([FaultEvent("dispatch", at_iter=1, count=2)])
+    eng, _, stats = _serve(faults=plan, n=1)
+    ref_eng, _, ref_stats = _serve(n=1)
+    # two backoffs (launch_s and 2*launch_s) beyond the fault-free clock
+    assert stats.wall_time > ref_stats.wall_time
+
+
+def test_transient_alloc_fault_defers_admission():
+    plan = FaultPlan([FaultEvent("alloc", at_iter=1, count=3)])
+    eng, reqs, stats = _serve(faults=plan)
+    assert stats.alloc_fault_iters >= 1
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.conserved()
+
+
+def test_mem_pressure_steal_recovers():
+    """Stealing every free slot for a window suppresses admission; the
+    engine rides it out (and can preempt-to-reclaim if residents starve
+    the queue) and still finishes everything."""
+    plan = FaultPlan([FaultEvent("mem", at_iter=2, count=BASE.max_slots,
+                                 duration=5)])
+    eng, reqs, stats = _serve(faults=plan)
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.conserved() and eng.pool.slots_in_use == []
+
+
+def test_slow_iteration_delay_charged():
+    plan = FaultPlan([FaultEvent("slow", at_iter=1, delay_s=0.5)])
+    eng, reqs, stats = _serve(faults=plan, n=2)
+    assert stats.slow_fault_s == pytest.approx(0.5)
+    assert all(r.state == State.FINISHED for r in reqs)
+    ref = _serve(n=2)[2]
+    # the delay overlaps idle waiting-for-arrival time, so the wall clock
+    # grows by at least the non-overlapped part — and never shrinks
+    assert stats.wall_time >= 0.5
+    assert stats.wall_time > ref.wall_time

@@ -1,0 +1,232 @@
+"""Robustness layer: admission control, shedding, preempt-and-requeue, and
+the KV slot-lifecycle ledger (docs/robustness.md)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ServeConfig
+from repro.core.engine import Engine
+from repro.core.kv_pool import KVPool
+from repro.core.request import Outcome, Request, State
+
+BASE = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                   block_size=8, steps_per_block=8, max_seq_len=128,
+                   max_slots=8, max_refresh_per_iter=2,
+                   selection="head", scheduler="phase", logit_mode="chunked")
+
+
+# ---------------------------------------------------------------------------
+# KVPool slot-lifecycle ledger
+# ---------------------------------------------------------------------------
+
+def test_pool_take_free_generation():
+    pool = KVPool(4)
+    assert pool.slots_in_use == []
+    g = pool.take(2)
+    assert g == 0 and pool.slots_in_use == [2]
+    pool.free([2])
+    assert pool.generation(2) == 1 and pool.slots_in_use == []
+    assert pool.take(2) == 1          # recycled slot carries the new gen
+
+
+def test_pool_double_take_raises():
+    pool = KVPool(4)
+    pool.take(1)
+    with pytest.raises(RuntimeError, match="in use"):
+        pool.take(1)
+
+
+def test_pool_double_free_raises():
+    pool = KVPool(4)
+    pool.take(1)
+    pool.free([1])
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.free([1])
+
+
+def test_pool_free_invalid_slot_raises():
+    pool = KVPool(4)
+    with pytest.raises(RuntimeError):
+        pool.free([9])
+
+
+def test_engine_detects_stale_slot_handle():
+    """A slot freed (and gen-bumped) under a resident request must be caught
+    at the next pool touch, not silently gather another request's KV."""
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0)
+    r = eng.submit(np.zeros(16, np.int32), gen_len=16, arrival=0.0, rid=0)
+    assert eng.step(0.0)                  # admit + first Refresh
+    eng.pool.free([r.slot])               # simulate a buggy/raced free
+    with pytest.raises(RuntimeError, match="stale slot handle"):
+        while eng.step(0.0):
+            pass
+
+
+def test_finish_returns_slot_no_leak():
+    """scheduler.finish must return the slot to BOTH the free stack and the
+    pool ledger exactly once; after a full drain nothing is in use."""
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0)
+    reqs = [eng.submit(np.zeros(12, np.int32), gen_len=16, rid=i)
+            for i in range(5)]
+    eng.run()
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert eng.pool.slots_in_use == []
+    assert sorted(eng.scheduler._free_slots) == list(range(BASE.max_slots))
+    assert all(r.slot is None and r.slot_gen is None for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# bounded queue + deadlines
+# ---------------------------------------------------------------------------
+
+def test_queue_cap_reject_policy():
+    serve = dataclasses.replace(BASE, queue_cap=2, queue_policy="reject")
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0)
+    # arrivals in the future so the queue can't drain while we fill it
+    reqs = [eng.submit(np.zeros(8, np.int32), gen_len=8, arrival=1.0, rid=i)
+            for i in range(3)]
+    assert reqs[2].state == State.REJECTED
+    assert reqs[2].outcome == Outcome.REJECTED_QUEUE_FULL
+    assert "queue_cap" in reqs[2].error
+    stats = eng.run()
+    assert reqs[0].state == reqs[1].state == State.FINISHED
+    assert stats.rejected_queue_full == 1
+    assert stats.conserved()
+
+
+def test_queue_cap_evict_policy():
+    serve = dataclasses.replace(BASE, queue_cap=2, queue_policy="evict")
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0)
+    reqs = [eng.submit(np.zeros(8, np.int32), gen_len=8, arrival=1.0, rid=i)
+            for i in range(3)]
+    assert reqs[0].state == State.SHED     # oldest waiter evicted
+    assert reqs[0].outcome == Outcome.SHED_QUEUE
+    stats = eng.run()
+    assert reqs[1].state == reqs[2].state == State.FINISHED
+    assert stats.shed_queue == 1 and stats.conserved()
+
+
+def test_deadline_expired_waiter_is_shed():
+    """With one slot occupied by a long request, a deadlined waiter expires
+    in the queue and is shed with a structured outcome — never an engine
+    error, and the resident still finishes."""
+    serve = dataclasses.replace(BASE, max_slots=1)
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0, clock="modeled")
+    long_r = eng.submit(np.zeros(16, np.int32), gen_len=32, arrival=0.0,
+                        rid=0)
+    dead_r = eng.submit(np.zeros(16, np.int32), gen_len=8, arrival=0.0,
+                        rid=1, deadline=1e-6)
+    stats = eng.run()
+    assert long_r.state == State.FINISHED
+    assert dead_r.state == State.SHED
+    assert dead_r.outcome == Outcome.SHED_DEADLINE
+    assert stats.shed_deadline == 1 and stats.conserved()
+
+
+def test_deadline_met_is_not_shed():
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, BASE, seed=0, clock="modeled")
+    r = eng.submit(np.zeros(16, np.int32), gen_len=8, arrival=0.0, rid=0,
+                   deadline=1e9)
+    stats = eng.run()
+    assert r.state == State.FINISHED and r.met_deadline
+    assert stats.shed == 0 and stats.conserved()
+
+
+def test_overload_burst_never_raises():
+    """Acceptance criterion: a Burst trace far beyond the admissible rate
+    with queue_cap + deadlines completes with structured outcomes only."""
+    from repro.launch.serve import run_serve
+    res = run_serve("llada-8b", "dllm-serve", "burst", rps=40.0, n=24,
+                    seed=0, queue_cap=4, queue_policy="evict",
+                    deadline_slack=3.0, preempt_starvation_s=0.5,
+                    max_slots=4, size_by_profiler=False)
+    assert res["n_submitted"] == 24
+    assert (res["n_finished"] + res["n_shed"] + res["n_rejected"]) == 24
+    assert res["n_shed"] > 0              # saturating rate must shed
+    assert res["goodput_tok_s"] <= res["throughput_tok_s"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-requeue
+# ---------------------------------------------------------------------------
+
+def _serve_with_preemption(arch, varlen, preempt_s):
+    """3 requests through 2 slots on the modeled clock; with a starvation
+    threshold the waiter forces a preemption of the youngest Reuse resident."""
+    serve = dataclasses.replace(
+        BASE, max_slots=2, max_refresh_per_iter=2, varlen_pack=varlen,
+        token_bucket=64, preempt_starvation_s=preempt_s)
+    cfg = reduced(ARCHS[arch])
+    eng = Engine(cfg, serve, seed=0, clock="modeled")
+    rng = np.random.default_rng(3)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1, 20),
+                       gen_len=24, arrival=0.0, rid=i) for i in range(3)]
+    stats = eng.run()
+    return reqs, stats
+
+
+@pytest.mark.parametrize("arch", ["llada-8b", "mamba2-130m"])
+@pytest.mark.parametrize("varlen", [False, True])
+def test_preemption_oracle_bit_identical(arch, varlen):
+    """The tentpole property: a preempted-then-requeued request recomputes
+    its cache via a normal Refresh and produces BIT-IDENTICAL output tokens
+    to its unpreempted run — padded and packed paths, attention and SSM
+    families (per-request denoising is batch-independent, and rollback
+    restarts the active block's deterministic trajectory from step 0)."""
+    base_reqs, base_stats = _serve_with_preemption(arch, varlen, 0.0)
+    pre_reqs, pre_stats = _serve_with_preemption(arch, varlen, 0.02)
+    assert base_stats.preemptions == 0
+    assert pre_stats.preemptions > 0, "scenario failed to trigger preemption"
+    assert pre_stats.recomputed_tokens >= 0
+    for a, b in zip(base_reqs, pre_reqs):
+        assert a.state == b.state == State.FINISHED
+        assert np.array_equal(a.output_tokens(), b.output_tokens()), \
+            f"rid {a.rid} diverged after preemption"
+    assert pre_stats.conserved()
+    preempted = [r for r in pre_reqs if r.n_preempted]
+    assert preempted and all(r.recomputed_tokens >= 0 for r in preempted)
+
+
+def test_preemption_capped_per_request():
+    """max_preemptions bounds requeue thrash: no request is preempted more
+    often than the cap, and everything still finishes."""
+    serve = dataclasses.replace(BASE, max_slots=2, preempt_starvation_s=0.01,
+                                max_preemptions=1)
+    cfg = reduced(ARCHS["llada-8b"])
+    eng = Engine(cfg, serve, seed=0, clock="modeled")
+    reqs = [eng.submit(np.zeros(16, np.int32), gen_len=24, arrival=0.0,
+                       rid=i) for i in range(4)]
+    stats = eng.run()
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert all(r.n_preempted <= 1 for r in reqs)
+    assert stats.conserved()
+
+
+def test_no_robustness_knobs_is_bit_identical_to_baseline():
+    """Acceptance criterion: the default config (no faults, no deadlines,
+    unbounded queue, no preemption) must produce the same outputs as before
+    the robustness layer — here: identical across two fresh engines, with
+    zero robustness events recorded."""
+    def go():
+        cfg = reduced(ARCHS["llada-8b"])
+        eng = Engine(cfg, BASE, seed=7)
+        rng = np.random.default_rng(7)
+        reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1, 16),
+                           gen_len=16, rid=i) for i in range(4)]
+        stats = eng.run()
+        return reqs, stats
+
+    r1, s1 = go()
+    r2, s2 = go()
+    for a, b in zip(r1, r2):
+        assert np.array_equal(a.output_tokens(), b.output_tokens())
+    assert s1.preemptions == s1.shed == s1.rejected == 0
+    assert s1.dispatch_retries == 0 and s1.conserved()

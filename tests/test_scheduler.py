@@ -4,7 +4,7 @@ import pytest
 from _hyp_compat import given, settings, st
 
 from repro.configs.base import ServeConfig
-from repro.core.request import Phase, Request, State
+from repro.core.request import Outcome, Phase, Request, State
 from repro.core.scheduler import (PhaseMultiplexedScheduler,
                                   RequestLevelScheduler)
 
@@ -180,3 +180,48 @@ def test_phase_scheduler_admits_more_than_request_level():
     p_phase = peak_concurrency(PhaseMultiplexedScheduler)
     p_req = peak_concurrency(RequestLevelScheduler)
     assert p_phase > p_req, (p_phase, p_req)
+
+
+@pytest.mark.parametrize("klass", [PhaseMultiplexedScheduler,
+                                   RequestLevelScheduler])
+def test_oversized_head_does_not_block_queue(klass):
+    """Head-of-line fix: a never-admittable request at the FRONT of the
+    waiting queue is rejected with a structured outcome in the same plan()
+    call that admits the traffic behind it — previously the FCFS admission
+    loop broke on the head and starved everything forever."""
+    cfg = mk_cfg(max_num_batched_tokens=64)
+    sched = klass(cfg)
+    bad = mk_req(0, cfg, plen=56, glen=16)   # refresh cost 72 > budget 64
+    good = [mk_req(i, cfg, plen=8, glen=8) for i in range(1, 4)]
+    sched.submit(bad)
+    for r in good:
+        sched.submit(r)
+    plan = sched.plan(now=0.0)
+    assert bad in plan.rejected
+    assert bad.state == State.REJECTED
+    assert bad.outcome == Outcome.REJECTED_OVERSIZED
+    assert "max_num_batched_tokens" in bad.error
+    assert plan.admitted, "traffic behind the bad head must admit this iter"
+    drain(sched, cfg)
+    assert all(r.state == State.FINISHED for r in good)
+
+
+@pytest.mark.parametrize("klass", [PhaseMultiplexedScheduler,
+                                   RequestLevelScheduler])
+def test_expired_head_does_not_block_queue(klass):
+    """Same head-of-line property for deadline expiry: a dead waiter at the
+    front is shed, not planned, and the queue behind it keeps moving."""
+    cfg = mk_cfg()
+    sched = klass(cfg)
+    dead = mk_req(0, cfg, plen=8, glen=8)
+    dead.deadline = 0.5
+    live = mk_req(1, cfg, plen=8, glen=8)
+    sched.submit(dead)
+    sched.submit(live)
+    plan = sched.plan(now=1.0)                # past dead's deadline
+    assert dead in plan.shed
+    assert dead.state == State.SHED
+    assert dead.outcome == Outcome.SHED_DEADLINE
+    assert live in plan.admitted
+    drain(sched, cfg)
+    assert live.state == State.FINISHED
