@@ -52,16 +52,22 @@ def per_arch_waste(quick: bool = True):
     return out
 
 
-def mesh_rows(quick: bool = True):
-    """``throughput/mesh/<shape>/...`` rows: the same burst trace served on
-    a 1×1 vs 1×2 host-device mesh (CPU subprocesses under
-    ``--xla_force_host_platform_device_count=2``), reporting per-device exec
-    tokens, profiler-sized slots, p99 latency, and modeled throughput — the
-    sharded-serving perf trajectory. The mesh signal shows up three ways:
-    per-device exec tokens halve (TP splits the work), the per-device memory
-    plan buys ~2× slots (capacity coupling), and latency/throughput improve
-    once the trace pressures the 1-device slot count. A mesh that silently
-    collapses to fewer devices than requested raises."""
+_MESH_SERVE_CACHE = {}
+MESH_RPS = 256.0
+
+
+def _mesh_serve(mesh: str, n: int, kernels: bool) -> dict:
+    """One serve subprocess on a CPU host-device mesh (memoized: ``run`` and
+    ``record`` share the same measurements within one harness process).
+
+    ``kernels=True`` forces the Pallas hot paths (``--kernels``: shard_mapped
+    flash varlen attention + fused vocab-sharded argmax); ``kernels=False``
+    pins the jnp per-shard fallback (chunked logits, masked-stream
+    attention). A mesh that silently collapses to fewer devices than
+    requested — or a kernels run where the engine fell back — raises."""
+    key = (mesh, n, kernels)
+    if key in _MESH_SERVE_CACHE:
+        return _MESH_SERVE_CACHE[key]
     import json
     import os
     import subprocess
@@ -74,35 +80,64 @@ def mesh_rows(quick: bool = True):
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         " --xla_force_host_platform_device_count=2").strip()
     env.pop("REPRO_MESH", None)      # --mesh below is authoritative
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        path = f.name
+    try:
+        # all-at-once burst (rps >> the _grid sweep's rps≈6 wall): an
+        # arrival-dominated trace would show no modeled-clock separation
+        # between mesh sizes, and staggered arrivals de-synchronize the
+        # per-iteration Refresh sets into single-segment dispatches — where
+        # the tile-skipping kernel and the jnp [T, T] rectangle coincide.
+        # Simultaneous arrivals keep requests in refresh lockstep, so fused
+        # dispatches carry multiple segments and the kernels' Σ Sᵢ² vs
+        # (Σ Sᵢ)² modeled-cost gap is actually exercised.
+        cmd = [sys.executable, "-m", "repro.launch.serve",
+               "--arch", "llada-8b", "--system", "dllm-serve",
+               "--workload", "burst", "--rps", str(MESH_RPS), "--n", str(n),
+               "--mesh", mesh, "--out", path]
+        if kernels:
+            cmd.append("--kernels")
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=900)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"mesh={mesh} kernels={kernels} serve failed: "
+                f"{r.stderr[-1000:]}")
+        with open(path) as f:
+            res = json.load(f)
+    finally:
+        os.unlink(path)
+    want = 1
+    for d in mesh.split(","):
+        want *= int(d)
+    if res["mesh_devices"] != want:
+        raise RuntimeError(
+            f"mesh {mesh} collapsed to {res['mesh_devices']} device(s)")
+    if res["kernels_active"] != kernels:
+        raise RuntimeError(
+            f"mesh {mesh}: kernels_active={res['kernels_active']} but "
+            f"kernels={kernels} was requested — silent fallback")
+    _MESH_SERVE_CACHE[key] = res
+    return res
+
+
+def mesh_rows(quick: bool = True):
+    """``throughput/mesh/<shape>/...`` rows: the same burst trace served on
+    a 1×1 vs 1×2 host-device mesh (CPU subprocesses under
+    ``--xla_force_host_platform_device_count=2``), reporting per-device exec
+    tokens, profiler-sized slots, p99 latency, and modeled throughput — the
+    sharded-serving perf trajectory. The mesh signal shows up three ways:
+    per-device exec tokens halve (TP splits the work), the per-device memory
+    plan buys ~2× slots (capacity coupling), and latency/throughput improve
+    once the trace pressures the 1-device slot count. Each mesh shape is
+    served twice — jnp per-shard fallback vs the shard_mapped Pallas hot
+    paths (``kernels_modeled_tok_s``) — so the kernels-×-TP win is a tracked
+    row, not prose."""
     n = 12 if quick else 24          # > the 1-device slot plan: slot-bound
     out = []
     for mesh in ("1,1", "1,2"):
-        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
-            path = f.name
-        try:
-            # saturating arrival rate (the _grid sweep's rps≈6 wall): an
-            # under-loaded trace is arrival-dominated and would show no
-            # modeled-clock separation between mesh sizes
-            r = subprocess.run(
-                [sys.executable, "-m", "repro.launch.serve",
-                 "--arch", "llada-8b", "--system", "dllm-serve",
-                 "--workload", "burst", "--rps", "6.0", "--n", str(n),
-                 "--mesh", mesh, "--out", path],
-                capture_output=True, text=True, env=env, timeout=900)
-            if r.returncode != 0:
-                raise RuntimeError(
-                    f"mesh={mesh} serve failed: {r.stderr[-1000:]}")
-            with open(path) as f:
-                res = json.load(f)
-        finally:
-            os.unlink(path)
-        want = 1
-        for d in mesh.split(","):
-            want *= int(d)
-        if res["mesh_devices"] != want:
-            raise RuntimeError(
-                f"mesh {mesh} collapsed to {res['mesh_devices']} device(s)")
         tag = mesh.replace(",", "x")
+        res = _mesh_serve(mesh, n, kernels=False)
         us_per_tok = 1e6 / max(res["throughput_tok_s"], 1e-9)
         out.append((f"throughput/mesh/{tag}/modeled_tok_s", us_per_tok,
                     f"{res['throughput_tok_s']:.2f}tok_s"
@@ -114,7 +149,44 @@ def mesh_rows(quick: bool = True):
                 f"throughput/mesh/{tag}/{stage}_exec_tokens_per_device", 0.0,
                 f"{res[f'{stage}_tokens_exec_per_device']:.0f}"
                 f"(total{res[f'{stage}_tokens_exec']})"))
+        kres = _mesh_serve(mesh, n, kernels=True)
+        kus = 1e6 / max(kres["throughput_tok_s"], 1e-9)
+        speed = kres["throughput_tok_s"] / max(res["throughput_tok_s"], 1e-9)
+        out.append((f"throughput/mesh/{tag}/kernels_modeled_tok_s", kus,
+                    f"{kres['throughput_tok_s']:.2f}tok_s"
+                    f"|vs_jnp={speed:.2f}x"
+                    f"|kernels_active={kres['kernels_active']}"))
     return out
+
+
+def record(quick: bool = True) -> dict:
+    """``BENCH_throughput.json`` snapshot: the mesh × kernels grid — the
+    committed perf-trajectory artifact for the throughput area. Each mesh
+    shape carries the jnp per-shard fallback and the shard_mapped Pallas
+    run; ``kernels_speedup`` is the headline kernels-×-TP ratio."""
+    n = 12 if quick else 24
+    snap = {"schema": "throughput/mesh-kernels/v1", "workload": "burst",
+            "rps": MESH_RPS, "n_requests": n, "arch": "llada-8b",
+            "system": "dllm-serve", "rows": {}}
+    for mesh in ("1,1", "1,2"):
+        tag = mesh.replace(",", "x")
+        jnp_res = _mesh_serve(mesh, n, kernels=False)
+        k_res = _mesh_serve(mesh, n, kernels=True)
+        snap["rows"][tag] = {
+            "devices": jnp_res["mesh_devices"],
+            "slots": jnp_res["max_slots"],
+            "jnp_modeled_tok_s": round(jnp_res["throughput_tok_s"], 3),
+            "kernels_modeled_tok_s": round(k_res["throughput_tok_s"], 3),
+            "kernels_active": k_res["kernels_active"],
+            "kernels_speedup": round(
+                k_res["throughput_tok_s"]
+                / max(jnp_res["throughput_tok_s"], 1e-9), 3),
+            "jnp_p99_latency_s": round(jnp_res["p99_latency"], 4),
+            "kernels_p99_latency_s": round(k_res["p99_latency"], 4),
+            "refresh_exec_tokens_per_device": round(
+                jnp_res["refresh_tokens_exec_per_device"], 1),
+        }
+    return snap
 
 
 def run(quick: bool = True):

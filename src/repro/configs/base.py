@@ -164,11 +164,15 @@ class ServeConfig:
     # (the single-device path, bit-identical to a 1×1 mesh). Under a mesh the
     # params are placed by ``launch.sharding.Rules.params``, the KV slot pool
     # is sharded by ``Rules.cache`` (KV heads over ``model`` when divisible,
-    # retained-length fallback otherwise), every packed stage executes
+    # retained-length fallback otherwise; the slot axis over ``data`` —
+    # independent replica streams), every packed stage executes
     # tensor-parallel (vocab-parallel logit argmax included), and
     # ``plan_memory`` bills weights/activations/KV-slot bytes PER DEVICE.
-    # Pallas kernel paths don't partition — the engine rejects
-    # ``use_flash_kernel`` / ``logit_mode="fused"`` when the model axis > 1.
+    # The Pallas kernel paths shard_map themselves per model shard
+    # (``kernels.ops``: head-sharded varlen attention/SSD scan,
+    # vocab-sharded fused argmax with a cross-shard reduce); genuinely
+    # indivisible head/vocab counts fail loudly at engine construction
+    # (``launch.sharding.kernel_partition_plan``) — never a silent fallback.
     iter_log_cap: int = 0                # keep only the last N iter_log rows
     # (0 = unlimited — a long modeled-clock run otherwise accumulates one
     # dict per iteration forever, which a production engine cannot afford)

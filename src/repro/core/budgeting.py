@@ -120,7 +120,8 @@ def logit_activation_bytes(cfg: ModelConfig, serve: ServeConfig,
     if serve.logit_mode == "chunked":
         return min(n_exec, serve.max_num_logits) * v_pd * 4
     # fused: the Pallas online kernel holds one [T_tile, V_tile] f32 block
-    # (single-device only — the engine rejects it on a model axis > 1)
+    # per shard (vocab-sharded under a model axis > 1 — each shard scans its
+    # V/TP slice and a cheap (max, index, logsumexp) reduce merges them)
     return 256 * serve.vocab_tile * 4
 
 
@@ -333,6 +334,8 @@ def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
     ``serve.mesh_shape`` the weight/KV-slot/activation bytes shrink by the
     sharded fractions, and the freed per-device headroom converts into MORE
     global slots — the §4.2-4.3 capacity coupling extended across a mesh.
+    The slot pool shards its slot axis over the ``data`` axis (independent
+    replica streams), so global capacity is per-replica slots × mesh_data.
     """
     weights = weight_bytes_per_device(cfg, serve.mesh_shape)
     n_logit_worst = serve.max_num_batched_tokens
@@ -341,7 +344,9 @@ def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
     guard = int(hbm_bytes * guard_band)
     slot = kv_slot_bytes(cfg, serve)
     pool = max(0, hbm_bytes - weights - act - guard)
-    slots = min(serve.max_slots, pool // slot) if slot else serve.max_slots
+    replicas = max(1, serve.mesh_data)
+    slots = min(serve.max_slots, replicas * (pool // slot)) \
+        if slot else serve.max_slots
     return MemoryPlan(weights, act, logit, slot, pool, int(slots),
                       mesh_devices=serve.mesh_devices)
 

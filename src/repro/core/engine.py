@@ -56,13 +56,21 @@ tensor-parallel under a (data, model) device mesh — params placed by
 ``launch.sharding.Rules.params``, the slot pool sharded by ``Rules.cache``,
 per-stage PartitionSpecs threaded through the jitted entry points via
 ``repro.jax_compat.jit_sharded``, and the logit stage running vocab-parallel
-(argmax/logsumexp reduce across vocab shards). No mesh and a 1×1 mesh are
+(argmax/logsumexp reduce across vocab shards). The Pallas hot paths run
+per-shard too: every stage dispatch happens inside the mesh context
+(:meth:`Engine._mesh_ctx`) so the ``kernels.ops`` wrappers shard_map the
+varlen attention / SSD scan over their local heads and the fused argmax over
+the local vocab shard — kernels and tensor-parallelism compose. On a data
+axis > 1 the slot pool shards its slot axis over ``data`` (independent
+replica streams; the modeled clock credits the split). No mesh and a 1×1
+mesh are
 bit-identical to each other, so all padded-vs-packed oracles keep anchoring
 correctness; the 1-vs-2-device agreement suite (``launch/shard_check.py``)
 anchors the sharded path. See ``docs/sharding.md``.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import math
 import time
@@ -228,16 +236,19 @@ class Engine:
         # PartitionSpecs (repro.jax_compat.jit_sharded). No mesh / 1×1 mesh
         # executes the identical computation — the single-device path is the
         # bit-identical anchor for all padded-vs-packed oracles.
+        #
+        # The Pallas hot paths shard-map themselves per model shard (see
+        # kernels.ops): validate the head/vocab divisibility law up front —
+        # before the mesh is even built, so indivisible configs fail loudly
+        # without needing the devices — instead of silently falling back.
         if serve.mesh_model > 1 and (serve.use_flash_kernel
                                      or serve.logit_mode == "fused"):
-            raise ValueError(
-                "Pallas kernel paths (use_flash_kernel / "
-                "logit_mode='fused') do not partition over a model axis "
-                "> 1; use the jnp paths (logit_mode='chunked' or "
-                "'monolithic') under a mesh")
+            from repro.launch.sharding import kernel_partition_plan
+            kernel_partition_plan(cfg, serve)
         self.mesh = make_serving_mesh(serve.mesh_shape)
         self.mesh_devices = self.mesh.devices.size if self.mesh else 1
-        pool_shardings = None
+        pool_shardings = gather_shardings = None
+        self._pool_pad = 0
         if self.mesh is not None:
             from functools import partial as _partial
 
@@ -247,14 +258,24 @@ class Engine:
                                      jax.random.PRNGKey(0))
             self._pspecs = self.rules.params(pshapes)
             params = jax.device_put(params, self.rules.named(self._pspecs))
-            # ONE cache layout for the slot pool, every gathered sub-batch,
-            # and every fresh Refresh cache (data_parallel=False: slots
-            # replicate over data, the model axis shards within a slot) —
-            # batch-size-dependent specs would diverge from the pool layout
-            # and break the in_shardings contract on data > 1 meshes
+            # ONE cache layout for every *stream* — gathered sub-batches and
+            # fresh Refresh caches (data_parallel=False: only the model axis
+            # shards within a slot) — batch-size-dependent specs would
+            # diverge across stages and break the in_shardings contract.
+            # The slot POOL additionally shards its slot axis over the data
+            # axis (slot_data_parallel): each of the mesh_data replica
+            # streams stores its slots locally, so a (d, m) mesh holds d×
+            # the slots of one device pair. Pad the pool's slot count up so
+            # the axis always divides; writes scatter replicated caches into
+            # the sharded pool and gathers land back in the stream layout.
             self._cache_spec = self.rules.cache(serve.max_slots + 1, retain,
                                                 data_parallel=False)
-            pool_shardings = self.rules.named(self._cache_spec)
+            self._pool_pad = (-(serve.max_slots + 1)) % max(1, serve.mesh_data)
+            self._pool_spec = self.rules.cache(
+                serve.max_slots + 1 + self._pool_pad, retain,
+                data_parallel=False, slot_data_parallel=True)
+            pool_shardings = self.rules.named(self._pool_spec)
+            gather_shardings = self.rules.named(self._cache_spec)
             # serving activation-sharding policy: replicate the token streams
             # at stage boundaries (weights/heads/vocab carry the TP sharding)
             # and pin the head weight vocab-parallel at its point of use so
@@ -281,7 +302,9 @@ class Engine:
             Lmod.set_sharding_policy({})
         self.params = params
         self.scheduler = make_scheduler(serve)
-        self.pool = KVPool(serve.max_slots, shardings=pool_shardings)
+        self.pool = KVPool(serve.max_slots, shardings=pool_shardings,
+                           gather_shardings=gather_shardings,
+                           pad_slots=self._pool_pad)
         # robustness wiring: the scheduler drives the pool's take/free
         # generation ledger on admit/finish/preempt, and consumes the fault
         # plan's alloc-failure / mem-steal tokens at admission time
@@ -306,6 +329,13 @@ class Engine:
                 / max(1, weight_bytes_per_device(cfg, (1, serve.mesh_model))))
         else:
             self._tp_work_split = 1.0
+        # data-axis replica credit: the slot pool shards its slot axis over
+        # ``data`` (above), so a (d, m) mesh carries d independent replica
+        # streams of the serving state — the modeled clock credits the full
+        # d× on top of the actually-sharded TP fraction.
+        self._dp_work_split = (float(serve.mesh_data)
+                               if self.mesh is not None
+                               and serve.mesh_data > 1 else 1.0)
         # modality-frontend prefix rows per request (0 for text-only archs):
         # every Refresh geometry below spans frontend_len + text rows, and
         # block/reuse positions are offset by it (full-sequence coordinates).
@@ -333,6 +363,20 @@ class Engine:
         axis (1.0 ≤ split ≤ model-axis size; the modeled clock and the
         per-device token metrics both use it)."""
         return self._tp_work_split
+
+    @property
+    def work_split(self) -> float:
+        """Total modeled work division: the TP fraction × the data-axis
+        replica streams (slot pool sharded over ``data``)."""
+        return self._tp_work_split * self._dp_work_split
+
+    @property
+    def kernels_active(self) -> bool:
+        """True when the Pallas hot paths are live in this engine — under a
+        model axis > 1 they dispatch per-shard (shard_map), validated at
+        construction; there is no silent jnp fallback."""
+        return bool(self.serve.use_flash_kernel
+                    or self.serve.logit_mode == "fused")
 
     # ------------------------------------------------------------------
     # jitted step functions (cached per bucket size)
@@ -491,6 +535,14 @@ class Engine:
         lazily — only the largest shape per stage is guaranteed AOT.
         Returns the compile wall-time so harnesses can report it."""
         t0 = time.perf_counter()
+        # warm under the same mesh context the dispatch path uses: the
+        # Pallas wrappers consult the active mesh at trace time to
+        # shard_map themselves per model shard
+        with self._mesh_ctx():
+            self._warmup_compile()
+        return time.perf_counter() - t0
+
+    def _warmup_compile(self) -> None:
         S, Sb = self.serve.max_seq_len, self.serve.block_size
         F = self._fe_len
         r_eff = self.serve.refresh_slots
@@ -592,7 +644,6 @@ class Engine:
                 if n >= _bucket(max_logits, lo=Sb):
                     break
                 n *= 2
-        return time.perf_counter() - t0
 
     def submit(self, prompt: np.ndarray, gen_len: int, arrival: float = 0.0,
                rid: Optional[int] = None,
@@ -752,11 +803,21 @@ class Engine:
             flops += 4.0 * tokens * kv_len * cfg.n_heads * dh \
                 * cfg.n_layers
         if kind == "decode":
-            flops = 2.0 * cfg.d_model * cfg.vocab_size * tokens
-        # only the model (TP) axis splits real work — and only the sharded
-        # fraction of it (_tp_work_split: 1.0 when nothing divides; the data
-        # axis carries no serving parallelism and must not fake a speedup)
-        self.vtime += self.device.call_cost(flops, self._tp_work_split)
+            # the fused Pallas argmax tile-skips all-pad rows (the validity
+            # mask threaded into the kernel), so it pays real rows; the
+            # chunked/monolithic jnp matmul computes every bucketed row of
+            # its [N, V] chunk and is billed for the rectangle — the decode
+            # half of the modeled-clock gap the kernels close
+            rows = tokens if self.serve.logit_mode == "fused" \
+                else exec_tokens
+            flops = 2.0 * cfg.d_model * cfg.vocab_size * rows
+        # the model (TP) axis splits real work by its actually-sharded
+        # fraction (_tp_work_split: 1.0 when nothing divides); the data axis
+        # multiplies in its replica streams only when the slot pool really
+        # shards over it (_dp_work_split — 1.0 on a data axis of 1, so a
+        # replicating mesh can never fake a speedup)
+        self.vtime += self.device.call_cost(
+            flops, self._tp_work_split * self._dp_work_split)
 
     # ------------------------------------------------------------------
     # one engine iteration
@@ -812,11 +873,18 @@ class Engine:
                 chunk = list(seg.requests)
                 t_real = seg.total_tokens
                 bh, exec_tokens = self._run_refresh_packed(seg)
-                # packed attention pays Σ Sᵢ²: effective kv length is the
-                # token-weighted mean segment length (frontend prefix
-                # included), not max_seq_len
-                kv_len = sum(r.refresh_len ** 2
-                             for r in chunk) // max(t_real, 1)
+                # packed attention cost: the Pallas varlen kernel skips
+                # non-intersecting segment tiles, paying Σ Sᵢ² — effective
+                # kv length is the token-weighted mean segment length
+                # (frontend prefix included). The jnp masked-stream fallback
+                # really computes the full [T, T] rectangle and is billed
+                # for it — this is the modeled-clock gap the flash kernels
+                # close on the packed Refresh stream.
+                if self.ctx.use_flash_kernel:
+                    kv_len = sum(r.refresh_len ** 2
+                                 for r in chunk) // max(t_real, 1)
+                else:
+                    kv_len = exec_tokens
                 hidden_rows.append(bh)
                 decoded.extend(chunk)
                 self.stats.refresh_steps += len(chunk)
@@ -913,8 +981,18 @@ class Engine:
         return True
 
     # ------------------------------------------------------------------
+    def _mesh_ctx(self):
+        """Activate the serving mesh around a stage trace: the Pallas
+        wrappers (``kernels.ops``) consult ``jax_compat.get_active_mesh()``
+        at trace time to shard_map themselves over the model axis. A no-op
+        (null context) without a mesh — the no-mesh path stays untouched."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return JC.use_mesh(self.mesh)
+
     def _dispatch(self, stage: str, thunk):
-        """Run one jitted stage call under the fault-injection harness.
+        """Run one jitted stage call under the fault-injection harness,
+        inside the serving-mesh context (see :meth:`_mesh_ctx`).
 
         An injected (or real) :class:`FaultError` is retried with
         exponential backoff — charged to the modeled clock, slept on wall —
@@ -922,7 +1000,8 @@ class Engine:
         propagates as permanent. Without a fault plan this is a plain
         call (zero overhead on the no-faults path)."""
         if self.faults is None:
-            return thunk()
+            with self._mesh_ctx():
+                return thunk()
         attempt = 0
         while True:
             attempt += 1
@@ -931,7 +1010,8 @@ class Engine:
                     raise FaultError(
                         f"injected {stage} dispatch fault "
                         f"(iter {self._iter}, attempt {attempt})")
-                return thunk()
+                with self._mesh_ctx():
+                    return thunk()
             except FaultError:
                 if attempt >= self.serve.fault_retries:
                     raise

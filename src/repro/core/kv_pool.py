@@ -9,11 +9,14 @@ slot slices for the scheduled sub-batch. The cache content is family-specific
 
 Mesh serving: the engine passes the pool a ``NamedSharding`` pytree built
 from ``launch.sharding.Rules.cache`` (KV heads over the ``model`` axis when
-divisible, retained-length fallback otherwise). The pool then allocates its
-backing pytree sharded and pins the scatter's output layout with
-``out_shardings`` so repeated writes can never drift the pool off its
-planned placement — per-device pool bytes are exactly what ``plan_memory``
-billed. Without shardings (no mesh) nothing changes.
+divisible, retained-length fallback otherwise; the slot axis over ``data``
+so each replica stream stores its slots locally — the engine pads the slot
+count so the axis divides). The pool then allocates its backing pytree
+sharded and pins the scatter's output layout with ``out_shardings`` so
+repeated writes can never drift the pool off its planned placement —
+per-device pool bytes are exactly what ``plan_memory`` billed; gathers land
+in the data-replicated stream layout via ``gather_shardings``. Without
+shardings (no mesh) nothing changes.
 
 Slot lifecycle (robustness layer): :meth:`take` / :meth:`free` keep an
 explicit free-set plus a per-slot **generation counter**. ``free`` bumps the
@@ -32,13 +35,24 @@ import numpy as np
 
 
 class KVPool:
-    def __init__(self, max_slots: int, shardings=None):
+    def __init__(self, max_slots: int, shardings=None,
+                 gather_shardings=None, pad_slots: int = 0):
         """``shardings``: optional NamedSharding pytree matching the cache
         structure (leading slot axis included) — resolved lazily against the
-        first Refresh output in :meth:`ensure`."""
+        first Refresh output in :meth:`ensure`.
+
+        ``gather_shardings``: optional NamedSharding pytree pinning the
+        layout of gathered sub-batches (the engine's data-replicated stream
+        layout — gathers cross from the slot-sharded pool into it).
+
+        ``pad_slots``: extra never-allocated tail slots so a data-sharded
+        pool's slot axis always divides the data axis; they are invisible to
+        the slot ledger and never written."""
         self.max_slots = max_slots
         self.scratch_slot = max_slots
+        self.pad_slots = pad_slots
         self.shardings = shardings
+        self.gather_shardings = gather_shardings
         self.cache = None          # device pytree, slot axis = 1
         self._write = None
         self._gather = None
@@ -80,7 +94,7 @@ class KVPool:
         """Lazily allocate the pool from the first Refresh output's shapes."""
         if self.cache is not None:
             return
-        n = self.max_slots + 1
+        n = self.max_slots + 1 + self.pad_slots
 
         def alloc(c, ns=None):
             shape = (c.shape[0], n) + tuple(c.shape[2:])
@@ -107,8 +121,16 @@ class KVPool:
                 lambda pool, cache, slots: jax.tree.map(
                     lambda P, c: P.at[:, slots].set(c), pool, cache),
                 donate_argnums=0, out_shardings=self.shardings)
-        self._gather = jax.jit(
-            lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool))
+        if self.gather_shardings is None:
+            self._gather = jax.jit(
+                lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool))
+        else:
+            # gathered sub-batches feed the data-replicated engine streams:
+            # pin that layout so the slot-sharded pool's gather always lands
+            # in the stage jits' expected placement
+            self._gather = jax.jit(
+                lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool),
+                out_shardings=self.gather_shardings)
 
     def nbytes(self) -> int:
         if self.cache is None:

@@ -3,6 +3,16 @@
 ``interpret`` defaults to True on CPU (the validation mode required here) and
 False on real TPU backends. Each wrapper adapts the model-layer calling
 convention ([B, S, H, dh] tensors) to the kernels' head-major packed layout.
+
+Mesh dispatch: every serving hot path consults
+``jax_compat.get_active_mesh()`` at trace time (the engine activates its mesh
+around each stage dispatch) and, on a model axis > 1, shard_maps the kernel
+per shard — varlen attention over its local query/KV heads, the segment-reset
+SSD scan over its local state heads, the fused logit argmax over its local
+vocab shard with a cross-shard (max, index, logsumexp) reduce. Indivisible
+head/vocab counts raise at trace time instead of silently falling back; the
+engine pre-validates the same law (``launch.sharding.kernel_partition_plan``)
+so serving configs fail at construction, not mid-trace.
 """
 from __future__ import annotations
 
@@ -10,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import packed_flash_attention_call
@@ -19,6 +30,31 @@ from repro.kernels.select_pack import head_score_call, head_score_varlen_call
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _mesh_model():
+    """(mesh, model-axis size) of the enclosing ``use_mesh`` scope.
+
+    (None, 1) when no mesh — or no ``model`` axis — is active at trace time,
+    which keeps the no-mesh path byte-for-byte the single-device dispatch.
+    A 1-sized model axis also dispatches locally (bit-identical 1×1 law)."""
+    from repro.jax_compat import get_active_mesh
+    mesh = get_active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None, 1
+    m = mesh.shape["model"]
+    return (mesh, m) if m > 1 else (None, 1)
+
+
+def _require_divisible(kernel: str, **dims) -> None:
+    """Fail-loud divisibility law for per-shard kernel dispatch (mirrors
+    ``launch.sharding.kernel_partition_plan``): never silently fall back."""
+    m = dims.pop("m")
+    bad = [f"{k}={v}" for k, v in dims.items() if v % m]
+    if bad:
+        raise ValueError(
+            f"{kernel} cannot partition over the {m}-way model axis: "
+            f"{', '.join(bad)} must divide it exactly")
 
 
 def _pad_to(x, mult, axis):
@@ -44,27 +80,74 @@ def fused_logit_argmax(h, w, *, softcap: float = 0.0, vocab_tile: int = 512,
     hp, _ = _pad_to(h, t_tile, 0)
     vld = jnp.ones((T,), bool) if valid is None else valid
     vp, _ = _pad_to(vld, t_tile, 0)
-    # vocab tile must divide V (all assigned vocabs are 8-divisible); zero
-    # padding would fabricate logit-0 columns, so fall back to ref instead.
-    vt = vocab_tile
-    while V % vt:
-        vt //= 2
-        if vt < 8:
-            wd = w if w_layout == "dv" else w.T
-            ids, conf = ref.fused_logit_argmax(h, wd, softcap=softcap)
-            if valid is not None:
-                ids = jnp.where(valid, ids, 0)
-                conf = jnp.where(valid, conf, 0.0)
-            return ids, conf
-    ids, m, s = fused_logit_argmax_call(
-        hp, w, vp, softcap=softcap, t_tile=t_tile, v_tile=vt,
-        interpret=_interpret(), w_layout=w_layout)
+    mesh, msize = _mesh_model()
+    if mesh is not None:
+        ids, m, s = _sharded_logit_argmax(
+            hp, w, vp, mesh, msize, V, softcap=softcap, t_tile=t_tile,
+            vocab_tile=vocab_tile, w_layout=w_layout)
+    else:
+        # vocab tile must divide V (all assigned vocabs are 8-divisible);
+        # zero padding would fabricate logit-0 columns, so fall back to ref.
+        vt = vocab_tile
+        while V % vt:
+            vt //= 2
+            if vt < 8:
+                wd = w if w_layout == "dv" else w.T
+                ids, conf = ref.fused_logit_argmax(h, wd, softcap=softcap)
+                if valid is not None:
+                    ids = jnp.where(valid, ids, 0)
+                    conf = jnp.where(valid, conf, 0.0)
+                return ids, conf
+        ids, m, s = fused_logit_argmax_call(
+            hp, w, vp, softcap=softcap, t_tile=t_tile, v_tile=vt,
+            interpret=_interpret(), w_layout=w_layout)
     conf = 1.0 / jnp.maximum(s, 1e-30)
     ids, conf = ids[:T], conf[:T]
     if valid is not None:
         ids = jnp.where(valid, ids, 0)
         conf = jnp.where(valid, conf, 0.0)
     return ids, conf
+
+
+def _sharded_logit_argmax(hp, w, vp, mesh, msize, V, *, softcap, t_tile,
+                          vocab_tile, w_layout):
+    """Vocab-sharded fused argmax: each model shard runs the Pallas kernel
+    over its local [T, V/m] vocab slice, then a cheap cross-shard reduce
+    merges (max, argmax-index, logsumexp) — pmax for the running max, pmin
+    over offset-shifted indices among max-achieving shards (preserving the
+    single-device lowest-index tie-break, since a lower shard id means a
+    lower global vocab offset), and a psum of the rescaled softmax sums."""
+    _require_divisible("fused logit argmax", m=msize, vocab_size=V)
+    v_loc = V // msize
+    vt = min(vocab_tile, v_loc)
+    while v_loc % vt:
+        vt //= 2
+        if vt < 8:
+            raise ValueError(
+                "fused logit argmax: no >=8-column vocab tile divides the "
+                f"per-shard vocab {v_loc} (vocab {V} over {msize} shards)")
+    from repro.jax_compat import shard_map as _shard_map
+    w_spec = P(None, "model") if w_layout == "dv" else P("model", None)
+    interp = _interpret()
+
+    def local(hp_l, w_l, vp_l):
+        ids, m, s = fused_logit_argmax_call(
+            hp_l, w_l, vp_l, softcap=softcap, t_tile=t_tile, v_tile=vt,
+            interpret=interp, w_layout=w_layout)
+        off = jax.lax.axis_index("model").astype(jnp.int32) * v_loc
+        gids = ids.astype(jnp.int32) + off
+        m_max = jax.lax.pmax(m, "model")
+        big = jnp.int32(jnp.iinfo(jnp.int32).max)
+        gid = jax.lax.pmin(jnp.where(m == m_max, gids, big), "model")
+        s_g = jax.lax.psum(s * jnp.exp(m - m_max), "model")
+        return gid, m_max, s_g
+
+    return _shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None), w_spec, P(None)),
+        out_specs=(P(None), P(None), P(None)),
+        check_vma=False,
+    )(hp, w, vp)
 
 
 def packed_flash_attention_stats(qr, k_all, v_all, ok, *, softcap: float = 0.0,
@@ -207,11 +290,6 @@ def flash_varlen_attention(q, k, v, *, seg_ids, positions, kv_valid,
 
     T, H, dh = q.shape
     K = k.shape[1]
-    G = H // K
-    qr = (q.reshape(T, K, G, dh).transpose(1, 0, 2, 3)
-          .reshape(K, T * G, dh))
-    kh = k.transpose(1, 0, 2)
-    vh = v.transpose(1, 0, 2)
     qt = min(q_tile, T)
     while T % qt:
         qt //= 2
@@ -219,13 +297,37 @@ def flash_varlen_attention(q, k, v, *, seg_ids, positions, kv_valid,
     while T % kt:
         kt //= 2
     loc = jnp.asarray(is_local, bool).reshape(1)
-    out = flash_varlen_call(
-        qr, kh, vh, positions.astype(jnp.int32), seg_ids.astype(jnp.int32),
-        kv_valid, loc, softcap=softcap, causal=causal, window=window,
-        q_tile=qt, kv_tile=kt, interpret=_interpret())
-    out = (out.reshape(K, T, G, dh).transpose(1, 0, 2, 3)
-           .reshape(T, H, dh))
-    return out.astype(q.dtype)
+    interp = _interpret()
+
+    def local_call(q_l, k_l, v_l, pos, seg, kvv, lc):
+        # per-shard geometry: contiguous H/m query-head blocks align with
+        # K/m KV-head blocks (both divide), so GQA grouping is shard-local
+        H_l, K_l = q_l.shape[1], k_l.shape[1]
+        G_l = H_l // K_l
+        qr = (q_l.reshape(T, K_l, G_l, dh).transpose(1, 0, 2, 3)
+              .reshape(K_l, T * G_l, dh))
+        out = flash_varlen_call(
+            qr, k_l.transpose(1, 0, 2), v_l.transpose(1, 0, 2),
+            pos.astype(jnp.int32), seg.astype(jnp.int32), kvv, lc,
+            softcap=softcap, causal=causal, window=window,
+            q_tile=qt, kv_tile=kt, interpret=interp)
+        out = (out.reshape(K_l, T, G_l, dh).transpose(1, 0, 2, 3)
+               .reshape(T, H_l, dh))
+        return out.astype(q_l.dtype)
+
+    mesh, msize = _mesh_model()
+    if mesh is None:
+        return local_call(q, k, v, positions, seg_ids, kv_valid, loc)
+    _require_divisible("varlen flash attention", m=msize, n_heads=H,
+                       n_kv_heads=K)
+    from repro.jax_compat import shard_map as _shard_map
+    h_spec = P(None, "model", None)
+    return _shard_map(
+        local_call, mesh=mesh,
+        in_specs=(h_spec, h_spec, h_spec, P(None), P(None), P(None), P(None)),
+        out_specs=h_spec,
+        check_vma=False,
+    )(q, k, v, positions, seg_ids, kv_valid, loc)
 
 
 def flash_varlen_cross_attention(q, k, v, *, q_seg, q_pos, kv_seg, kv_pos,
@@ -245,9 +347,6 @@ def flash_varlen_cross_attention(q, k, v, *, q_seg, q_pos, kv_seg, kv_pos,
 
     Tq, H, dh = q.shape
     K, Tkv = k.shape[0], k.shape[1]
-    G = H // K
-    qr = (q.reshape(Tq, K, G, dh).transpose(1, 0, 2, 3)
-          .reshape(K, Tq * G, dh))
     qt = min(q_tile, Tq)
     while Tq % qt:
         qt //= 2
@@ -255,14 +354,40 @@ def flash_varlen_cross_attention(q, k, v, *, q_seg, q_pos, kv_seg, kv_pos,
     while Tkv % kt:
         kt //= 2
     loc = jnp.asarray(is_local, bool).reshape(1)
-    out = flash_varlen_cross_call(
-        qr, k, v, q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32),
-        q_seg.astype(jnp.int32), kv_seg.astype(jnp.int32), kv_valid, loc,
-        softcap=softcap, causal=causal, window=window, q_tile=qt, kv_tile=kt,
-        interpret=_interpret())
-    out = (out.reshape(K, Tq, G, dh).transpose(1, 0, 2, 3)
-           .reshape(Tq, H, dh))
-    return out.astype(q.dtype)
+    interp = _interpret()
+
+    def local_call(q_l, k_l, v_l, qp, kvp, qs, kvs, kvv, lc):
+        H_l, K_l = q_l.shape[1], k_l.shape[0]
+        G_l = H_l // K_l
+        qr = (q_l.reshape(Tq, K_l, G_l, dh).transpose(1, 0, 2, 3)
+              .reshape(K_l, Tq * G_l, dh))
+        out = flash_varlen_cross_call(
+            qr, k_l, v_l, qp.astype(jnp.int32), kvp.astype(jnp.int32),
+            qs.astype(jnp.int32), kvs.astype(jnp.int32), kvv, lc,
+            softcap=softcap, causal=causal, window=window,
+            q_tile=qt, kv_tile=kt, interpret=interp)
+        out = (out.reshape(K_l, Tq, G_l, dh).transpose(1, 0, 2, 3)
+               .reshape(Tq, H_l, dh))
+        return out.astype(q_l.dtype)
+
+    mesh, msize = _mesh_model()
+    if mesh is None:
+        return local_call(q, k, v, q_pos, kv_pos, q_seg, kv_seg,
+                          kv_valid, loc)
+    # the head-major KV stream is already head-sharded ([K, Tkv, dh] built
+    # from the Rules.cache head-sharded pool) — each shard consumes its
+    # local KV heads directly, no all-gather of KV
+    _require_divisible("varlen cross attention", m=msize, n_heads=H,
+                       n_kv_heads=K)
+    from repro.jax_compat import shard_map as _shard_map
+    return _shard_map(
+        local_call, mesh=mesh,
+        in_specs=(P(None, "model", None), P("model", None, None),
+                  P("model", None, None), P(None), P("model", None),
+                  P(None), P(None), P("model", None), P(None)),
+        out_specs=P(None, "model", None),
+        check_vma=False,
+    )(q, k, v, q_pos, kv_pos, q_seg, kv_seg, kv_valid, loc)
 
 
 def ssm_segment_scan(xh, dt, A, Bm, Cm, reset, cap_rows, *, chunk: int = 64):
@@ -278,17 +403,38 @@ def ssm_segment_scan(xh, dt, A, Bm, Cm, reset, cap_rows, *, chunk: int = 64):
     """
     from repro.kernels.ssm_scan import ssm_segment_scan_call
 
-    T = xh.shape[0]
+    T, H = xh.shape[0], xh.shape[1]
     f32 = jnp.float32
     ct = min(chunk, T)
     while T % ct:
         ct //= 2
     dtf = dt.astype(f32)
-    y, cap, _ = ssm_segment_scan_call(
-        xh.astype(f32) * dtf[..., None], dtf * A.astype(f32)[None, :],
-        Bm.astype(f32), Cm.astype(f32), reset.astype(f32),
-        cap_rows.astype(jnp.int32), chunk=ct, interpret=_interpret())
-    return y, cap
+    xdt = xh.astype(f32) * dtf[..., None]
+    dA = dtf * A.astype(f32)[None, :]
+    interp = _interpret()
+
+    def local_call(xdt_l, dA_l, Bm_l, Cm_l, reset_l, cap_l):
+        y, cap, _ = ssm_segment_scan_call(
+            xdt_l, dA_l, Bm_l, Cm_l, reset_l, cap_l, chunk=ct,
+            interpret=interp)
+        return y, cap
+
+    mesh, msize = _mesh_model()
+    if mesh is None:
+        return local_call(xdt, dA, Bm.astype(f32), Cm.astype(f32),
+                          reset.astype(f32), cap_rows.astype(jnp.int32))
+    # shard the state-head axis; each shard scans and captures its local
+    # [R, H/m, P, N] states — matching the Rules.ssm_cache head-sharded pool
+    _require_divisible("varlen SSD scan", m=msize, ssm_heads=H)
+    from repro.jax_compat import shard_map as _shard_map
+    return _shard_map(
+        local_call, mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, "model"), P(None, None),
+                  P(None, None), P(None), P(None)),
+        out_specs=(P(None, "model", None), P(None, "model", None, None)),
+        check_vma=False,
+    )(xdt, dA, Bm.astype(f32), Cm.astype(f32), reset.astype(f32),
+      cap_rows.astype(jnp.int32))
 
 
 def head_score(q_block, k_full, *, s_tile: int = 512):
@@ -312,12 +458,30 @@ def head_score_varlen(q_block, k_flat, seg_ids, *, s_tile: int = 512):
     Tile-skipping varlen side of paper C3 eq.(6) — no padded K gather."""
     R, Sb, H, dh = q_block.shape
     T, K = k_flat.shape[0], k_flat.shape[1]
-    G = H // K
-    qr = (q_block.reshape(R, Sb, K, G, dh).transpose(0, 2, 1, 3, 4)
-          .reshape(R, K, Sb * G, dh))
-    kr = k_flat.transpose(1, 0, 2)
     st = min(s_tile, T)
     while T % st:
         st //= 2
-    return head_score_varlen_call(qr, kr, seg_ids.astype(jnp.int32),
-                                  s_tile=st, interpret=_interpret())
+    interp = _interpret()
+
+    def local_call(q_l, k_l, seg):
+        H_l, K_l = q_l.shape[2], k_l.shape[1]
+        G_l = H_l // K_l
+        qr = (q_l.reshape(R, Sb, K_l, G_l, dh).transpose(0, 2, 1, 3, 4)
+              .reshape(R, K_l, Sb * G_l, dh))
+        return head_score_varlen_call(qr, k_l.transpose(1, 0, 2),
+                                      seg.astype(jnp.int32), s_tile=st,
+                                      interpret=interp)
+
+    mesh, msize = _mesh_model()
+    if mesh is None:
+        return local_call(q_block, k_flat, seg_ids)
+    _require_divisible("varlen head-score", m=msize, n_heads=H,
+                       n_kv_heads=K)
+    from repro.jax_compat import shard_map as _shard_map
+    return _shard_map(
+        local_call, mesh=mesh,
+        in_specs=(P(None, None, "model", None), P(None, "model", None),
+                  P(None)),
+        out_specs=P(None, "model", None),
+        check_vma=False,
+    )(q_block, k_flat, seg_ids)

@@ -42,7 +42,8 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
               queue_cap: int = 0, queue_policy: str = "reject",
               deadline_slack: float = float("inf"),
               preempt_starvation_s: float = 0.0,
-              fault_seed: Optional[int] = None) -> dict:
+              fault_seed: Optional[int] = None,
+              kernels: Optional[bool] = None) -> dict:
     import dataclasses
     cfg = get_config(arch)
     full_cfg = cfg
@@ -57,6 +58,15 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         queue_cap=queue_cap, queue_policy=queue_policy,
         preempt_starvation_s=preempt_starvation_s)
     serve = system_profiles(base)[system]
+    if kernels:
+        # Pallas hot paths on top of the system profile (shard_mapped per
+        # model shard under a mesh — validated at engine construction, no
+        # silent fallback); kernels=False pins the jnp fallback paths
+        serve = dataclasses.replace(serve, use_flash_kernel=True,
+                                    logit_mode="fused")
+    elif kernels is not None:
+        serve = dataclasses.replace(serve, use_flash_kernel=False,
+                                    logit_mode="chunked")
     if size_by_profiler:
         # Offline profiler (§4.2) at FULL-model geometry and paper Table 3
         # settings decides each system's concurrency: monolithic logit
@@ -138,15 +148,19 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         max_slots=serve.max_slots,
         mesh_shape=list(serve.mesh_shape) if serve.mesh_shape else None,
         mesh_devices=eng.mesh_devices,
-        # per-device executed tokens under the engine's ACTUAL TP work
-        # split (1.0 when no dim divides — an indivisible or data-only mesh
-        # must not deflate this metric; no serving DP yet)
+        # True when the Pallas hot paths served this run (under a mesh they
+        # dispatched per-shard — the engine validates at construction and
+        # never silently falls back to the jnp paths)
+        kernels_active=eng.kernels_active,
+        # per-device executed tokens under the engine's ACTUAL work split:
+        # the sharded TP fraction (1.0 when no dim divides — an indivisible
+        # mesh must not deflate this metric) × the data-axis replica streams
         refresh_tokens_exec_per_device=stats.refresh_tokens_exec
-        / eng.tp_work_split,
+        / eng.work_split,
         reuse_tokens_exec_per_device=stats.reuse_tokens_exec
-        / eng.tp_work_split,
+        / eng.work_split,
         logit_tokens_exec_per_device=stats.logit_tokens_exec
-        / eng.tp_work_split,
+        / eng.work_split,
     )
     return out
 
@@ -179,6 +193,10 @@ def main():
                          "preempt-and-requeue (0 = disabled)")
     ap.add_argument("--faults", type=int, default=None, metavar="SEED",
                     help="run under a seeded FaultPlan (chaos mode)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="force the Pallas hot paths (use_flash_kernel + "
+                         "logit_mode=fused) on top of the system profile; "
+                         "shard_mapped per model shard under a mesh")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mesh == "env":
@@ -193,7 +211,8 @@ def main():
                     queue_policy=args.queue_policy,
                     deadline_slack=args.deadline,
                     preempt_starvation_s=args.preempt_starvation,
-                    fault_seed=args.faults)
+                    fault_seed=args.faults,
+                    kernels=True if args.kernels else None)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

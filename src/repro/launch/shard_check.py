@@ -60,7 +60,8 @@ def serve_trace(cfg, serve, n: int, seed: int, warmup: bool):
 
 
 def check(arch: str, mesh_shape, n: int = 5, seed: int = 0,
-          varlen: bool = True, warmup: bool = False) -> dict:
+          varlen: bool = True, warmup: bool = False,
+          kernels: bool = False) -> dict:
     import jax
     cfg = reduced(ARCHS[arch])
     serve = ServeConfig(
@@ -68,6 +69,12 @@ def check(arch: str, mesh_shape, n: int = 5, seed: int = 0,
         steps_per_block=8, max_seq_len=128, max_slots=8,
         max_refresh_per_iter=2, logit_mode="chunked",
         varlen_pack=varlen, token_bucket=64)
+    if kernels:
+        # Pallas hot paths on BOTH runs: the reference is the 1-device
+        # kernel run, so agreement proves the shard_mapped kernels (not a
+        # jnp fallback) reproduce it bit-for-bit on token ids
+        serve = dataclasses.replace(serve, use_flash_kernel=True,
+                                    logit_mode="fused")
     # reference FIRST: the sharding policy a mesh engine installs must not
     # retroactively touch the single-device anchor
     eng_ref, r_ref, st_ref = serve_trace(cfg, serve, n, seed, warmup=False)
@@ -75,7 +82,8 @@ def check(arch: str, mesh_shape, n: int = 5, seed: int = 0,
     eng, r_mesh, st_mesh = serve_trace(cfg, mesh_serve, n, seed,
                                        warmup=warmup)
     out = dict(arch=arch, varlen=varlen, mesh=list(mesh_shape),
-               mesh_devices=eng.mesh_devices, n=n, ok=True, diffs=[])
+               mesh_devices=eng.mesh_devices, n=n, kernels=kernels,
+               kernels_active=eng.kernels_active, ok=True, diffs=[])
     if eng.mesh_devices != int(np.prod(mesh_shape)):
         out["diffs"].append("mesh collapsed to "
                             f"{eng.mesh_devices} devices")
@@ -86,11 +94,16 @@ def check(arch: str, mesh_shape, n: int = 5, seed: int = 0,
         va, vb = getattr(st_ref, name), getattr(st_mesh, name)
         if va != vb:
             out["diffs"].append(f"stats.{name}: {va} != {vb}")
-    # captured caches: compare the full slot pools leaf-by-leaf
+    # captured caches: compare the slot pools leaf-by-leaf. A data-sharded
+    # candidate pool may carry padded tail slots (so its slot axis divides
+    # the data axis); they are never written — compare the common
+    # real+scratch slot range only.
     ref_pool = jax.device_get(eng_ref.pool.cache)
     mesh_pool = jax.device_get(eng.pool.cache)
+    ns = eng_ref.serve.max_slots + 1
     for i, (la, lb) in enumerate(zip(jax.tree.leaves(ref_pool),
                                      jax.tree.leaves(mesh_pool))):
+        la, lb = la[:, :ns], lb[:, :ns]
         if la.shape != lb.shape:
             out["diffs"].append(f"pool leaf {i} shape {la.shape}!={lb.shape}")
         elif not np.allclose(np.asarray(la, np.float32),
@@ -115,12 +128,17 @@ def main():
     ap.add_argument("--warmup", action="store_true",
                     help="AOT-warm the mesh engine first (audits sharded "
                          "warmup buckets too)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="Pallas hot paths on both runs (use_flash_kernel + "
+                         "logit_mode=fused): proves the shard_mapped "
+                         "kernels match the 1-device kernel run")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     mesh = (tuple(int(x) for x in args.mesh.split(","))
             if args.mesh else (parse_mesh_env() or (1, 2)))
     res = check(args.arch, mesh, n=args.n, seed=args.seed,
-                varlen=not args.padded, warmup=args.warmup)
+                varlen=not args.padded, warmup=args.warmup,
+                kernels=args.kernels)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -26,6 +26,46 @@ from repro.configs.base import ModelConfig
 from repro.launch.mesh import axis_size, data_axes
 
 
+def kernel_partition_plan(cfg: ModelConfig, serve) -> dict:
+    """Per-shard partition plan for the Pallas hot paths on a model axis.
+
+    Returns ``{dim_name: shard_count}`` for every kernel dimension the serve
+    config enables — varlen attention shards query AND KV heads, the SSD
+    scan shards state heads, the fused argmax shards the vocab — under
+    ``serve.mesh_model``-way tensor parallelism. Raises ValueError naming
+    every genuinely indivisible dimension. There is NO silent fallback: a
+    (heads, vocab) × mesh combination either dispatches per-shard or the
+    engine refuses to start (the kernel wrappers in ``kernels.ops`` enforce
+    the same law at trace time).
+
+    Pure arithmetic over the configs — no mesh or devices needed, so the
+    engine can validate before building its mesh."""
+    m = serve.mesh_model
+    plan, bad = {}, []
+
+    def need(dim: str, n: int) -> None:
+        if m > 1 and n % m:
+            bad.append(f"{dim}={n}")
+        else:
+            plan[dim] = m
+
+    if serve.use_flash_kernel:
+        if cfg.has_attention:
+            need("n_heads", cfg.n_heads)
+            need("n_kv_heads", cfg.n_kv_heads)
+        if cfg.ssm_state:
+            need("ssm_heads", cfg.ssm_heads)
+    if serve.logit_mode == "fused":
+        need("vocab_size", cfg.vocab_size)
+    if bad:
+        raise ValueError(
+            "Pallas kernel paths cannot partition over the "
+            f"{m}-way model axis: {', '.join(bad)} must divide it exactly "
+            "(use a divisible mesh, or the jnp paths — "
+            "use_flash_kernel=False / logit_mode='chunked')")
+    return plan
+
+
 class Rules:
     def __init__(self, cfg: ModelConfig, mesh, train: bool):
         self.cfg = cfg
@@ -137,20 +177,28 @@ class Rules:
         return tuple(kept)
 
     def packed_kv(self, batch: int, retain: int, *,
-                  data_parallel: bool = True) -> object:
+                  data_parallel: bool = True,
+                  slot_data_parallel: bool = False) -> object:
         """PackedKV specs: [L, B, K, R, dh] (+pos/valid [L, B, K, R]).
 
         ``data_parallel=False`` keeps the data axis out entirely (batch AND
-        retained length): the serving engine's slot pool uses this — one
-        layout for the pool, every gathered sub-batch, and every fresh
-        Refresh cache regardless of its batch size (slots replicate over
-        data; only the model axis shards within a slot), which is exactly
-        how ``plan_memory`` bills it."""
+        retained length): the serving engine's *streams* use this — every
+        gathered sub-batch and every fresh Refresh cache regardless of its
+        batch size (only the model axis shards within a slot).
+
+        ``slot_data_parallel=True`` (with ``data_parallel=False``) addition-
+        ally shards the SLOT axis over data — the engine's pool layout: a
+        (d, m) mesh stores each data replica's slots locally, so pool bytes
+        per device drop 1/d and ``plan_memory`` bills d replica streams.
+        The engine pads the pool's slot count up to a data-axis multiple so
+        the division is always exact."""
         from repro.models.sparse_select import PackedKV
         cfg = self.cfg
         dpn = axis_size(self.mesh, self.dp)
         if not data_parallel:
-            b_ax, seq_axes = None, ()
+            seq_axes = ()
+            b_ax = self.dp if (slot_data_parallel and batch % dpn == 0
+                               and batch >= dpn) else None
         elif batch % dpn == 0 and batch >= dpn:
             b_ax, seq_axes = self.dp, ()
         else:
@@ -165,32 +213,40 @@ class Rules:
         meta = P(None, b_ax, k_ax, r_ax)
         return PackedKV(k=kv, v=kv, pos=meta, valid=meta)
 
-    def ssm_cache(self, batch: int, *, data_parallel: bool = True) -> object:
+    def ssm_cache(self, batch: int, *, data_parallel: bool = True,
+                  slot_data_parallel: bool = False) -> object:
         from repro.models.ssm import SSMCache
         cfg = self.cfg
         dpn = axis_size(self.mesh, self.dp)
-        b_ax = self.dp if data_parallel and batch % dpn == 0 \
-            and batch >= dpn else None
+        b_ax = self.dp if (data_parallel or slot_data_parallel) \
+            and batch % dpn == 0 and batch >= dpn else None
         h_ax = self.div(cfg.ssm_heads)
         return SSMCache(state=P(None, b_ax, h_ax, None, None),
                         conv=P(None, b_ax, None, None))
 
     def hybrid_cache(self, batch: int, retain: int, *,
-                     data_parallel: bool = True) -> object:
+                     data_parallel: bool = True,
+                     slot_data_parallel: bool = False) -> object:
         from repro.models.hybrid import HybridCache
-        sc = self.ssm_cache(batch, data_parallel=data_parallel)
+        sc = self.ssm_cache(batch, data_parallel=data_parallel,
+                            slot_data_parallel=slot_data_parallel)
         return HybridCache(ssm_state=sc.state, conv=sc.conv,
-                           kv=self.packed_kv(batch, retain,
-                                             data_parallel=data_parallel))
+                           kv=self.packed_kv(
+                               batch, retain, data_parallel=data_parallel,
+                               slot_data_parallel=slot_data_parallel))
 
-    def cache(self, batch: int, retain: int, *, data_parallel: bool = True):
+    def cache(self, batch: int, retain: int, *, data_parallel: bool = True,
+              slot_data_parallel: bool = False):
         fam = self.cfg.family
         if fam == "ssm":
-            return self.ssm_cache(batch, data_parallel=data_parallel)
+            return self.ssm_cache(batch, data_parallel=data_parallel,
+                                  slot_data_parallel=slot_data_parallel)
         if fam == "hybrid":
             return self.hybrid_cache(batch, retain,
-                                     data_parallel=data_parallel)
-        return self.packed_kv(batch, retain, data_parallel=data_parallel)
+                                     data_parallel=data_parallel,
+                                     slot_data_parallel=slot_data_parallel)
+        return self.packed_kv(batch, retain, data_parallel=data_parallel,
+                              slot_data_parallel=slot_data_parallel)
 
     # ------------------------------------------------------------------
     def named(self, spec_tree):

@@ -9,7 +9,9 @@ Two anchors:
     ``launch/shard_check.py`` serves the same trace unsharded and on a
     ``REPRO_MESH=1,2`` mesh and demands matching committed token ids,
     captured slot-pool caches, and EngineStats token counters — for an
-    attention arch and an SSM arch.
+    attention arch and an SSM arch, with the jnp paths AND with the Pallas
+    hot paths shard_mapped per shard (``--kernels``), plus a ``(2, 1)``
+    data-axis mesh exercising the slot pool sharded over ``data``.
 """
 import dataclasses
 import json
@@ -69,16 +71,60 @@ def test_1x1_mesh_bit_identical_to_no_mesh():
         Lmod.set_sharding_policy(saved)
 
 
-def test_mesh_engine_rejects_unpartitionable_pallas_paths():
+def test_1x1_mesh_bit_identical_with_kernels():
+    """The bit-identity law must also hold with the Pallas hot paths live:
+    a 1-sized model axis skips shard_map entirely (kernels.ops dispatches
+    the identical local call), so 1×1-mesh == no-mesh byte for byte."""
+    import jax
+
+    from repro.models import layers as Lmod
+    saved = dict(Lmod._SHARDING_POLICY)
+    kbase = dataclasses.replace(BASE, use_flash_kernel=True,
+                                logit_mode="fused")
+    try:
+        eng0, r0, st0 = _serve(kbase)
+        eng1, r1, st1 = _serve(dataclasses.replace(kbase, mesh_shape=(1, 1)))
+        assert eng1.mesh_devices == 1
+        assert eng1.kernels_active
+        for a, b in zip(r0, r1):
+            assert np.array_equal(a.output_tokens(), b.output_tokens())
+        assert st0.committed_tokens == st1.committed_tokens
+        for la, lb in zip(jax.tree.leaves(jax.device_get(eng0.pool.cache)),
+                          jax.tree.leaves(jax.device_get(eng1.pool.cache))):
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+    finally:
+        Lmod.set_sharding_policy(saved)
+
+
+def test_mesh_engine_rejects_indivisible_kernel_dims():
+    """The old blanket mesh×kernels rejection is gone; what remains is the
+    fail-loud divisibility law — validated BEFORE the mesh is built, so no
+    3-device host is needed. Reduced llada has 4 heads / vocab 256: both
+    indivisible by a 3-way model axis."""
     cfg = reduced(ARCHS["llada-8b"])
-    with pytest.raises(ValueError, match="Pallas"):
-        Engine(cfg, dataclasses.replace(BASE, mesh_shape=(1, 2),
+    with pytest.raises(ValueError, match="Pallas.*divide"):
+        Engine(cfg, dataclasses.replace(BASE, mesh_shape=(1, 3),
+                                        use_flash_kernel=True,
                                         logit_mode="fused"))
+    # jnp paths on the same mesh shape carry no kernel divisibility law:
+    # construction must get past kernel validation to the mesh build
+    # (which then fails for lack of 3 devices — a different, device error)
+    with pytest.raises(Exception) as ei:
+        Engine(cfg, dataclasses.replace(BASE, mesh_shape=(1, 3)))
+    assert "Pallas" not in str(ei.value)
 
 
 @pytest.mark.parametrize("arch,extra", [
     ("llada-8b", ["--warmup"]),      # attention stream + sharded AOT warmup
     ("mamba2-130m", []),             # segment-reset SSD scan
+    # Pallas hot paths per-shard: head-sharded varlen attention + fused
+    # vocab-sharded argmax, SSD scan over state heads — vs the 1-device
+    # kernel run (token ids bit-identical)
+    ("llada-8b", ["--kernels"]),
+    ("mamba2-130m", ["--kernels"]),
+    # data-axis mesh: slot pool sharded over 'data' (padded slot axis),
+    # replica streams serve the same trace bit-identically
+    ("llada-8b", ["--kernels", "--mesh", "2,1"]),
 ])
 def test_shard_agreement_subprocess(arch, extra, tmp_path):
     out = tmp_path / "agree.json"

@@ -186,3 +186,65 @@ def test_plan_memory_no_mesh_equals_1x1_mesh():
                      24 << 30)
     assert (p0.weights_bytes, p0.slot_bytes, p0.max_slots) \
         == (p1.weights_bytes, p1.slot_bytes, p1.max_slots)
+
+
+def test_plan_memory_data_axis_replica_slots():
+    """The slot pool shards its slot axis over ``data``: a (2, m) mesh
+    carries 2 independent replica streams, so global slot capacity must be
+    >= 2x the (1, m) plan (per-device bytes are identical — the data axis
+    replicates weights at serve time)."""
+    from repro.core.budgeting import plan_memory
+    cfg = get_config("llada-8b")
+    base = ServeConfig(max_num_batched_tokens=4000, max_num_logits=2048,
+                       max_seq_len=2048, max_slots=1 << 20)
+    hbm = 48 << 30
+    p1 = plan_memory(cfg, dataclasses.replace(base, mesh_shape=(1, 2)), hbm)
+    p2 = plan_memory(cfg, dataclasses.replace(base, mesh_shape=(2, 2)), hbm)
+    assert p2.weights_bytes == p1.weights_bytes
+    assert p2.slot_bytes == p1.slot_bytes
+    assert p2.max_slots >= 2 * p1.max_slots, (p1.summary(), p2.summary())
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel partitioning law (kernels × TP; see kernels.ops)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(arch=st.sampled_from(FAMILY_ARCHS),
+       mesh_i=st.integers(0, len(MESHES) - 1),
+       n_heads=st.sampled_from((1, 2, 3, 4, 6, 8)),
+       kv_div=st.sampled_from((1, 2, 4)),
+       flash=st.booleans(),
+       fused=st.booleans())
+def test_kernel_partition_plan_never_silently_falls_back(
+        arch, mesh_i, n_heads, kv_div, flash, fused):
+    """Property: ANY (heads, vocab) × mesh combination with kernels enabled
+    either yields a full per-shard partition plan (every enabled kernel dim
+    divides the model axis) or raises the divisibility ValueError — there is
+    no middle ground where a kernel would silently run replicated."""
+    from repro.launch.sharding import kernel_partition_plan
+    kv = max(1, n_heads // kv_div)
+    if n_heads % kv:
+        kv = n_heads
+    cfg = reduced(ARCHS[arch], n_heads=n_heads, n_kv_heads=kv)
+    serve = ServeConfig(
+        mesh_shape=MESHES[mesh_i], use_flash_kernel=flash,
+        logit_mode="fused" if fused else "chunked")
+    m = serve.mesh_model
+    dims = {}
+    if flash:
+        if cfg.has_attention:
+            dims["n_heads"] = cfg.n_heads
+            dims["n_kv_heads"] = cfg.n_kv_heads
+        if cfg.ssm_state:
+            dims["ssm_heads"] = cfg.ssm_heads
+    if fused:
+        dims["vocab_size"] = cfg.vocab_size
+    divisible = all(v % m == 0 for v in dims.values())
+    if divisible:
+        plan = kernel_partition_plan(cfg, serve)
+        assert set(plan) == set(dims)
+        assert all(s == m for s in plan.values())
+    else:
+        with pytest.raises(ValueError, match="divide"):
+            kernel_partition_plan(cfg, serve)
