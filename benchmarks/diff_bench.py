@@ -1,0 +1,137 @@
+"""Benchmark-regression gate: diff committed BENCH_*.json against git.
+
+Every benchmark module records its results into a committed
+``BENCH_<area>.json`` (see ``benchmarks/run.py --record``). This tool
+compares the work-tree snapshots against the same file at a previous git
+revision (default ``HEAD~1``, i.e. "what this PR changes") and fails on any
+tracked metric regressing beyond the threshold:
+
+* keys containing ``tok_s`` / ``goodput`` / ``speedup``: higher is better —
+  regression = new < old × (1 − threshold);
+* keys containing ``p99`` / ``p50`` / ``latency`` / ``wall_time``: lower is
+  better — regression = new > old × (1 + threshold).
+
+Keys are matched recursively by dotted path; metrics present on only one
+side are reported but never fail (a new benchmark is not a regression).
+Baselines of zero are skipped (no meaningful ratio). Exit 0 = no regression
+(including "no previous revision has this file" on a fresh history).
+
+CI wiring (``.github/workflows/ci.yml`` Analysis gate)::
+
+    python benchmarks/diff_bench.py --base origin/main --threshold 0.10
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import subprocess
+import sys
+from typing import Dict, Iterator, Tuple
+
+HIGHER = ("tok_s", "goodput", "speedup")
+LOWER = ("p99", "p50", "latency", "wall_time")
+
+
+def _flatten(d: dict, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    for k, v in sorted(d.items()):
+        path = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            yield from _flatten(v, path)
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            yield path, float(v)
+
+
+def _tracked(path: str) -> str:
+    """'higher' | 'lower' | '' for untracked."""
+    leaf = path.rsplit(".", 1)[-1]
+    if any(t in leaf for t in HIGHER):
+        return "higher"
+    if any(t in leaf for t in LOWER):
+        return "lower"
+    return ""
+
+
+def _git_show(rev: str, path: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{rev}:{path}"], capture_output=True,
+            text=True, check=True).stdout
+    except subprocess.CalledProcessError:
+        return None        # file didn't exist at that revision
+    try:
+        return json.loads(blob)
+    except json.JSONDecodeError:
+        return None
+
+
+def diff_file(path: str, base: str, threshold: float) -> list:
+    """Returns a list of regression dicts for one BENCH file."""
+    old = _git_show(base, path)
+    if old is None:
+        print(f"{path}: no baseline at {base} (new file) — skipped")
+        return []
+    with open(path) as fh:
+        new = json.load(fh)
+    old_m = dict(_flatten(old))
+    new_m = dict(_flatten(new))
+    regressions = []
+    for key in sorted(set(old_m) & set(new_m)):
+        direction = _tracked(key)
+        if not direction or old_m[key] == 0:
+            continue
+        o, n = old_m[key], new_m[key]
+        ratio = n / o
+        bad = (direction == "higher" and ratio < 1 - threshold) or \
+              (direction == "lower" and ratio > 1 + threshold)
+        if bad:
+            regressions.append({
+                "file": path, "metric": key, "direction": direction,
+                "old": o, "new": n, "ratio": round(ratio, 4)})
+    only_old = sorted(k for k in old_m if k not in new_m and _tracked(k))
+    only_new = sorted(k for k in new_m if k not in old_m and _tracked(k))
+    if only_old:
+        print(f"{path}: {len(only_old)} tracked metric(s) dropped: "
+              f"{only_old[:5]}")
+    if only_new:
+        print(f"{path}: {len(only_new)} tracked metric(s) added")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base", default="HEAD~1",
+                    help="git revision holding the baseline (default HEAD~1)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="allowed relative regression (default 0.10 = 10%%)")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="explicit BENCH files (default: BENCH_*.json)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the regression report as JSON")
+    args = ap.parse_args(argv)
+    files = args.files if args.files else sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("no BENCH_*.json snapshots found — nothing to diff")
+        return 0
+    all_reg = []
+    for path in files:
+        all_reg.extend(diff_file(path, args.base, args.threshold))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"base": args.base, "threshold": args.threshold,
+                       "regressions": all_reg}, fh, indent=2)
+    if all_reg:
+        print(f"\n{len(all_reg)} regression(s) beyond "
+              f"{args.threshold:.0%} vs {args.base}:")
+        for r in all_reg:
+            arrow = "↓" if r["direction"] == "higher" else "↑"
+            print(f"  {r['file']}:{r['metric']}: {r['old']:.4g} -> "
+                  f"{r['new']:.4g} ({arrow} x{r['ratio']})")
+        return 1
+    print(f"no regressions beyond {args.threshold:.0%} vs {args.base} "
+          f"across {len(files)} snapshot(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Static invariant analyzer: AST lint rules, grid audit, retrace sentinel.
+
+Three layers, one CLI (``python -m repro.analysis``), run as a CI gate:
+
+1. **AST invariant linter** (:mod:`repro.analysis.lint` +
+   :mod:`repro.analysis.rules`): pluggable rules over ``src/repro`` that hold
+   the codebase to the serving-system honesty contract — the mesh/sharding
+   API flows only through ``repro.jax_compat``, no bare ``jax.jit``, host
+   syncs only at annotated points, and no silent kernel→jnp fallbacks.
+2. **Abstract-trace grid auditor** (:mod:`repro.analysis.trace_audit`):
+   ``jax.eval_shape``-sweeps every jitted engine stage over all registered
+   archs × serving mesh shapes, asserting each combo either traces with
+   ``kernel_partition_plan``-consistent shapes or raises the documented
+   divisibility error. No devices, CPU-fast.
+3. **Retrace sentinel** (:mod:`repro.analysis.retrace`): audits an Engine's
+   per-entry-point compile counters (``jax_compat.jit``/``jit_sharded``
+   trace counters surfaced in ``EngineStats``) against a zero-post-warmup
+   recompilation budget.
+
+See ``docs/analysis.md`` for the rule catalogue and allowlist policy.
+"""
+from repro.analysis.lint import Finding, LintReport, run_lint  # noqa: F401
+from repro.analysis.retrace import RetraceReport, check_engine  # noqa: F401
+from repro.analysis.trace_audit import AuditReport, run_grid_audit  # noqa: F401

@@ -1,0 +1,67 @@
+"""Retrace sentinel: the zero-post-warmup recompilation budget.
+
+Every jit entry point in the serving path compiles through
+``jax_compat.jit``/``jit_sharded`` with an ``entry=`` tag: the wrapped
+Python body runs exactly once per jit-cache miss, so incrementing a counter
+inside it counts XLA compilations with no reliance on version-fragile
+monitoring hooks. The Engine owns a per-instance counter (its stage jits +
+the pool scatter/gather) and snapshots it in ``EngineStats``:
+
+* ``compile_counts``   — per-entry totals (refresh/reuse/decode/pool_*),
+* ``compiles_warmup``  — the count at the end of ``Engine.warmup()``,
+* ``compiles_post_warmup`` — everything after; the budget this module
+  holds at **zero** for the padded path (whose warmup doubling loops cover
+  every pow2 bucket the runtime can request). The packed path warms only
+  worst-case buckets AOT, so its budget is the lazily-compiled sub-bucket
+  count — pass ``budget`` accordingly.
+
+``check_engine(engine)`` is the post-run audit; the CI test
+(``tests/test_analysis.py``) drives a full serve trace through it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class RetraceReport:
+    compile_counts: Dict[str, int] = field(default_factory=dict)
+    compiles_warmup: int = 0
+    compiles_post_warmup: int = 0
+    budget: int = 0
+    violations: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> dict:
+        return {"ok": self.ok, "compile_counts": self.compile_counts,
+                "compiles_warmup": self.compiles_warmup,
+                "compiles_post_warmup": self.compiles_post_warmup,
+                "budget": self.budget, "violations": self.violations}
+
+
+def check_engine(engine, budget: int = 0) -> RetraceReport:
+    """Audit an Engine's compile counters after a run.
+
+    ``budget`` is the number of post-warmup compilations tolerated (0 for
+    the padded path — its warmup covers every reachable bucket)."""
+    stats = engine.stats
+    report = RetraceReport(
+        compile_counts=dict(stats.compile_counts),
+        compiles_warmup=stats.compiles_warmup,
+        compiles_post_warmup=stats.compiles_post_warmup,
+        budget=budget)
+    if stats.compiles_warmup == 0 and sum(stats.compile_counts.values()):
+        report.violations.append(
+            "warmup snapshot missing: Engine.warmup() was never called, so "
+            "every compile is billed post-warmup")
+    if report.compiles_post_warmup > budget:
+        report.violations.append(
+            f"{report.compiles_post_warmup} post-warmup compilation(s) "
+            f"exceed the budget of {budget}: {report.compile_counts} "
+            "(a steady-state retrace — an unwarmed bucket or an unstable "
+            "jit cache key)")
+    return report

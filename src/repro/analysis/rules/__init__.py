@@ -1,0 +1,13 @@
+"""Rule registry. Adding a rule = subclass :class:`repro.analysis.lint.Rule`
+in a module here and list it in :data:`RULES` (docs/analysis.md walks
+through it)."""
+from repro.analysis.rules.bare_jit import BareJitRule
+from repro.analysis.rules.host_sync import HostSyncRule
+from repro.analysis.rules.mesh_api import MeshApiRule
+from repro.analysis.rules.silent_fallback import SilentFallbackRule
+
+RULES = [MeshApiRule, BareJitRule, HostSyncRule, SilentFallbackRule]
+
+
+def all_rules():
+    return [cls() for cls in RULES]

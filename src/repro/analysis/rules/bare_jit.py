@@ -1,0 +1,34 @@
+"""bare-jit: no bare ``jax.jit`` outside ``repro.jax_compat``.
+
+Every jit entry point compiles through ``jax_compat.jit`` /
+``jax_compat.jit_sharded`` so the retrace sentinel can count compilations
+(the wrapped Python body runs exactly once per jit-cache miss). A bare
+``jax.jit`` is an uncounted compile: invisible to ``EngineStats`` and to the
+zero-post-warmup budget the retrace test enforces.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Finding, Rule, _dotted
+
+
+class BareJitRule(Rule):
+    name = "bare-jit"
+    description = ("jax.jit only via jax_compat.jit/jit_sharded "
+                   "(compile-counted entry points)")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and _dotted(node) == "jax.jit":
+                yield self.finding(
+                    ctx, node,
+                    "bare `jax.jit` — route through repro.jax_compat.jit "
+                    "(or jit_sharded) so the compile is counted")
+            elif (isinstance(node, ast.ImportFrom) and node.module == "jax"
+                  and any(a.name == "jit" for a in node.names)):
+                yield self.finding(
+                    ctx, node,
+                    "`from jax import jit` — route through "
+                    "repro.jax_compat.jit so the compile is counted")

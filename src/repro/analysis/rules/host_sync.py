@@ -1,0 +1,61 @@
+"""host-sync: device→host transfers only at annotated sync points.
+
+The serving engine's throughput story depends on the dispatch loop staying
+async: exactly ONE host readback per iteration (the sampled ids/confidences,
+``core/engine.py`` — carries the ``# lint: allow(host-sync)`` pragma). Any
+other ``jax.device_get``/``block_until_ready``/``.item()`` — or a
+``float()``/``bool()`` coercion of a device value — inside library code is a
+hidden pipeline stall.
+
+Scope: launch/ (CLI harnesses print results — syncing is their job) and the
+analysis package itself are exempt by path; ``float()``/``bool()`` are only
+flagged on bare-name arguments in jax-importing modules (attribute reads and
+nested calls are overwhelmingly host-side config arithmetic).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Finding, Rule, _dotted
+
+_EXEMPT_PREFIXES = ("src/repro/launch/", "src/repro/analysis/")
+_SYNC_METHODS = ("item", "block_until_ready")
+_SYNC_FUNCS = ("jax.device_get", "jax.block_until_ready")
+
+
+class HostSyncRule(Rule):
+    name = "host-sync"
+    description = ("device→host syncs (.item, device_get, "
+                   "block_until_ready, float()/bool() coercion) only at "
+                   "annotated sync points")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.path.startswith(_EXEMPT_PREFIXES):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute):
+                dotted = _dotted(fn)
+                if dotted in _SYNC_FUNCS:
+                    yield self.finding(
+                        ctx, node,
+                        f"`{dotted}` is a host sync — annotate the single "
+                        "sync point with `# lint: allow(host-sync)` or keep "
+                        "the value on device")
+                    continue
+                if fn.attr in _SYNC_METHODS and dotted not in _SYNC_FUNCS:
+                    yield self.finding(
+                        ctx, node,
+                        f"`.{fn.attr}()` is a host sync — keep the value on "
+                        "device or annotate the sync point")
+            elif (isinstance(fn, ast.Name) and fn.id in ("float", "bool")
+                  and ctx.imports_jax and len(node.args) == 1
+                  and isinstance(node.args[0], ast.Name)):
+                yield self.finding(
+                    ctx, node,
+                    f"`{fn.id}({node.args[0].id})` coerces a (potential) "
+                    "device value to host — a hidden sync; annotate it or "
+                    "keep the arithmetic on device")

@@ -1,0 +1,52 @@
+"""mesh-api: the mesh/sharding API flows only through ``repro.jax_compat``.
+
+The shim (``use_mesh``/``get_active_mesh``/``shard_map``/``jit_sharded``/
+``named_shardings``/``P``) is the ONE doorway to jax's mesh machinery — it
+absorbs the 0.4.x→0.5.x API churn and hosts the retrace counters. A module
+that imports ``jax.sharding`` (or grabs ``jax.make_mesh``/``shard_map``)
+directly bypasses both; it must either route through the shim or sit on the
+allowlist with a justification (the mesh factory, the AOT dryrun harness).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Finding, Rule, _dotted
+
+_BANNED_MODULES = ("jax.sharding", "jax.experimental.shard_map",
+                   "jax.experimental.mesh_utils")
+_BANNED_ATTRS = ("jax.make_mesh", "jax.set_mesh")
+
+
+class MeshApiRule(Rule):
+    name = "mesh-api"
+    description = ("mesh/sharding API (jax.sharding, shard_map, make_mesh) "
+                   "only via repro.jax_compat")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                if any(node.module == m or node.module.startswith(m + ".")
+                       for m in _BANNED_MODULES):
+                    yield self.finding(
+                        ctx, node,
+                        f"direct `from {node.module} import ...` — use the "
+                        "repro.jax_compat re-exports (e.g. `P`, `shard_map`)")
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if any(alias.name == m or alias.name.startswith(m + ".")
+                           for m in _BANNED_MODULES):
+                        yield self.finding(
+                            ctx, node,
+                            f"direct `import {alias.name}` — use "
+                            "repro.jax_compat")
+            elif isinstance(node, ast.Attribute):
+                dotted = _dotted(node)
+                if dotted is None:
+                    continue
+                if any(dotted == m or dotted.startswith(m + ".")
+                       for m in _BANNED_MODULES) or dotted in _BANNED_ATTRS:
+                    yield self.finding(
+                        ctx, node,
+                        f"direct `{dotted}` — use repro.jax_compat")

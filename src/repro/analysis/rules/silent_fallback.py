@@ -1,0 +1,72 @@
+"""silent-fallback: every kernel-dispatch branch raises or is billed.
+
+The honesty contract (ROADMAP invariants): a config that *asks* for the
+Pallas hot paths (``use_flash_kernel``/``use_flash_refresh``/``use_kernel``/
+``logit_mode``) either runs them, or the system raises — and whichever path
+runs is billed as itself in the modeled clock. A branch on one of these
+flags whose enclosing function neither raises nor touches a billing marker
+(``_charge``, ``_require_divisible``, ``kernel_partition_plan``) is the
+anatomy of a silent fallback: the flag flips behaviour with nothing keeping
+the books straight.
+
+Only ``if`` *statements* are examined — a ternary selecting a value is data
+selection, not an execution-path fork.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Finding, Rule
+
+FLAGS = ("use_flash_kernel", "use_flash_refresh", "use_kernel", "logit_mode")
+MARKERS = ("_charge", "_require_divisible", "kernel_partition_plan")
+
+
+def _flags_in(test: ast.AST):
+    hits = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Attribute) and n.attr in FLAGS:
+            hits.add(n.attr)
+        elif isinstance(n, ast.Name) and n.id in FLAGS:
+            hits.add(n.id)
+    return hits
+
+
+def _is_accounted(func: ast.AST) -> bool:
+    """The enclosing function raises, or calls a billing marker, or IS one."""
+    if getattr(func, "name", "") in MARKERS:
+        return True
+    for n in ast.walk(func):
+        if isinstance(n, ast.Raise):
+            return True
+        if isinstance(n, ast.Call):
+            fn = n.func
+            callee = fn.attr if isinstance(fn, ast.Attribute) else \
+                getattr(fn, "id", "")
+            if callee in MARKERS:
+                return True
+    return False
+
+
+class SilentFallbackRule(Rule):
+    name = "silent-fallback"
+    description = ("kernel-dispatch flag branches must raise or call a "
+                   "billing marker (_charge/_require_divisible/"
+                   "kernel_partition_plan)")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.If):
+                continue
+            hits = _flags_in(node.test)
+            if not hits:
+                continue
+            func = ctx.enclosing_function(node)
+            if func is not None and _is_accounted(func):
+                continue
+            yield self.finding(
+                ctx, node,
+                f"branch on {sorted(hits)} with no raise and no billing "
+                "marker in the enclosing function — a silent kernel "
+                "fallback (see docs/analysis.md)")

@@ -1,0 +1,271 @@
+"""Abstract-trace grid auditor: every arch × serving mesh, no devices.
+
+Three checks per ``(arch, mesh_shape)`` cell, all CPU-fast (<60s total):
+
+1. **Partition-plan law** — ``kernel_partition_plan(full_cfg, serve)`` with
+   the kernel-honest flags (``use_flash_kernel=True, logit_mode='fused'``):
+   the cell either yields a plan (every kernel dim divides the model axis)
+   or raises the documented divisibility error. An *undocumented* exception
+   is a failure.
+2. **Rules divisibility walk** — generate the full param PartitionSpec tree
+   over a :class:`SimMesh` of that shape (``jax.eval_shape`` of
+   ``init_params`` supplies the leaf shapes; no arrays are built) and assert
+   every sharded dim divides exactly by its mesh axes — the "jax rejects
+   uneven shards" law, checked without jax ever seeing the mesh.
+3. **Stage traces** — ``jax.eval_shape`` every jitted engine stage (refresh,
+   refresh_packed, reuse, reuse_packed, decode, decode_packed) on a
+   ``reduced()`` config with the warmup's exact dummy-input geometry.
+   Abstract evaluation runs with no active mesh, so stage traces are
+   mesh-independent and memoized per arch; the per-mesh sharding semantics
+   are covered by checks 1–2.
+
+``run_grid_audit()`` returns an :class:`AuditReport`; the CLI
+(``python -m repro.analysis --grid-audit``) fails on any ``error`` cell.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ServeConfig, reduced
+from repro.jax_compat import P
+from repro.launch.mesh import SimMesh, axis_size
+from repro.launch.sharding import Rules, kernel_partition_plan
+
+MESH_SHAPES: Tuple[Tuple[int, int], ...] = ((1, 1), (1, 2), (2, 1), (2, 2))
+
+# the documented divisibility error (launch/sharding.kernel_partition_plan)
+_DOC_ERR = "cannot partition over the"
+
+
+def _serve_for(mesh_shape: Tuple[int, int]) -> ServeConfig:
+    """Kernel-honest serve knobs at audit geometry (tiny, CPU-traceable)."""
+    return ServeConfig(max_seq_len=64, block_size=8, token_bucket=32,
+                       max_slots=4, max_num_batched_tokens=512,
+                       max_num_logits=64, vocab_tile=64,
+                       use_flash_kernel=True, logit_mode="fused",
+                       varlen_pack=True,
+                       mesh_shape=None if mesh_shape == (1, 1)
+                       else mesh_shape)
+
+
+@dataclass
+class AuditCell:
+    arch: str
+    mesh: Tuple[int, int]
+    status: str                    # "ok" | "expected-raise" | "error"
+    detail: str = ""
+    plan: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        return {"arch": self.arch, "mesh": list(self.mesh),
+                "status": self.status, "detail": self.detail,
+                "plan": self.plan}
+
+
+@dataclass
+class AuditReport:
+    cells: List[AuditCell] = field(default_factory=list)
+    stage_shapes: Dict[str, dict] = field(default_factory=dict)
+    elapsed_s: float = 0.0
+
+    @property
+    def errors(self) -> List[AuditCell]:
+        return [c for c in self.cells if c.status == "error"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def to_dict(self) -> dict:
+        return {"ok": self.ok, "elapsed_s": round(self.elapsed_s, 2),
+                "cells": [c.to_dict() for c in self.cells],
+                "stage_shapes": self.stage_shapes}
+
+
+# ---------------------------------------------------------------------------
+# check 2: Rules divisibility walk
+# ---------------------------------------------------------------------------
+
+def _param_shapes(cfg):
+    from repro.models import backbone as BB
+    return jax.eval_shape(partial(BB.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def _check_rules_divisibility(cfg, mesh: SimMesh, pshapes) -> List[str]:
+    """Every sharded dim of every param spec must divide by its axes."""
+    rules = Rules(cfg, mesh, train=False)
+    specs = rules.params(pshapes)
+    bad: List[str] = []
+
+    def walk(path, leaf, spec):
+        for dim, axes in zip(leaf.shape, tuple(spec)):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            n = 1
+            for a in axes:
+                n *= axis_size(mesh, a)
+            if n and dim % n:
+                bad.append(f"{path}: dim {dim} % {axes}={n} != 0")
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(pshapes)
+    sflat, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for (kp, leaf), (_, spec) in zip(flat, sflat):
+        walk(jax.tree_util.keystr(kp), leaf, spec)
+    # serving cache layouts must generate (and divide) for the pool geometry
+    serve = _serve_for((axis_size(mesh, "data"), axis_size(mesh, "model")))
+    retain = min(serve.retained_len, serve.max_seq_len - serve.block_size)
+    rules.cache(serve.max_slots + 1, retain, data_parallel=False)
+    rules.cache(serve.max_slots + 1, retain, data_parallel=False,
+                slot_data_parallel=True)
+    rules.tokens(serve.max_slots)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# check 3: eval_shape stage traces (mesh-independent, memoized per arch)
+# ---------------------------------------------------------------------------
+
+def _trace_stages(name: str) -> dict:
+    """eval_shape all six engine stages with the warmup's dummy geometry."""
+    from repro.models import backbone as BB
+    from repro.models import lm_head as LM
+    from repro.models import transformer as T
+
+    cfg = reduced(get_config(name))
+    serve = _serve_for((1, 1))
+    S, Sb = serve.max_seq_len, serve.block_size
+    F = cfg.frontend_len if cfg.frontend_dim else 0
+    retain = min(serve.retained_len, S - Sb)
+    ctx = T.ServeContext(
+        block_size=Sb, retain=retain, kernel_size=serve.kernel_size,
+        selection=serve.selection,
+        q_chunk=min(T.L.DEFAULT_Q_CHUNK, S),
+        use_flash_kernel=serve.use_flash_kernel, max_seq_len=S)
+    sds = jax.ShapeDtypeStruct
+    pshapes = _param_shapes(cfg)
+    b = 2
+    fe = sds((b, F, cfg.frontend_dim), jnp.float32) if F else None
+    dt = jnp.dtype(cfg.dtype)
+    shapes: dict = {}
+
+    def rec(stage, out):
+        flat, _ = jax.tree_util.tree_flatten_with_path(out)
+        shapes[stage] = {jax.tree_util.keystr(kp): list(x.shape)
+                         for kp, x in flat}
+
+    # padded refresh: tokens [b, S], valid [b, F+S], block_start [b]
+    ref = jax.eval_shape(
+        lambda p, t, v, bs, f: BB.serve_refresh(p, cfg, t, bs, ctx,
+                                                frontend=f, token_valid=v),
+        pshapes, sds((b, S), jnp.int32), sds((b, F + S), jnp.bool_),
+        sds((b,), jnp.int32), fe)
+    rec("refresh", ref)
+    # packed refresh: one ragged stream of tp tokens over b segments
+    tp = -(-(b * (S + F)) // serve.token_bucket) * serve.token_bucket
+    refp = jax.eval_shape(
+        lambda p, ft, pos, seg, v, cu, sl, bs, f: BB.serve_refresh_packed(
+            p, cfg, ft, pos, seg, v, cu, sl, bs, ctx, frontend=f),
+        pshapes, sds((tp,), jnp.int32), sds((tp,), jnp.int32),
+        sds((tp,), jnp.int32), sds((tp,), jnp.bool_), sds((b,), jnp.int32),
+        sds((b,), jnp.int32), sds((b,), jnp.int32), fe)
+    rec("refresh_packed", refp)
+    # reuse consumes refresh's captured cache (shape-struct flows through)
+    reu = jax.eval_shape(
+        lambda p, t, pos, c: BB.serve_reuse(p, cfg, t, pos, c, ctx),
+        pshapes, sds((b, Sb), jnp.int32), sds((b, Sb), jnp.int32), ref.cache)
+    rec("reuse", reu)
+    reup = jax.eval_shape(
+        lambda p, t, pos, c: BB.serve_reuse_packed(p, cfg, t, pos, c, ctx),
+        pshapes, sds((b * Sb,), jnp.int32), sds((b * Sb,), jnp.int32),
+        refp.cache)
+    rec("reuse_packed", reup)
+    n = serve.max_num_logits
+    dec = jax.eval_shape(
+        lambda e, h: LM.decode_tokens(e, cfg, h,
+                                      max_num_logits=serve.max_num_logits,
+                                      mode=serve.logit_mode,
+                                      vocab_tile=serve.vocab_tile),
+        pshapes["embed"], sds((n, cfg.d_model), dt))
+    rec("decode", dec)
+    decp = jax.eval_shape(
+        lambda e, h, v: LM.decode_tokens_packed(
+            e, cfg, h, v, max_num_logits=serve.max_num_logits,
+            mode=serve.logit_mode, vocab_tile=serve.vocab_tile),
+        pshapes["embed"], sds((n, cfg.d_model), dt), sds((n,), jnp.bool_))
+    rec("decode_packed", decp)
+    # block-hidden sanity: refresh must hand the decode stage d_model rows
+    for stage, out in (("refresh", ref), ("refresh_packed", refp),
+                       ("reuse", reu), ("reuse_packed", reup)):
+        bh = getattr(out, "block_hidden", out)
+        bh = bh if hasattr(bh, "shape") else None
+        if bh is not None and bh.shape[-1] != cfg.d_model:
+            raise AssertionError(
+                f"{name}/{stage}: hidden last dim {bh.shape[-1]} != "
+                f"d_model {cfg.d_model}")
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+def run_grid_audit(archs: Optional[Sequence[str]] = None,
+                   mesh_shapes: Sequence[Tuple[int, int]] = MESH_SHAPES,
+                   trace_stages: bool = True) -> AuditReport:
+    t0 = time.perf_counter()
+    report = AuditReport()
+    names = list(archs) if archs is not None else sorted(ARCHS)
+    full_pshapes: dict = {}
+    for name in names:
+        full_cfg = get_config(name)
+        full_pshapes[name] = _param_shapes(full_cfg)
+        if trace_stages:
+            try:
+                report.stage_shapes[name] = _trace_stages(name)
+            except Exception as e:  # a stage that cannot trace is an error
+                report.cells.append(AuditCell(
+                    name, (0, 0), "error", f"stage trace failed: {e!r}"))
+                continue
+        for mesh_shape in mesh_shapes:
+            serve = _serve_for(mesh_shape)
+            try:
+                plan = kernel_partition_plan(full_cfg, serve)
+            except ValueError as e:
+                if _DOC_ERR in str(e):
+                    report.cells.append(AuditCell(
+                        name, mesh_shape, "expected-raise", str(e)))
+                else:
+                    report.cells.append(AuditCell(
+                        name, mesh_shape, "error",
+                        f"undocumented ValueError: {e}"))
+                continue
+            except Exception as e:
+                report.cells.append(AuditCell(
+                    name, mesh_shape, "error", f"unexpected: {e!r}"))
+                continue
+            try:
+                bad = _check_rules_divisibility(
+                    full_cfg, SimMesh(mesh_shape), full_pshapes[name])
+            except Exception as e:
+                report.cells.append(AuditCell(
+                    name, mesh_shape, "error", f"Rules walk failed: {e!r}",
+                    plan=plan))
+                continue
+            if bad:
+                report.cells.append(AuditCell(
+                    name, mesh_shape, "error",
+                    "uneven shards: " + "; ".join(bad[:5]), plan=plan))
+            else:
+                report.cells.append(AuditCell(
+                    name, mesh_shape, "ok", plan=plan))
+    report.elapsed_s = time.perf_counter() - t0
+    return report

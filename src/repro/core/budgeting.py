@@ -375,7 +375,8 @@ def measure_logit_peak(cfg: ModelConfig, serve: ServeConfig,
             return LM.decode_tokens(params, cfg, h,
                                     max_num_logits=serve.max_num_logits,
                                     mode=mode, vocab_tile=serve.vocab_tile)
-        compiled = jax.jit(fn).lower(params, h).compile()
+        from repro import jax_compat as JC
+        compiled = JC.jit(fn).lower(params, h).compile()
         ma = compiled.memory_analysis()
         out[mode] = int(ma.temp_size_in_bytes)
     return out

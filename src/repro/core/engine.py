@@ -81,9 +81,9 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro import jax_compat as JC
+from repro.jax_compat import P
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.core import diffusion
 from repro.core.budgeting import (admission_block_reason, can_pack_tokens,
@@ -172,9 +172,28 @@ class EngineStats:
     alloc_fault_iters: int = 0    # iterations whose admission hit an
     #                               injected slot-allocation failure
     slow_fault_s: float = 0.0     # injected slow-iteration delay absorbed
+    # -- retrace sentinel (docs/analysis.md) -------------------------------
+    # Per-entry-point XLA compilation counters (refresh/reuse/decode stage
+    # jits + the pool scatter/gather), counted at trace time by the
+    # ``jax_compat`` jit shims. ``compiles_warmup`` snapshots the total the
+    # moment ``Engine.warmup`` returns; anything above it afterwards is a
+    # steady-state recompilation — the static budget the retrace sentinel
+    # (``repro.analysis.retrace``) holds at ZERO for a warmed engine.
+    compile_counts: Dict[str, int] = field(default_factory=dict)
+    compiles_warmup: int = 0
     # list when unlimited; the engine swaps in a maxlen deque under
     # ServeConfig.iter_log_cap (O(1) eviction of the oldest rows)
     iter_log: List[dict] = field(default_factory=list)
+
+    @property
+    def compiles_total(self) -> int:
+        return sum(self.compile_counts.values())
+
+    @property
+    def compiles_post_warmup(self) -> int:
+        """Compilations after the warmup snapshot (0 on a healthy warmed
+        engine; equals ``compiles_total`` when warmup was never run)."""
+        return self.compiles_total - self.compiles_warmup
 
     @property
     def rejected(self) -> int:
@@ -302,9 +321,15 @@ class Engine:
             Lmod.set_sharding_policy({})
         self.params = params
         self.scheduler = make_scheduler(serve)
+        # retrace sentinel: every jit entry point of THIS engine (stage jits
+        # + the pool scatter/gather) counts its compilations here, so the
+        # post-warmup compile budget is per-engine, not process-global
+        from collections import Counter
+        self._compile_counter: Counter = Counter()
         self.pool = KVPool(serve.max_slots, shardings=pool_shardings,
                            gather_shardings=gather_shardings,
-                           pad_slots=self._pool_pad)
+                           pad_slots=self._pool_pad,
+                           compile_counter=self._compile_counter)
         # robustness wiring: the scheduler drives the pool's take/free
         # generation ledger on admit/finish/preempt, and consumes the fault
         # plan's alloc-failure / mem-steal tokens at admission time
@@ -414,7 +439,8 @@ class Engine:
             in_specs = self._stage_specs(4)
             self._refresh_jit[n] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
-                out_specs=self._refresh_out_specs())
+                out_specs=self._refresh_out_specs(),
+                entry="refresh", counter=self._compile_counter)
         return self._refresh_jit[n]
 
     def _token_bucket(self, n_tokens: int) -> int:
@@ -453,7 +479,8 @@ class Engine:
             in_specs = self._stage_specs(8)
             self._refresh_packed_jit[(tp, rp)] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
-                out_specs=self._refresh_out_specs())
+                out_specs=self._refresh_out_specs(),
+                entry="refresh_packed", counter=self._compile_counter)
         return self._refresh_packed_jit[(tp, rp)]
 
     def _reuse_fn(self, n: int):
@@ -465,8 +492,9 @@ class Engine:
                                       block_positions, cache, ctx)
 
             in_specs = self._stage_specs(2, with_cache=True)
-            self._reuse_jit[n] = JC.jit_sharded(fn, mesh=self.mesh,
-                                                in_specs=in_specs)
+            self._reuse_jit[n] = JC.jit_sharded(
+                fn, mesh=self.mesh, in_specs=in_specs,
+                entry="reuse", counter=self._compile_counter)
         return self._reuse_jit[n]
 
     def _reuse_packed_fn(self, rp: int):
@@ -478,8 +506,9 @@ class Engine:
                                              flat_positions, cache, ctx)
 
             in_specs = self._stage_specs(2, with_cache=True)
-            self._reuse_packed_jit[rp] = JC.jit_sharded(fn, mesh=self.mesh,
-                                                        in_specs=in_specs)
+            self._reuse_packed_jit[rp] = JC.jit_sharded(
+                fn, mesh=self.mesh, in_specs=in_specs,
+                entry="reuse_packed", counter=self._compile_counter)
         return self._reuse_packed_jit[rp]
 
     def _decode_fn(self, n: int):
@@ -497,8 +526,9 @@ class Engine:
                     mode=serve.logit_mode, vocab_tile=serve.vocab_tile)
 
             in_specs = self._stage_specs(1)
-            self._decode_jit[n] = JC.jit_sharded(fn, mesh=self.mesh,
-                                                 in_specs=in_specs)
+            self._decode_jit[n] = JC.jit_sharded(
+                fn, mesh=self.mesh, in_specs=in_specs,
+                entry="decode", counter=self._compile_counter)
         return self._decode_jit[n]
 
     def _decode_packed_fn(self, n: int):
@@ -512,8 +542,9 @@ class Engine:
                     mode=serve.logit_mode, vocab_tile=serve.vocab_tile)
 
             in_specs = self._stage_specs(2)
-            self._decode_packed_jit[n] = JC.jit_sharded(fn, mesh=self.mesh,
-                                                        in_specs=in_specs)
+            self._decode_packed_jit[n] = JC.jit_sharded(
+                fn, mesh=self.mesh, in_specs=in_specs,
+                entry="decode_packed", counter=self._compile_counter)
         return self._decode_packed_jit[n]
 
     # ------------------------------------------------------------------
@@ -540,6 +571,11 @@ class Engine:
         # shard_map themselves per model shard
         with self._mesh_ctx():
             self._warmup_compile()
+        # retrace-sentinel snapshot: everything compiled so far is warmup;
+        # any compile-counter growth beyond this point is a steady-state
+        # recompilation (the budget repro.analysis.retrace holds at zero)
+        self.stats.compiles_warmup = sum(self._compile_counter.values())
+        self.stats.compile_counts = dict(self._compile_counter)
         return time.perf_counter() - t0
 
     def _warmup_compile(self) -> None:
@@ -577,7 +613,15 @@ class Engine:
                     jnp.full((b,), min(tp, S + F), jnp.int32),
                     jnp.zeros((b,), jnp.int32),
                     _fe(b))
-                self.pool.ensure(out.cache)
+                # warm the pool scatter at this bucket's batch shape too —
+                # the runtime writes a slot list of exactly rp entries after
+                # every refresh, so an ensure()-only warmup leaves pool_write
+                # to compile mid-serve (the retrace sentinel catches this).
+                # Scatter ZEROS: the dummy refresh output is mesh-dependent
+                # numerics, and depositing it in the scratch slot would break
+                # the 1-vs-N-device pool agreement oracle (shard_check)
+                self.pool.write([self.pool.scratch_slot] * b,
+                                jax.tree.map(jnp.zeros_like, out.cache))
                 if b >= _bucket(r_fused):
                     break
                 b *= 2
@@ -590,7 +634,8 @@ class Engine:
                 self.params, jnp.broadcast_to(toks, (b, S)),
                 jnp.broadcast_to(valid, (b, F + S)),
                 jnp.broadcast_to(bs, (b,)), _fe(b))
-            self.pool.ensure(out.cache)
+            self.pool.write([self.pool.scratch_slot] * b,
+                            jax.tree.map(jnp.zeros_like, out.cache))
             if b >= _bucket(r_eff):
                 break
             b *= 2
@@ -775,6 +820,7 @@ class Engine:
         self.stats.wall_time = (self.vtime if self.clock == "modeled"
                                 else time.perf_counter() - start)
         self.stats.iterations = it
+        self.stats.compile_counts = dict(self._compile_counter)
         return self.stats
 
     # -- modeled-clock cost accounting -------------------------------------
@@ -944,8 +990,9 @@ class Engine:
                     h = jnp.pad(h, ((0, b - N), (0, 0)))
                 ids, conf = self._dispatch(
                     "decode", lambda: self._decode_fn(b)(self.params, h))
-            # one blocking transfer instead of two per-array host syncs
-            ids, conf = jax.device_get((ids, conf))
+            # one blocking transfer instead of two per-array host syncs —
+            # the engine's SINGLE annotated sync point (docs/analysis.md)
+            ids, conf = jax.device_get((ids, conf))  # lint: allow(host-sync)
             ids = ids[:N]
             conf = conf[:N]
             # C1: serial sub-batches serialize on device; monolithic runs one

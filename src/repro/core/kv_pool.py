@@ -33,10 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import jax_compat as JC
+
 
 class KVPool:
     def __init__(self, max_slots: int, shardings=None,
-                 gather_shardings=None, pad_slots: int = 0):
+                 gather_shardings=None, pad_slots: int = 0,
+                 compile_counter=None):
         """``shardings``: optional NamedSharding pytree matching the cache
         structure (leading slot axis included) — resolved lazily against the
         first Refresh output in :meth:`ensure`.
@@ -47,12 +50,17 @@ class KVPool:
 
         ``pad_slots``: extra never-allocated tail slots so a data-sharded
         pool's slot axis always divides the data axis; they are invisible to
-        the slot ledger and never written."""
+        the slot ledger and never written.
+
+        ``compile_counter``: optional Counter the pool's scatter/gather jits
+        report compilations into (entries ``pool_write``/``pool_gather``) —
+        the engine threads its per-instance retrace-sentinel counter here."""
         self.max_slots = max_slots
         self.scratch_slot = max_slots
         self.pad_slots = pad_slots
         self.shardings = shardings
         self.gather_shardings = gather_shardings
+        self._compile_counter = compile_counter
         self.cache = None          # device pytree, slot axis = 1
         self._write = None
         self._gather = None
@@ -107,30 +115,34 @@ class KVPool:
             shard = np.zeros(ns.shard_shape(shape), c.dtype)
             return jax.make_array_from_callback(shape, ns, lambda _: shard)
 
+        cc = self._compile_counter
         if self.shardings is None:
             self.cache = jax.tree.map(alloc, cache_example)
-            self._write = jax.jit(
+            self._write = JC.jit(
                 lambda pool, cache, slots: jax.tree.map(
                     lambda P, c: P.at[:, slots].set(c), pool, cache),
-                donate_argnums=0)
+                donate_argnums=0, entry="pool_write", counter=cc)
         else:
             self.cache = jax.tree.map(alloc, cache_example, self.shardings)
             # pin the pool's planned layout across writes (donation keeps the
             # update in place; out_shardings keeps GSPMD from re-laying it out)
-            self._write = jax.jit(
+            self._write = JC.jit(
                 lambda pool, cache, slots: jax.tree.map(
                     lambda P, c: P.at[:, slots].set(c), pool, cache),
-                donate_argnums=0, out_shardings=self.shardings)
+                donate_argnums=0, out_shardings=self.shardings,
+                entry="pool_write", counter=cc)
         if self.gather_shardings is None:
-            self._gather = jax.jit(
-                lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool))
+            self._gather = JC.jit(
+                lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool),
+                entry="pool_gather", counter=cc)
         else:
             # gathered sub-batches feed the data-replicated engine streams:
             # pin that layout so the slot-sharded pool's gather always lands
             # in the stage jits' expected placement
-            self._gather = jax.jit(
+            self._gather = JC.jit(
                 lambda pool, slots: jax.tree.map(lambda P: P[:, slots], pool),
-                out_shardings=self.gather_shardings)
+                out_shardings=self.gather_shardings,
+                entry="pool_gather", counter=cc)
 
     def nbytes(self) -> int:
         if self.cache is None:

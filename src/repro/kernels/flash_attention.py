@@ -25,7 +25,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+from repro import jax_compat as JC
 
 
 def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, s_ref,
@@ -63,7 +66,7 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, s_ref,
     m_ref[0, 0] = m_new
 
 
-@functools.partial(jax.jit, static_argnames=("softcap", "t_tile", "interpret"))
+@functools.partial(JC.jit, static_argnames=("softcap", "t_tile", "interpret"))
 def packed_flash_attention_call(
     q: jax.Array,        # [B, K, R, dh]
     k: jax.Array,        # [B, K, T, dh]

@@ -24,7 +24,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+from repro import jax_compat as JC
 
 
 def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, kvalid_ref, loc_ref,
@@ -81,7 +84,7 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, kvalid_ref, loc_ref,
         o_ref[0, 0] = o_new
 
 
-@functools.partial(jax.jit, static_argnames=(
+@functools.partial(JC.jit, static_argnames=(
     "softcap", "causal", "window", "q_tile", "kv_tile", "interpret"))
 def flash_refresh_call(
     q: jax.Array,        # [B, K, S*G, dh] row-flat GQA layout

@@ -27,7 +27,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+from repro import jax_compat as JC
 
 # Segment id for bucket-padding tokens. Must sort after every real request id
 # so the ascending-stream tile-skip stays valid.
@@ -89,7 +92,7 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref, kseg_ref,
         o_ref[0] = o_ref[0] / jnp.maximum(s_ref[0], 1e-30)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=(
+@functools.partial(JC.jit, static_argnames=(
     "softcap", "causal", "window", "q_tile", "kv_tile", "interpret"))
 def flash_varlen_call(
     q: jax.Array,         # [K, T*G, dh] row-flat GQA layout (token-major)
@@ -212,7 +215,7 @@ def _cross_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, qseg_ref,
         o_ref[0] = o_ref[0] / jnp.maximum(s_ref[0], 1e-30)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=(
+@functools.partial(JC.jit, static_argnames=(
     "softcap", "causal", "window", "q_tile", "kv_tile", "interpret"))
 def flash_varlen_cross_call(
     q: jax.Array,          # [K, Tq*G, dh] row-flat GQA layout (token-major)

@@ -29,7 +29,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+from repro import jax_compat as JC
 
 
 def _kernel(h_ref, w_ref, valid_ref, idx_ref, m_ref, s_ref, *, softcap: float,
@@ -72,7 +75,7 @@ def _kernel(h_ref, w_ref, valid_ref, idx_ref, m_ref, s_ref, *, softcap: float,
         m_ref[...] = m_new
 
 
-@functools.partial(jax.jit, static_argnames=("softcap", "t_tile", "v_tile",
+@functools.partial(JC.jit, static_argnames=("softcap", "t_tile", "v_tile",
                                              "interpret", "w_layout"))
 def fused_logit_argmax_call(
     h: jax.Array,          # [T, D]

@@ -20,8 +20,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import P
 from repro.kernels import ref
 from repro.kernels.flash_attention import packed_flash_attention_call
 from repro.kernels.logit_argmax import fused_logit_argmax_call
@@ -242,7 +242,6 @@ def flash_refresh_attention(q, k, v, *, q_pos, kv_pos, kv_valid, mask_mode,
     if mesh is None or "model" not in mesh.axis_names:
         out = local_call(qh, kh, vh, q_pos, kv_pos, kv_valid, loc)
     else:
-        from jax.sharding import PartitionSpec as P
         m = mesh.shape["model"]
         dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
         import functools as ft

@@ -16,7 +16,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+from repro import jax_compat as JC
 
 
 def _kernel(q_ref, k_ref, s_ref):
@@ -49,7 +52,7 @@ def _varlen_kernel(q_ref, k_ref, seg_ref, s_ref):
         s_ref[0, 0] = jnp.full_like(s_ref[0, 0], -jnp.inf)
 
 
-@functools.partial(jax.jit, static_argnames=("s_tile", "interpret"))
+@functools.partial(JC.jit, static_argnames=("s_tile", "interpret"))
 def head_score_call(
     q: jax.Array,     # [B, K, R, dh]  block queries, groups flattened
     k: jax.Array,     # [B, K, S, dh]  full-sequence keys, head-major
@@ -75,7 +78,7 @@ def head_score_call(
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("s_tile", "interpret"))
+@functools.partial(JC.jit, static_argnames=("s_tile", "interpret"))
 def head_score_varlen_call(
     q: jax.Array,     # [R, K, Rq, dh]  block queries per request, groups flat
     k: jax.Array,     # [K, T, dh]      flat packed-stream keys, head-major

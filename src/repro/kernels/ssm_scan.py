@@ -38,7 +38,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
 from jax.experimental import pallas as pl
+
+from repro import jax_compat as JC
 
 
 def _kernel(xdt_ref, dA_ref, b_ref, c_ref, reset_ref, cap_ref,
@@ -121,7 +124,7 @@ def _kernel(xdt_ref, dA_ref, b_ref, c_ref, reset_ref, cap_ref,
         + delta
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@functools.partial(JC.jit, static_argnames=("chunk", "interpret"))
 def ssm_segment_scan_call(
     xdt: jax.Array,       # [T, H, P] f32  pre-multiplied x · dt
     dA: jax.Array,        # [T, H]    f32  dt · A (negative)

@@ -33,6 +33,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import jax_compat as JC
 from repro.configs import ASSIGNED, SHAPES_BY_NAME, get_config
 from repro.configs.base import ModelConfig, ServeConfig, ShapeConfig, TrainConfig
 from repro.launch.mesh import axis_size, data_axes, make_production_mesh
@@ -268,7 +269,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     from repro.jax_compat import use_mesh
     with use_mesh(mesh):
-        lowered = jax.jit(fn).lower(*args)
+        lowered = JC.jit(fn).lower(*args)
         compiled = lowered.compile()
     # per-device bf16 argument bytes: XLA:CPU upcasts every bf16 weight/cache
     # operand to f32 (2x its size) — a backend artifact absent on TPU. Used

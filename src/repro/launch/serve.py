@@ -145,6 +145,12 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         packed_reuse_calls=stats.packed_reuse_calls,
         padded_reuse_calls=stats.padded_reuse_calls,
         warmup_s=warmup_s,
+        # retrace sentinel (docs/analysis.md): per-entry compile counts and
+        # the post-warmup budget — 0 on the padded path, lazily-compiled
+        # sub-buckets only on the packed path
+        compile_counts=dict(stats.compile_counts),
+        compiles_warmup=stats.compiles_warmup,
+        compiles_post_warmup=stats.compiles_post_warmup,
         max_slots=serve.max_slots,
         mesh_shape=list(serve.mesh_shape) if serve.mesh_shape else None,
         mesh_devices=eng.mesh_devices,

@@ -20,9 +20,9 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.jax_compat import P
 from repro.launch.mesh import axis_size, data_axes
 
 

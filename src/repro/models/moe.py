@@ -19,9 +19,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.jax_compat import P
 from repro.models import layers as L
 
 

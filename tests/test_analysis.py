@@ -1,0 +1,163 @@
+"""The invariant analyzer's own gate: rule fixtures (each rule fires exactly
+once on a known violation), the repo lints clean, the grid audit classifies
+divisible and indivisible (arch, mesh) combos correctly, and the retrace
+sentinel proves zero post-warmup compilations on a full padded-path serve."""
+import numpy as np
+import pytest
+
+from repro.analysis.lint import run_lint
+from repro.analysis.rules import all_rules
+from repro.analysis.trace_audit import run_grid_audit
+
+# ---------------------------------------------------------------------------
+# fixture sources: each contains EXACTLY ONE violation of its rule
+# ---------------------------------------------------------------------------
+VIOLATIONS = {
+    "mesh-api": "from jax.sharding import PartitionSpec\n",
+    "bare-jit": "import jax\nf = jax.jit(lambda x: x)\n",
+    "host-sync": "import jax\n\n\ndef f(x):\n    return x.item()\n",
+    "silent-fallback": ("def dispatch(serve, x):\n"
+                        "    if serve.use_flash_kernel:\n"
+                        "        x = x + 1\n"
+                        "    return x\n"),
+}
+
+
+def _lint_fixture(tmp_path, name, source):
+    pkg = tmp_path / "src" / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / f"fixture_{name.replace('-', '_')}.py").write_text(source)
+    return run_lint(root=tmp_path, rules=all_rules())
+
+
+@pytest.mark.parametrize("rule", sorted(VIOLATIONS))
+def test_rule_fires_exactly_once(tmp_path, rule):
+    report = _lint_fixture(tmp_path, rule, VIOLATIONS[rule])
+    assert [f.rule for f in report.findings] == [rule], report.findings
+
+
+def test_pragma_suppresses(tmp_path):
+    src = "import jax\nf = jax.jit(lambda x: x)  # lint: allow(bare-jit)\n"
+    report = _lint_fixture(tmp_path, "pragma", src)
+    assert report.ok
+    assert [s["rule"] for s in report.suppressed] == ["bare-jit"]
+    assert report.suppressed[0]["via"] == "pragma"
+
+
+def test_accounted_dispatch_is_clean(tmp_path):
+    src = ("def dispatch(serve, x):\n"
+           "    if serve.use_flash_kernel:\n"
+           "        _require_divisible('k', h=4)\n"
+           "        x = x + 1\n"
+           "    return x\n")
+    report = _lint_fixture(tmp_path, "accounted", src)
+    assert report.ok, report.findings
+
+
+def test_repo_lints_clean():
+    """The codebase passes its own gate — CI runs this as
+    ``python -m repro.analysis --strict``."""
+    report = run_lint()
+    assert report.ok, "\n".join(str(f) for f in report.findings)
+    assert report.files_scanned > 50
+
+
+# ---------------------------------------------------------------------------
+# grid audit
+# ---------------------------------------------------------------------------
+
+def test_grid_audit_indivisible_is_expected_raise():
+    """gemma-2b has n_kv_heads=1: a 2-way model axis CANNOT divide it —
+    the audit must classify that as the documented raise, not a failure."""
+    report = run_grid_audit(archs=["gemma-2b"], trace_stages=False)
+    assert report.ok, [c.to_dict() for c in report.errors]
+    by_mesh = {c.mesh: c for c in report.cells}
+    assert by_mesh[(1, 1)].status == "ok"
+    assert by_mesh[(2, 1)].status == "ok"      # pure data-parallel divides
+    for mesh in ((1, 2), (2, 2)):
+        cell = by_mesh[mesh]
+        assert cell.status == "expected-raise", cell.to_dict()
+        assert "n_kv_heads=1" in cell.detail
+
+
+def test_grid_audit_divisible_arch_traces_everywhere():
+    report = run_grid_audit(archs=["llada-8b"])
+    assert report.ok, [c.to_dict() for c in report.errors]
+    assert all(c.status == "ok" for c in report.cells)
+    stages = report.stage_shapes["llada-8b"]
+    assert set(stages) == {"refresh", "refresh_packed", "reuse",
+                           "reuse_packed", "decode", "decode_packed"}
+    for cell in report.cells:
+        if cell.mesh[1] > 1:      # kernel dims actually split on the plan
+            assert cell.plan and all(v == cell.mesh[1]
+                                     for v in cell.plan.values())
+
+
+# ---------------------------------------------------------------------------
+# retrace sentinel
+# ---------------------------------------------------------------------------
+
+def test_jit_shim_counts_compiles():
+    import jax.numpy as jnp
+
+    from repro import jax_compat as JC
+    from collections import Counter
+    c = Counter()
+    f = JC.jit(lambda x: x * 2, entry="t", counter=c)
+    f(jnp.zeros((4,)))
+    f(jnp.ones((4,)))              # same shape: cache hit, no retrace
+    assert c["t"] == 1
+    f(jnp.zeros((8,)))             # new shape: one more compile
+    assert c["t"] == 2
+    assert JC.compile_counts().get("t", 0) >= 2
+
+
+def test_engine_zero_post_warmup_compiles():
+    """The padded path's warmup doubling loops cover every pow2 bucket the
+    runtime can request — a full serve trace after warmup must add ZERO
+    compilations (the retrace budget docs/analysis.md holds at zero)."""
+    from repro.analysis.retrace import check_engine
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ServeConfig
+    from repro.core.engine import Engine
+    from repro.core.request import State
+
+    serve = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                        block_size=8, steps_per_block=8, max_seq_len=64,
+                        max_slots=4, max_refresh_per_iter=2,
+                        selection="head", scheduler="phase",
+                        logit_mode="chunked")
+    eng = Engine(reduced(ARCHS["llada-8b"]), serve, seed=0)
+    eng.warmup()
+    assert eng.stats.compiles_warmup > 0
+    assert {"refresh", "reuse", "decode"} <= set(eng.stats.compile_counts)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, 100, int(rng.integers(8, 30))),
+                       gen_len=16, rid=i) for i in range(5)]
+    stats = eng.run()
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert stats.compiles_post_warmup == 0, stats.compile_counts
+    report = check_engine(eng, budget=0)
+    assert report.ok, report.violations
+    assert report.compiles_warmup == stats.compiles_warmup
+
+
+def test_retrace_flags_unwarmed_engine():
+    """Without warmup every compile bills post-warmup: the sentinel must
+    refuse the trace rather than silently passing."""
+    from repro.analysis.retrace import check_engine
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ServeConfig
+    from repro.core.engine import Engine
+
+    serve = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                        block_size=8, steps_per_block=8, max_seq_len=64,
+                        max_slots=2, max_refresh_per_iter=1,
+                        selection="head", scheduler="phase",
+                        logit_mode="chunked")
+    eng = Engine(reduced(ARCHS["llada-8b"]), serve, seed=0)
+    eng.submit(np.arange(8), gen_len=8, rid=0)
+    eng.run()
+    report = check_engine(eng, budget=0)
+    assert not report.ok
+    assert any("warmup" in v for v in report.violations)
