@@ -1,5 +1,9 @@
 """Paper Table 1: per-layer cache footprint per serving policy (analytic,
-full LLaDA-8B geometry) + measured slot bytes from the engine pool."""
+full LLaDA-8B geometry) + measured slot bytes from the engine pool, plus
+the memory-footprint multipliers (docs/memory.md): shared-prefix dedup
+and int8 slot storage converted into concurrent-slot capacity by
+``plan_memory``. ``record(quick)`` commits the multiplier table as
+``BENCH_footprint.json`` for diff_bench regression."""
 import dataclasses
 
 import numpy as np
@@ -7,7 +11,54 @@ import numpy as np
 from repro.configs import ARCHS, get_config, reduced
 from repro.configs.base import ServeConfig
 from repro.core.baselines import system_profiles
-from repro.core.budgeting import kv_slot_bytes
+from repro.core.budgeting import kv_slot_bytes, plan_memory
+from repro.data.workloads import make_trace, prefix_share_factor
+
+HBM_GB = 48
+
+
+def _capacity_plans():
+    """plan_memory slot capacity at one HBM budget across the multiplier
+    grid. The share factor is MEASURED from the shared-prefix trace (not
+    assumed), so the recorded numbers move only if the workload or the
+    planner move."""
+    cfg = get_config("llada-8b")
+    base = ServeConfig(max_seq_len=2048, max_slots=4096)
+    share = prefix_share_factor(make_trace("shared-prefix", 64, rps=4.0,
+                                           seed=0))
+    variants = {
+        "base": (base, 1.0),
+        "int8": (dataclasses.replace(base, kv_quant="int8"), 1.0),
+        "sharing": (dataclasses.replace(base, prefix_sharing=True), share),
+        "sharing+int8": (dataclasses.replace(base, prefix_sharing=True,
+                                             kv_quant="int8"), share),
+    }
+    plans = {name: plan_memory(cfg, serve, HBM_GB << 30, share_factor=sf)
+             for name, (serve, sf) in variants.items()}
+    return plans, share
+
+
+def _measured_sharing():
+    """Serve a lockstep shared-prefix burst through the refcounted pool:
+    the physical peak must undercut the logical slot count, and the
+    dedup/COW counters prove the ledger (not padding luck) did it."""
+    from repro.core.engine import Engine
+    rcfg = reduced(ARCHS["llada-8b"])
+    serve = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                        block_size=8, steps_per_block=8, max_seq_len=128,
+                        max_slots=6, max_refresh_per_iter=2,
+                        logit_mode="chunked", prefix_sharing=True)
+    eng = Engine(rcfg, serve, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, rcfg.vocab_size - 1, 24) for _ in range(3)]
+    for i in range(6):
+        eng.submit(prompts[i // 2], gen_len=16, arrival=0.0, rid=i)
+    stats = eng.run()
+    return dict(logical_slots=serve.max_slots,
+                phys_slots_peak=stats.phys_slots_peak,
+                shared_hits=stats.shared_hits,
+                shared_cow_promotes=stats.shared_cow_promotes,
+                committed_tokens=stats.committed_tokens)
 
 
 def run(quick: bool = True):
@@ -36,6 +87,37 @@ def run(quick: bool = True):
         eng.run(max_iters=3)
         out.append((f"footprint/measured_pool/{name}", 0.0,
                     f"{eng.pool.nbytes()/2**20:.2f}MiB"))
+    # memory-footprint multipliers: slot capacity at fixed HBM
+    plans, share = _capacity_plans()
+    for name, plan in plans.items():
+        out.append((f"footprint/capacity/{name}", 0.0,
+                    f"slots={plan.max_slots}(phys={plan.phys_slots},"
+                    f"slot={plan.slot_bytes/2**20:.0f}MiB)"))
+    out.append(("footprint/capacity/share_factor", 0.0, f"{share:.2f}x"))
+    m = _measured_sharing()
+    out.append(("footprint/measured_sharing", 0.0,
+                f"phys_peak={m['phys_slots_peak']}/"
+                f"{m['logical_slots']}logical"
+                f"|hits={m['shared_hits']}|cow={m['shared_cow_promotes']}"))
     out.append(("footprint/claim", 0.0,
                 "paper:ours=rL_contiguous_vs_L_for_dense_caches"))
     return out
+
+
+def record(quick: bool = True) -> dict:
+    """The committed-artifact view: the capacity-multiplier table plus the
+    measured refcounted-pool run a regression harness should diff."""
+    plans, share = _capacity_plans()
+    return {
+        "hbm_gb": HBM_GB,
+        "share_factor": round(share, 4),
+        "capacity": {name: {"max_slots": p.max_slots,
+                            "phys_slots": p.phys_slots,
+                            "slot_bytes": p.slot_bytes,
+                            "kv_pool_bytes": p.kv_pool_bytes,
+                            "kv_quant": p.kv_quant}
+                     for name, p in plans.items()},
+        "measured_sharing": _measured_sharing(),
+        "config": {"arch": "llada-8b", "trace": "shared-prefix",
+                   "trace_n": 64, "trace_rps": 4.0, "trace_seed": 0},
+    }

@@ -9,6 +9,13 @@ flags whose enclosing function neither raises nor touches a billing marker
 anatomy of a silent fallback: the flag flips behaviour with nothing keeping
 the books straight.
 
+The memory-footprint flags (``kv_quant``, ``prefix_sharing``) are held to
+the same contract: a branch that quietly skips quantization or sharing
+would under-bill capacity (``plan_memory`` converts both into slots), so
+the enclosing function must raise or touch one of the quantization markers
+(``quant_mask`` — the single billing/runtime leaf predicate — or
+``dequantize_slot_leaves``).
+
 Only ``if`` *statements* are examined — a ternary selecting a value is data
 selection, not an execution-path fork.
 """
@@ -19,8 +26,10 @@ from typing import Iterable
 
 from repro.analysis.lint import FileContext, Finding, Rule
 
-FLAGS = ("use_flash_kernel", "use_flash_refresh", "use_kernel", "logit_mode")
-MARKERS = ("_charge", "_require_divisible", "kernel_partition_plan")
+FLAGS = ("use_flash_kernel", "use_flash_refresh", "use_kernel", "logit_mode",
+         "kv_quant", "prefix_sharing")
+MARKERS = ("_charge", "_require_divisible", "kernel_partition_plan",
+           "quant_mask", "quantize_slot_leaves", "dequantize_slot_leaves")
 
 
 def _flags_in(test: ast.AST):
@@ -51,9 +60,10 @@ def _is_accounted(func: ast.AST) -> bool:
 
 class SilentFallbackRule(Rule):
     name = "silent-fallback"
-    description = ("kernel-dispatch flag branches must raise or call a "
-                   "billing marker (_charge/_require_divisible/"
-                   "kernel_partition_plan)")
+    description = ("kernel-dispatch/memory-footprint flag branches must "
+                   "raise or call a billing marker (_charge/"
+                   "_require_divisible/kernel_partition_plan/quant_mask/"
+                   "dequantize_slot_leaves)")
 
     def check(self, ctx: FileContext) -> Iterable[Finding]:
         for node in ast.walk(ctx.tree):

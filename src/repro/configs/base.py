@@ -173,6 +173,19 @@ class ServeConfig:
     # vocab-sharded fused argmax with a cross-shard reduce); genuinely
     # indivisible head/vocab counts fail loudly at engine construction
     # (``launch.sharding.kernel_partition_plan``) — never a silent fallback.
+    # --- memory-footprint multipliers (docs/memory.md) -----------------------
+    # Both default OFF: the pool stays bit-exact per-request storage.
+    prefix_sharing: bool = False         # content-addressed KV slot sharing:
+    # requests whose Refresh capture hashes to already-resident content
+    # become refcounted referrers of the owning slot (write skipped, gather
+    # redirected, copy-on-write on the first divergent Refresh). Token
+    # output is bit-identical to sharing-off — dedup only ever merges
+    # provably identical bytes.
+    kv_quant: str = "none"               # KV slot storage: "none" (bit-exact
+    # float) | "int8" (per-(layer, slot) abs-max scales; the Reuse stages
+    # dequantize at their KV load — kernels.ops.dequantize_gathered — so
+    # pool HBM and the gather crossing stay int8). plan_memory converts the
+    # smaller slot bytes into more concurrent slots.
     iter_log_cap: int = 0                # keep only the last N iter_log rows
     # (0 = unlimited — a long modeled-clock run otherwise accumulates one
     # dict per iteration forever, which a production engine cannot afford)

@@ -63,8 +63,18 @@ def ablation_profiles(base: ServeConfig) -> Dict[str, ServeConfig]:
 
 
 def size_slots(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
-               floor: int = 1) -> ServeConfig:
-    """Clamp max_slots to what the profiler says fits the HBM budget."""
-    plan = plan_memory(cfg, serve, hbm_bytes)
+               floor: int = 1, share_factor: float = 1.0) -> ServeConfig:
+    """Clamp max_slots to what the profiler says fits the HBM budget.
+
+    ``share_factor`` (the workload's measured prefix-sharing ratio) reaches
+    the plan so its logical capacity is reported, but sizing clamps to the
+    plan's PHYSICAL capacity: the pool reserves physical backing per
+    logical slot (docs/memory.md), so allocating the logical count would
+    overshoot the HBM budget. The logical headroom is what a paged
+    overcommit pool would unlock (ROADMAP follow-up). int8 ``kv_quant``
+    needs no such care — it genuinely shrinks ``slot_bytes``, so the
+    physical capacity itself grows."""
+    plan = plan_memory(cfg, serve, hbm_bytes, share_factor=share_factor)
+    fit = plan.phys_slots or plan.max_slots
     return dataclasses.replace(
-        serve, max_slots=max(floor, min(serve.max_slots, plan.max_slots)))
+        serve, max_slots=max(floor, min(serve.max_slots, fit)))

@@ -46,27 +46,42 @@ def _tp_div(n: int, m: int) -> int:
     return m if m > 1 and n and n % m == 0 and n >= m else 1
 
 
-def _sharded_tree_bytes(mesh, shapes, specs) -> int:
+def _sharded_tree_bytes(mesh, shapes, specs, kv_quant: str = "none") -> int:
     """Per-device bytes of a (shape-tree, spec-tree) pair: each leaf's dims
     divide by the combined size of the mesh axes its spec names (ceil — the
-    rules only shard on exact division anyway)."""
+    rules only shard on exact division anyway).
+
+    ``kv_quant="int8"`` bills the leaves :func:`kernels.kv_quant.quant_mask`
+    selects (PackedKV k/v) at 1 byte/element plus their per-(layer, slot)
+    float32 scale — the same predicate the pool's runtime jits quantize
+    with, so analytic capacity and allocated bytes cannot drift."""
     import jax
 
-    def leaf_bytes(leaf, spec):
-        total = leaf.dtype.itemsize
+    def leaf_bytes(leaf, spec, quant):
+        total = 1 if quant else leaf.dtype.itemsize
         for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
             axes = (entry,) if isinstance(entry, str) else (entry or ())
             shards = 1
             for a in axes:
                 shards *= mesh.shape[a]
             total *= -(-dim // shards)
+        if quant:
+            # [L, B] f32 scale; the layer/slot axes are never sharded by
+            # the cache rules, so the scale is billed whole per device
+            total += leaf.shape[0] * leaf.shape[1] * 4
         return total
 
     # a PartitionSpec is itself a tuple pytree — flatten the spec tree up to
     # the shape treedef so each P stays atomic alongside its shape leaf
     s_leaves, treedef = jax.tree.flatten(shapes)
     p_leaves = treedef.flatten_up_to(specs)
-    return int(sum(leaf_bytes(s, p) for s, p in zip(s_leaves, p_leaves)))
+    if kv_quant == "none":
+        flags = [False] * len(s_leaves)
+    else:
+        from repro.kernels.kv_quant import quant_mask
+        flags = jax.tree.leaves(quant_mask(shapes))  # plain-bool leaves
+    return int(sum(leaf_bytes(s, p, q)
+                   for s, p, q in zip(s_leaves, p_leaves, flags)))
 
 
 @functools.lru_cache(maxsize=None)
@@ -187,7 +202,7 @@ def kv_slot_bytes(cfg: ModelConfig, serve: ServeConfig) -> int:
     specs = Rules(cfg, mesh, train=False).cache(1, retain,
                                                 data_parallel=False)
     shapes = _slot_cache_shapes(cfg, serve, retain)
-    return _sharded_tree_bytes(mesh, shapes, specs)
+    return _sharded_tree_bytes(mesh, shapes, specs, kv_quant=serve.kv_quant)
 
 
 def can_pack_tokens(cfg: ModelConfig) -> bool:
@@ -309,21 +324,31 @@ class MemoryPlan:
     logit_bytes: int
     slot_bytes: int             # per-device bytes of one (global) slot
     kv_pool_bytes: int
-    max_slots: int              # global concurrent-request capacity
+    max_slots: int              # global LOGICAL concurrent-request capacity
     mesh_devices: int = 1
+    # memory-footprint multipliers (docs/memory.md): the physical slot count
+    # the pool bytes actually fit, and the sharing/quantization knobs that
+    # turned them into the logical ``max_slots`` above
+    phys_slots: int = 0
+    share_factor: float = 1.0
+    kv_quant: str = "none"
 
     def summary(self) -> str:
         gb = 1 << 30
         mesh = f" mesh={self.mesh_devices}dev" if self.mesh_devices > 1 else ""
+        share = (f" share={self.share_factor:.2f}x"
+                 if self.share_factor != 1.0 else "")
+        quant = f" kv={self.kv_quant}" if self.kv_quant != "none" else ""
         return (f"weights={self.weights_bytes/gb:.2f}GiB/dev "
                 f"act={self.activation_bytes/gb:.3f}GiB "
                 f"(logit={self.logit_bytes/gb:.3f}GiB) "
                 f"kv_pool={self.kv_pool_bytes/gb:.2f}GiB "
-                f"slots={self.max_slots}{mesh}")
+                f"slots={self.max_slots}{mesh}{share}{quant}")
 
 
 def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
-                guard_band: float = 0.03) -> MemoryPlan:
+                guard_band: float = 0.03,
+                share_factor: float = 1.0) -> MemoryPlan:
     """The offline profiler's output: activation reservation + KV pool size.
 
     Worst-case N_logit = one active block per resident request is bounded by
@@ -336,6 +361,14 @@ def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
     global slots — the §4.2-4.3 capacity coupling extended across a mesh.
     The slot pool shards its slot axis over the ``data`` axis (independent
     replica streams), so global capacity is per-replica slots × mesh_data.
+
+    ``share_factor`` is the workload's measured logical/physical occupancy
+    ratio (``data.workloads.prefix_share_factor``): with
+    ``serve.prefix_sharing`` on, every physical slot the pool bytes fit
+    backs that many logical residents on average, so the plan multiplies
+    capacity before the ``serve.max_slots`` cap. int8 ``serve.kv_quant``
+    instead shrinks ``slot_bytes`` (via ``kv_slot_bytes``) so more physical
+    slots fit outright. Both multipliers are reported on the plan.
     """
     weights = weight_bytes_per_device(cfg, serve.mesh_shape)
     n_logit_worst = serve.max_num_batched_tokens
@@ -345,10 +378,13 @@ def plan_memory(cfg: ModelConfig, serve: ServeConfig, hbm_bytes: int,
     slot = kv_slot_bytes(cfg, serve)
     pool = max(0, hbm_bytes - weights - act - guard)
     replicas = max(1, serve.mesh_data)
-    slots = min(serve.max_slots, replicas * (pool // slot)) \
-        if slot else serve.max_slots
+    phys = replicas * (pool // slot) if slot else serve.max_slots
+    share = share_factor if serve.prefix_sharing else 1.0
+    slots = min(serve.max_slots, int(phys * share))
     return MemoryPlan(weights, act, logit, slot, pool, int(slots),
-                      mesh_devices=serve.mesh_devices)
+                      mesh_devices=serve.mesh_devices,
+                      phys_slots=int(min(serve.max_slots, phys)),
+                      share_factor=share, kv_quant=serve.kv_quant)
 
 
 # ---------------------------------------------------------------------------

@@ -90,6 +90,7 @@ from repro.core.budgeting import (admission_block_reason, can_pack_tokens,
                                   pow2_bucket as _bucket, token_bucket_round)
 from repro.core.faults import FaultError, FaultPlan
 from repro.kernels import flash_varlen as FV
+from repro.kernels import ops as OPS
 from repro.core.kv_pool import KVPool
 from repro.core.request import Outcome, Phase, Request, State
 from repro.core.scheduler import make_scheduler
@@ -169,6 +170,14 @@ class EngineStats:
     preemptions: int = 0          # preempt-and-requeue events (not terminal)
     recomputed_tokens: int = 0    # commits discarded by preemption rollbacks
     dispatch_retries: int = 0     # transient dispatch faults absorbed
+    # -- content-addressed slot sharing (docs/memory.md) -------------------
+    shared_hits: int = 0          # Refresh writes deduplicated against a
+    #                               resident owner slot (device write skipped)
+    shared_cow_promotes: int = 0  # copy-on-write row promotes (divergent
+    #                               Refresh or free of a still-referenced
+    #                               owner)
+    phys_slots_peak: int = 0      # high-water distinct-owner slot occupancy
+    #                               (== peak residency when sharing is off)
     alloc_fault_iters: int = 0    # iterations whose admission hit an
     #                               injected slot-allocation failure
     slow_fault_s: float = 0.0     # injected slow-iteration delay absorbed
@@ -264,6 +273,17 @@ class Engine:
                                      or serve.logit_mode == "fused"):
             from repro.launch.sharding import kernel_partition_plan
             kernel_partition_plan(cfg, serve)
+        # memory-footprint multipliers (docs/memory.md): validate up front so
+        # an unsupported combination fails at construction, never silently
+        # serves a different storage mode than the config asked for
+        if serve.kv_quant not in ("none", "int8"):
+            raise ValueError(f"ServeConfig.kv_quant must be 'none' or "
+                             f"'int8', got {serve.kv_quant!r}")
+        if serve.kv_quant != "none" and serve.mesh_shape is not None:
+            raise NotImplementedError(
+                "kv_quant='int8' is not yet composed with mesh serving — "
+                "the quantized pool's scale leaves need their own "
+                "Rules.cache-derived placement (see docs/memory.md)")
         self.mesh = make_serving_mesh(serve.mesh_shape)
         self.mesh_devices = self.mesh.devices.size if self.mesh else 1
         pool_shardings = gather_shardings = None
@@ -329,7 +349,10 @@ class Engine:
         self.pool = KVPool(serve.max_slots, shardings=pool_shardings,
                            gather_shardings=gather_shardings,
                            pad_slots=self._pool_pad,
-                           compile_counter=self._compile_counter)
+                           compile_counter=self._compile_counter,
+                           sharing=serve.prefix_sharing,
+                           kv_quant=serve.kv_quant)
+        self._sharing = serve.prefix_sharing
         # robustness wiring: the scheduler drives the pool's take/free
         # generation ledger on admit/finish/preempt, and consumes the fault
         # plan's alloc-failure / mem-steal tokens at admission time
@@ -488,6 +511,11 @@ class Engine:
             ctx = self.ctx
 
             def fn(params, block_tokens, block_positions, cache):
+                # KV-load dequant point: under kv_quant the gathered view is
+                # still int8 + scales; scaling back happens inside THIS jit
+                # (jnp on the padded oracle path), never as pool state
+                cache = OPS.dequantize_gathered(cache, self.serve.kv_quant,
+                                                self.pool.gathered_dtypes)
                 return BB.serve_reuse(params, self.cfg, block_tokens,
                                       block_positions, cache, ctx)
 
@@ -502,6 +530,10 @@ class Engine:
             ctx = self.ctx
 
             def fn(params, flat_tokens, flat_positions, cache):
+                # same KV-load dequant as the padded oracle — here it fuses
+                # into the varlen cross-attention kernel's program
+                cache = OPS.dequantize_gathered(cache, self.serve.kv_quant,
+                                                self.pool.gathered_dtypes)
                 return BB.serve_reuse_packed(params, self.cfg, flat_tokens,
                                              flat_positions, cache, ctx)
 
@@ -639,6 +671,11 @@ class Engine:
             if b >= _bucket(r_eff):
                 break
             b *= 2
+        # auxiliary pool jit (COW promote copy) — warmed here so a sharing
+        # pool's first divergence/free-while-shared never compiles mid-serve
+        # (no-op without sharing); the refresh loops above materialized the
+        # pool, so the copy compiles at its real shapes
+        self.pool.warm_aux()
         bpos = jnp.zeros((1, Sb), jnp.int32)
         btok = jnp.zeros((1, Sb), jnp.int32)
         r_cap = max(1, min(self.serve.max_slots,
@@ -821,6 +858,10 @@ class Engine:
                                 else time.perf_counter() - start)
         self.stats.iterations = it
         self.stats.compile_counts = dict(self._compile_counter)
+        if self.pool.ledger is not None:
+            self.stats.shared_hits = self.pool.ledger.hits
+            self.stats.shared_cow_promotes = self.pool.ledger.cow_promotes
+            self.stats.phys_slots_peak = self.pool.phys_peak
         return self.stats
 
     # -- modeled-clock cost accounting -------------------------------------
@@ -1087,6 +1128,20 @@ class Engine:
                     f"{gen} — the slot was freed and recycled under the "
                     f"request")
 
+    def _pool_write(self, chunk: List[Request], cache, n_pad: int) -> None:
+        """Land one Refresh batch in the slot pool. With sharing enabled the
+        write is content-addressed: each request's Refresh key routes
+        through the pool's share ledger (dedup hit -> device write skipped,
+        divergence -> COW promote), padding rows (key None) always scatter
+        to scratch. Without sharing this is the plain batched scatter."""
+        slots = [r.slot for r in chunk] + \
+            [self.pool.scratch_slot] * n_pad
+        if not self._sharing:
+            self.pool.write(slots, cache)
+            return
+        keys = [r.refresh_key() for r in chunk] + [None] * n_pad
+        self.pool.write_shared(slots, cache, keys)
+
     def _run_refresh(self, chunk: List[Request]) -> Tuple[jax.Array, int]:
         """Padded-oracle Refresh. For modality-frontend archs the embedded
         batch is ``[b, frontend_len + max_seq_len]`` (prefix rows first), so
@@ -1111,9 +1166,7 @@ class Engine:
         out = self._dispatch("refresh", lambda: self._refresh_fn(b)(
             self.params, jnp.asarray(tokens), jnp.asarray(valid),
             jnp.asarray(bstart), jnp.asarray(fe) if F else None))
-        slots = [r.slot for r in chunk] + \
-                [self.pool.scratch_slot] * (b - n)
-        self.pool.write(slots, out.cache)
+        self._pool_write(chunk, out.cache, b - n)
         self.stats.padded_refresh_calls += 1
         self.stats.refresh_tokens_real += sum(r.refresh_len for r in chunk)
         self.stats.refresh_tokens_exec += b * (F + S)
@@ -1171,9 +1224,7 @@ class Engine:
             jnp.asarray(seg), jnp.asarray(valid), jnp.asarray(cu),
             jnp.asarray(lens), jnp.asarray(bstart),
             jnp.asarray(fe) if F else None))
-        slots = [r.slot for r in chunk] + \
-                [self.pool.scratch_slot] * (rp - n)
-        self.pool.write(slots, out.cache)
+        self._pool_write(list(chunk), out.cache, rp - n)
         self.stats.packed_refresh_calls += 1
         self.stats.refresh_tokens_real += t_real
         self.stats.refresh_tokens_exec += tp

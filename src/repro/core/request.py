@@ -155,6 +155,17 @@ class Request:
             return self.refresh_len
         return self.cfg.block_size
 
+    def refresh_key(self) -> bytes:
+        """Content address of this request's next Refresh capture.
+
+        The captured cache is a deterministic function of (tokens, geometry,
+        frontend) under the engine's fixed params, so two requests with equal
+        keys produce bit-identical pool rows — the dedup law KVPool's shared
+        writes rely on (docs/memory.md)."""
+        from repro.core.share_ledger import content_key
+        return content_key(self.tokens, self.cfg.block_size, self.total_len,
+                           self.block_start, self.frontend)
+
     def block_tokens(self) -> np.ndarray:
         s = self.block_start
         return self.tokens[s: s + self.cfg.block_size]

@@ -263,12 +263,20 @@ class PhaseMultiplexedScheduler:
             return
         if len(self._free_slots) - self._stolen() > 0:
             return                      # a slot is free; admission will run
-        for victim in reversed(self.running):
-            if victim.phase is not Phase.REUSE:
-                continue                # Refresh-phase work is about to pay
-                                        # its recompute anyway; skip it
-            if victim.n_preempted >= self.cfg.max_preemptions:
-                continue
+        eligible = [v for v in reversed(self.running)
+                    if v.phase is Phase.REUSE          # Refresh-phase work is
+                                                       # about to pay its
+                                                       # recompute anyway
+                    and v.n_preempted < self.cfg.max_preemptions]
+        # prefer victims whose slot does not OWN shared content: evicting a
+        # shared owner forces a promote copy before the slot can be reused
+        # (KVPool.free) and re-bills the content to a referrer. With sharing
+        # off shared_refs is 0 for every slot, so this two-pass pick reduces
+        # to the original youngest-first order bit-for-bit.
+        def owns_shared(v):
+            return self.pool is not None and self.pool.shared_refs(v.slot) > 1
+        for victim in ([v for v in eligible if not owns_shared(v)]
+                       or eligible)[:1]:
             self.running.remove(victim)
             self._release_slot(victim)
             plan.recomputed_tokens += victim.rollback_block()

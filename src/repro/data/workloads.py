@@ -14,13 +14,25 @@ paper's systems experiments consume:
 
 Lengths are scaled by ``scale`` so the same shapes exercise toy CPU models
 (max_seq 128-512) and the full dry-run configs.
+
+A fourth trace, **shared-prefix**, models production prompt duplication
+(shared system prompts, retry/fan-out storms): requests draw their prompt
+verbatim from a small pool of prefixes, so the KV pool's content-addressed
+sharing (``docs/memory.md``) dedups their Refresh captures. Prefix
+assignment uses a rng stream DERIVED from the seed (``default_rng([seed,
+...])``), drawn after the main draws — the three existing workloads' random
+streams stay byte-identical (regression-pinned in ``tests/test_workloads.py``
+so PR 6's deadline determinism survives).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# spawn key for every prefix-related derived stream — never the main stream
+_PREFIX_STREAM = 0x70726566  # "pref"
 
 
 @dataclass(frozen=True)
@@ -33,6 +45,28 @@ class TraceRequest:
     # draw, so enabling deadlines never perturbs the trace's random stream
     # (the determinism tests pin the stream).
     deadline: float = float("inf")
+    # shared-prefix annotation: which prefix-pool entry the first
+    # ``prefix_len`` prompt tokens come from (-1 = unique prompt). Purely
+    # descriptive — the engine discovers sharing by content hash, never by
+    # reading these fields.
+    prefix_id: int = -1
+    prefix_len: int = 0
+
+
+@dataclass(frozen=True)
+class PrefixSpec:
+    """Shape of the shared-prefix trace's prompt pool.
+
+    With ``tail_len=0`` (default) prompts are drawn VERBATIM from the pool,
+    so requests sharing a prefix_id have bit-identical full prompts and the
+    slot-granular pool dedups their whole KV. A nonzero tail appends unique
+    tokens per request — honest modeling of prefix-plus-question traffic,
+    but the current slot-granular pool shares nothing for it (sub-slot
+    paged sharing is the ROADMAP follow-up; ``block_chain_key`` is already
+    a prefix chain in anticipation)."""
+    n_prefixes: int = 4
+    prefix_len: int = 64
+    tail_len: int = 0
 
 
 def _poisson_arrivals(n: int, rps: float, rng) -> np.ndarray:
@@ -57,11 +91,29 @@ def _burst_arrivals(n: int, rps: float, rng, burst_factor: float = 6.0,
 
 def make_trace(name: str, n: int, rps: float, seed: int = 0,
                scale: float = 1.0,
-               deadline_slack: float = float("inf")) -> List[TraceRequest]:
+               deadline_slack: float = float("inf"),
+               prefix: Optional[PrefixSpec] = None) -> List[TraceRequest]:
     """``deadline_slack``: seconds after arrival by which each request must
     finish (inf = no deadline). Applied post-hoc to the arrival — identical
-    rng stream with or without deadlines."""
+    rng stream with or without deadlines. ``prefix`` shapes the
+    shared-prefix trace's pool (ignored by the other workloads)."""
     rng = np.random.default_rng(seed)
+    if name == "shared-prefix":
+        spec = prefix or PrefixSpec()
+        arr = _poisson_arrivals(n, rps, rng)
+        glen = np.full(n, 256)
+        pref = max(4, int(spec.prefix_len * scale))
+        tail = max(0, int(spec.tail_len * scale))
+        # prefix assignment comes from a stream DERIVED from the seed and
+        # drawn after the main draws: the main stream stays byte-identical
+        # to a prefix-free trace of the same shape, and the three existing
+        # workloads (which never reach this branch) are untouched
+        prng = np.random.default_rng([seed, _PREFIX_STREAM])
+        ids = prng.integers(0, spec.n_prefixes, n)
+        return [TraceRequest(float(a), pref + tail, max(4, int(g * scale)),
+                             deadline=float(a) + deadline_slack,
+                             prefix_id=int(i), prefix_len=pref)
+                for a, g, i in zip(arr, glen, ids)]
     if name == "livebench":
         arr = _poisson_arrivals(n, rps, rng)
         plen = np.clip(rng.lognormal(np.log(300), 0.4, n), 50, 900)
@@ -84,9 +136,48 @@ def make_trace(name: str, n: int, rps: float, seed: int = 0,
 
 def trace_prompts(trace: List[TraceRequest], vocab_size: int,
                   seed: int = 0) -> List[np.ndarray]:
+    """Prompt token arrays for ``trace``. Exactly ONE main-stream draw per
+    request regardless of prefix annotations (regression-pinned): prefix-
+    bearing requests draw their full prompt like everyone else, then
+    overwrite the first ``prefix_len`` tokens from the pool entry — pool
+    entries come from per-(id, len) derived streams, so pool content is
+    independent of request order."""
     rng = np.random.default_rng(seed + 1)
-    return [rng.integers(0, vocab_size - 1, t.prompt_len).astype(np.int32)
-            for t in trace]
+    pool: Dict[Tuple[int, int], np.ndarray] = {}
+    out = []
+    for t in trace:
+        p = rng.integers(0, vocab_size - 1, t.prompt_len).astype(np.int32)
+        if t.prefix_id >= 0 and t.prefix_len > 0:
+            key = (t.prefix_id, t.prefix_len)
+            if key not in pool:
+                kr = np.random.default_rng(
+                    [seed + 1, _PREFIX_STREAM, t.prefix_id, t.prefix_len])
+                pool[key] = kr.integers(
+                    0, vocab_size - 1, t.prefix_len).astype(np.int32)
+            k = min(t.prefix_len, t.prompt_len)
+            p[:k] = pool[key][:k]
+        out.append(p)
+    return out
 
 
-WORKLOADS = ("livebench", "burst", "osc")
+def prefix_share_factor(trace: List[TraceRequest]) -> float:
+    """Logical/physical slot ratio the trace admits under whole-slot
+    content sharing: requests whose prompt is drawn VERBATIM from the pool
+    (prefix covers the full prompt) and that share (prefix_id, prompt_len,
+    gen_len) produce bit-identical token arrays — one physical slot backs
+    the group. Everything else (unique prompts, partial prefixes) is billed
+    one slot each. This is the ``share_factor`` fed to
+    ``budgeting.plan_memory`` / ``baselines.size_slots``."""
+    groups: Dict[Tuple[int, int, int], int] = {}
+    unique = 0
+    for t in trace:
+        if t.prefix_id >= 0 and t.prefix_len >= t.prompt_len:
+            key = (t.prefix_id, t.prompt_len, t.gen_len)
+            groups[key] = groups.get(key, 0) + 1
+        else:
+            unique += 1
+    phys = len(groups) + unique
+    return len(trace) / phys if phys else 1.0
+
+
+WORKLOADS = ("livebench", "burst", "osc", "shared-prefix")

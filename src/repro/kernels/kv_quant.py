@@ -1,0 +1,107 @@
+"""int8 KV slot storage: per-(layer, slot) abs-max quantization.
+
+The slot pool's float KV leaves (``PackedKV.k`` / ``PackedKV.v`` — dense,
+hybrid's attention group, never the SSM f32 recurrent state, whose dynamic
+range a per-slot scale cannot honestly cover) are stored as int8 with one
+float32 scale per (layer, slot). Quantization happens inside the pool's
+scatter jit at Refresh write time; dequantization happens at the KV load
+of the Reuse stage (``kernels.ops.dequantize_gathered``) so the pool —
+and the gather crossing back out of it — stays int8 in HBM and the
+dequantized tensors are transient activations fused into the same XLA
+program as the attention kernels.
+
+Error contract (tested per dtype in ``tests/test_kv_share.py``): symmetric
+round-to-nearest over the per-(layer, slot) abs-max means
+
+    |x - dequant(quant(x))|  <=  scale / 2  =  absmax / 254
+
+for float32 leaves, plus one target-dtype rounding step (~``absmax/256``)
+for bfloat16. The documented serving tolerance (docs/memory.md) follows
+from this bound; ``kv_quant="none"`` keeps the pool bit-exact.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def quant_mask(tree):
+    """Same-structure tree of bools: True at the leaves int8 slot storage
+    applies to (PackedKV ``k``/``v``), False elsewhere (positions, validity,
+    SSM state/conv). The single predicate both the pool's runtime jits and
+    ``budgeting.kv_slot_bytes``'s analytic billing read — one law, no
+    drift."""
+    from repro.models.sparse_select import PackedKV
+
+    def expand(node):
+        if isinstance(node, PackedKV):
+            return PackedKV(k=True, v=True, pos=False, valid=False)
+        return False
+
+    return jax.tree.map(expand, tree,
+                        is_leaf=lambda x: isinstance(x, PackedKV))
+
+
+def quant_leaf_flags(tree) -> list:
+    """Flattened :func:`quant_mask`, aligned with ``jax.tree.leaves``
+    (the mask's leaves are plain Python bools)."""
+    return jax.tree.leaves(quant_mask(tree))
+
+
+def _bcast(scale: jax.Array, ndim: int) -> jax.Array:
+    """[L, B] scale broadcast over a leaf's trailing content dims."""
+    return scale.reshape(scale.shape + (1,) * (ndim - 2))
+
+
+def quantize_slot_leaves(cache) -> Tuple[object, Dict[str, jax.Array]]:
+    """Quantize a cache pytree's KV leaves (``[L, B, ...]``, slot axis 1).
+
+    Returns the same-structure tree with int8 KV leaves, plus a dict of
+    per-leaf ``[L, B]`` float32 scales keyed by flattened-leaf index (a
+    plain dict pytree — no placeholder leaves at unquantized positions).
+    """
+    leaves, treedef = jax.tree.flatten(cache)
+    flags = quant_leaf_flags(cache)
+    out, scales = [], {}
+    for i, (x, q) in enumerate(zip(leaves, flags)):
+        if not q:
+            out.append(x)
+            continue
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=tuple(range(2, x.ndim)))
+        scale = jnp.maximum(amax, jnp.float32(1e-12)) / _QMAX
+        qx = jnp.clip(jnp.round(xf / _bcast(scale, x.ndim)),
+                      -_QMAX, _QMAX).astype(jnp.int8)
+        out.append(qx)
+        scales[str(i)] = scale
+    return jax.tree.unflatten(treedef, out), scales
+
+
+def dequantize_slot_leaves(qcache, scales: Dict[str, jax.Array],
+                           dtypes: Dict[str, object]):
+    """Inverse of :func:`quantize_slot_leaves` for a (sliced) pool view:
+    int8 KV leaves scaled back to their original dtype (``dtypes`` carries
+    the pre-quantization leaf dtypes by the same flattened index)."""
+    leaves, treedef = jax.tree.flatten(qcache)
+    out = []
+    for i, x in enumerate(leaves):
+        s = scales.get(str(i))
+        if s is None:
+            out.append(x)
+            continue
+        out.append((x.astype(jnp.float32) * _bcast(s, x.ndim))
+                   .astype(dtypes[str(i)]))
+    return jax.tree.unflatten(treedef, out)
+
+
+def roundtrip_bound(absmax: float, dtype) -> float:
+    """Documented worst-case |x - dq(q(x))| for one value with per-slot
+    abs-max ``absmax``: half a quantization step, plus one ulp-scale term
+    when the storage round-trips through a reduced-precision target."""
+    step = absmax / _QMAX
+    extra = absmax / 256.0 if jnp.dtype(dtype) == jnp.bfloat16 else 0.0
+    return step / 2.0 + extra

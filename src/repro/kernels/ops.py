@@ -484,3 +484,26 @@ def head_score_varlen(q_block, k_flat, seg_ids, *, s_tile: int = 512):
         out_specs=P(None, "model", None),
         check_vma=False,
     )(q_block, k_flat, seg_ids)
+
+
+def dequantize_gathered(gathered, kv_quant: str, dtypes):
+    """KV-load dequantization point for the Reuse stages (docs/memory.md).
+
+    Under ``ServeConfig.kv_quant="int8"`` the slot pool's gather returns
+    the QUANTIZED view ``{"data": int8-leaf tree, "scale": per-leaf
+    [L, B] f32}`` so the pool — and the HBM traffic across the gather —
+    stays int8; this helper, called at the top of every Reuse stage jit
+    (packed varlen kernels and the padded jnp oracle alike), scales the KV
+    leaves back to ``dtypes`` inside the SAME XLA program as the attention
+    kernels, so the dequantized tensors are transient activations fused
+    into the kernel's KV load, never pool state.
+
+    The unquantized path passes the gathered cache through untouched —
+    billed as itself (the bit-exact oracle); there is no silent third mode
+    (`KVPool` validates ``kv_quant`` at construction).
+    """
+    if kv_quant == "none":
+        return gathered
+    from repro.kernels.kv_quant import dequantize_slot_leaves
+    return dequantize_slot_leaves(gathered["data"], gathered["scale"],
+                                  dtypes)

@@ -23,10 +23,12 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.configs.base import ServeConfig
 from repro.core.baselines import size_slots, system_profiles
+from repro.core.budgeting import plan_memory
 from repro.core.engine import Engine
 from repro.core.faults import FaultPlan
 from repro.core.request import State
-from repro.data.workloads import make_trace, trace_prompts
+from repro.data.workloads import make_trace, prefix_share_factor, \
+    trace_prompts
 from repro.launch.mesh import parse_mesh_env
 
 
@@ -43,7 +45,9 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
               deadline_slack: float = float("inf"),
               preempt_starvation_s: float = 0.0,
               fault_seed: Optional[int] = None,
-              kernels: Optional[bool] = None) -> dict:
+              kernels: Optional[bool] = None,
+              prefix_sharing: bool = False,
+              kv_quant: str = "none") -> dict:
     import dataclasses
     cfg = get_config(arch)
     full_cfg = cfg
@@ -56,7 +60,8 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         max_slots=max_slots, max_refresh_per_iter=4,
         mesh_shape=tuple(mesh_shape) if mesh_shape else None,
         queue_cap=queue_cap, queue_policy=queue_policy,
-        preempt_starvation_s=preempt_starvation_s)
+        preempt_starvation_s=preempt_starvation_s,
+        prefix_sharing=prefix_sharing, kv_quant=kv_quant)
     serve = system_profiles(base)[system]
     if kernels:
         # Pallas hot paths on top of the system profile (shard_mapped per
@@ -67,17 +72,29 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
     elif kernels is not None:
         serve = dataclasses.replace(serve, use_flash_kernel=False,
                                     logit_mode="chunked")
+    # trace first: the profiler's sharing-aware sizing reads the trace's
+    # measured share factor (a pure function of the trace, drawn before any
+    # engine state exists — sizing cannot perturb the workload stream)
+    trace = make_trace(workload, n, rps, seed=seed, scale=length_scale,
+                       deadline_slack=deadline_slack)
+    share = prefix_share_factor(trace) if serve.prefix_sharing else 1.0
+    plan = None
     if size_by_profiler:
         # Offline profiler (§4.2) at FULL-model geometry and paper Table 3
         # settings decides each system's concurrency: monolithic logit
         # reservations and dense caches buy fewer KV slots — the paper's
         # capacity coupling, carried into the (scaled) serving run. The
         # mesh_shape rides along, so an N-device mesh is sized by its
-        # per-device arithmetic (hbm_gb = one device's HBM).
+        # per-device arithmetic (hbm_gb = one device's HBM). Sharing and
+        # int8 KV lift the plan's capacity (docs/memory.md); the engine's
+        # allocation clamps to PHYSICAL capacity (size_slots).
         plan_serve = dataclasses.replace(
             serve, max_seq_len=2048, max_num_batched_tokens=4000,
             max_num_logits=2048, max_slots=max_slots)
-        sized = size_slots(full_cfg, plan_serve, hbm_gb << 30)
+        plan = plan_memory(full_cfg, plan_serve, hbm_gb << 30,
+                           share_factor=share)
+        sized = size_slots(full_cfg, plan_serve, hbm_gb << 30,
+                           share_factor=share)
         serve = dataclasses.replace(serve,
                                     max_slots=max(1, sized.max_slots))
     faults = FaultPlan.seeded(fault_seed) if fault_seed is not None else None
@@ -86,8 +103,6 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         print(f"mesh: {eng.mesh_devices} devices "
               f"({'x'.join(map(str, serve.mesh_shape))})")
     warmup_s = eng.warmup()      # AOT compile outside the measured window
-    trace = make_trace(workload, n, rps, seed=seed, scale=length_scale,
-                       deadline_slack=deadline_slack)
     prompts = trace_prompts(trace, cfg.vocab_size, seed=seed)
     reqs = []
     for i, (t, p) in enumerate(zip(trace, prompts)):
@@ -152,6 +167,17 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         compiles_warmup=stats.compiles_warmup,
         compiles_post_warmup=stats.compiles_post_warmup,
         max_slots=serve.max_slots,
+        # memory-footprint multipliers (docs/memory.md): what ran, what the
+        # ledger measured, and what the profiler planned from the trace
+        prefix_sharing=serve.prefix_sharing,
+        kv_quant=serve.kv_quant,
+        share_factor=share,
+        shared_hits=stats.shared_hits,
+        shared_cow_promotes=stats.shared_cow_promotes,
+        phys_slots_peak=stats.phys_slots_peak,
+        plan_slots_logical=plan.max_slots if plan else None,
+        plan_slots_phys=plan.phys_slots if plan else None,
+        plan_slot_bytes=plan.slot_bytes if plan else None,
         mesh_shape=list(serve.mesh_shape) if serve.mesh_shape else None,
         mesh_devices=eng.mesh_devices,
         # True when the Pallas hot paths served this run (under a mesh they
@@ -203,6 +229,13 @@ def main():
                     help="force the Pallas hot paths (use_flash_kernel + "
                          "logit_mode=fused) on top of the system profile; "
                          "shard_mapped per model shard under a mesh")
+    ap.add_argument("--sharing", action="store_true",
+                    help="content-addressed prefix sharing in the KV pool "
+                         "(COW on divergence; token output bit-identical "
+                         "to sharing off — docs/memory.md)")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="KV slot storage dtype (int8: per-slot abs-max "
+                         "scales, dequantized at the Reuse KV load)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mesh == "env":
@@ -218,7 +251,8 @@ def main():
                     deadline_slack=args.deadline,
                     preempt_starvation_s=args.preempt_starvation,
                     fault_seed=args.faults,
-                    kernels=True if args.kernels else None)
+                    kernels=True if args.kernels else None,
+                    prefix_sharing=args.sharing, kv_quant=args.kv_quant)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

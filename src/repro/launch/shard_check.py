@@ -46,29 +46,35 @@ COUNTERS = ("committed_tokens", "iterations", "refresh_steps", "reuse_steps",
             "logit_tokens_real", "logit_tokens_exec")
 
 
-def serve_trace(cfg, serve, n: int, seed: int, warmup: bool):
+def serve_trace(cfg, serve, n: int, seed: int, warmup: bool,
+                duplicate: bool = False):
     eng = Engine(cfg, serve, seed=seed)
     if warmup:
         eng.warmup()
     rng = np.random.default_rng(seed)
-    reqs = [eng.submit(rng.integers(0, cfg.vocab_size - 1,
-                                    int(rng.integers(8, 48))),
-                       gen_len=16, arrival=0.0, rid=i)
-            for i in range(n)]
+    prompts = [rng.integers(0, cfg.vocab_size - 1, int(rng.integers(8, 48)))
+               for _ in range(n)]
+    if duplicate:
+        # pair requests onto identical prompts so content-addressed sharing
+        # engages; the rng stream is drawn in full first, so the duplicated
+        # trace differs from the unique one only by the aliasing
+        prompts = [prompts[i // 2] for i in range(n)]
+    reqs = [eng.submit(p, gen_len=16, arrival=0.0, rid=i)
+            for i, p in enumerate(prompts)]
     stats = eng.run()
     return eng, reqs, stats
 
 
 def check(arch: str, mesh_shape, n: int = 5, seed: int = 0,
           varlen: bool = True, warmup: bool = False,
-          kernels: bool = False) -> dict:
+          kernels: bool = False, sharing: bool = False) -> dict:
     import jax
     cfg = reduced(ARCHS[arch])
     serve = ServeConfig(
         max_num_batched_tokens=512, max_num_logits=64, block_size=8,
         steps_per_block=8, max_seq_len=128, max_slots=8,
         max_refresh_per_iter=2, logit_mode="chunked",
-        varlen_pack=varlen, token_bucket=64)
+        varlen_pack=varlen, token_bucket=64, prefix_sharing=sharing)
     if kernels:
         # Pallas hot paths on BOTH runs: the reference is the 1-device
         # kernel run, so agreement proves the shard_mapped kernels (not a
@@ -76,14 +82,30 @@ def check(arch: str, mesh_shape, n: int = 5, seed: int = 0,
         serve = dataclasses.replace(serve, use_flash_kernel=True,
                                     logit_mode="fused")
     # reference FIRST: the sharding policy a mesh engine installs must not
-    # retroactively touch the single-device anchor
-    eng_ref, r_ref, st_ref = serve_trace(cfg, serve, n, seed, warmup=False)
+    # retroactively touch the single-device anchor. Under --sharing both
+    # runs serve duplicated prompts, so agreement additionally proves the
+    # refcounted pool (dedup hits, COW promotes, promote-on-release target
+    # choice) is device-count invariant.
+    eng_ref, r_ref, st_ref = serve_trace(cfg, serve, n, seed, warmup=False,
+                                         duplicate=sharing)
     mesh_serve = dataclasses.replace(serve, mesh_shape=tuple(mesh_shape))
     eng, r_mesh, st_mesh = serve_trace(cfg, mesh_serve, n, seed,
-                                       warmup=warmup)
+                                       warmup=warmup, duplicate=sharing)
     out = dict(arch=arch, varlen=varlen, mesh=list(mesh_shape),
                mesh_devices=eng.mesh_devices, n=n, kernels=kernels,
-               kernels_active=eng.kernels_active, ok=True, diffs=[])
+               kernels_active=eng.kernels_active, sharing=sharing,
+               shared_hits=st_mesh.shared_hits,
+               shared_cow_promotes=st_mesh.shared_cow_promotes,
+               ok=True, diffs=[])
+    if sharing:
+        for name in ("shared_hits", "shared_cow_promotes",
+                     "phys_slots_peak"):
+            va, vb = getattr(st_ref, name), getattr(st_mesh, name)
+            if va != vb:
+                out["diffs"].append(f"stats.{name}: {va} != {vb}")
+        if st_mesh.shared_hits == 0:
+            out["diffs"].append("sharing requested but no dedup hits — "
+                                "the check proved nothing")
     if eng.mesh_devices != int(np.prod(mesh_shape)):
         out["diffs"].append("mesh collapsed to "
                             f"{eng.mesh_devices} devices")
@@ -132,13 +154,17 @@ def main():
                     help="Pallas hot paths on both runs (use_flash_kernel + "
                          "logit_mode=fused): proves the shard_mapped "
                          "kernels match the 1-device kernel run")
+    ap.add_argument("--sharing", action="store_true",
+                    help="refcounted prefix sharing on both runs over "
+                         "duplicated prompts: proves the ledger (hits, COW "
+                         "promotes) is device-count invariant")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     mesh = (tuple(int(x) for x in args.mesh.split(","))
             if args.mesh else (parse_mesh_env() or (1, 2)))
     res = check(args.arch, mesh, n=args.n, seed=args.seed,
                 varlen=not args.padded, warmup=args.warmup,
-                kernels=args.kernels)
+                kernels=args.kernels, sharing=args.sharing)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

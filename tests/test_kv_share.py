@@ -1,0 +1,396 @@
+"""Shared-prefix KV pool + int8 slot storage (docs/memory.md).
+
+Three layers of proof, mirroring the contract's three claims:
+
+* **Ledger properties** — hypothesis-driven random interleavings of
+  record_write/release against a pure-python model store: no leaked or
+  double-freed content, refcounts never negative, promotes only ever copy
+  live bytes to a live referrer, and a simulated "device" driven only by
+  the ledger's (do_write, promote) outputs always serves every logical
+  slot its correct content.
+* **Pool integration** — deterministic COW sequences against a real KVPool
+  with a tiny cache tree: dedup'd writes share one physical row, divergence
+  promotes before the new bytes land, free-while-shared never tears.
+* **End-to-end bit-identity** — the shared-prefix trace served with
+  sharing ON is bit-identical (token ids + conserved EngineStats) to
+  sharing OFF across padded/packed × attention/SSM, with dedup hits
+  actually observed (a vacuous pass is a failure).
+
+int8 storage: per-dtype round-trip error bounds (the documented tolerance
+policy), packed-vs-padded agreement under quantized serving, and the
+``plan_memory`` capacity lifts for both multipliers.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.configs.base import ServeConfig
+from repro.core.budgeting import kv_slot_bytes, plan_memory
+from repro.core.engine import Engine
+from repro.core.kv_pool import KVPool
+from repro.core.request import State
+from repro.core.share_ledger import ShareLedger, block_chain_key, content_key
+from repro.data.workloads import PrefixSpec, make_trace, trace_prompts
+from repro.kernels import kv_quant as KQ
+from repro.kernels import ops as OPS
+from repro.models.sparse_select import PackedKV
+
+SERVE = ServeConfig(max_num_batched_tokens=512, max_num_logits=64,
+                    block_size=8, steps_per_block=8, max_seq_len=128,
+                    max_slots=6, max_refresh_per_iter=2,
+                    selection="head", scheduler="phase", logit_mode="chunked",
+                    varlen_pack=True, token_bucket=64)
+
+
+# ---------------------------------------------------------------------------
+# content keys
+# ---------------------------------------------------------------------------
+
+def test_block_chain_key_is_prefix_chain():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 100, 64).astype(np.int32)
+    b = a.copy()
+    assert block_chain_key(a, 8) == block_chain_key(b, 8)
+    b[-1] += 1                      # divergence in the LAST block only
+    assert block_chain_key(a, 8) != block_chain_key(b, 8)
+    # the chain property: equal prefixes hash equal at every block boundary
+    assert block_chain_key(a[:32], 8) == block_chain_key(b[:32], 8)
+
+
+def test_content_key_covers_geometry_and_frontend():
+    t = np.arange(64, dtype=np.int32)
+    k0 = content_key(t, 8, 64, 32, None)
+    assert content_key(t, 8, 64, 32, None) == k0
+    assert content_key(t, 8, 60, 32, None) != k0        # total_len differs
+    assert content_key(t, 8, 64, 40, None) != k0        # block_start differs
+    fe = np.ones((2, 4), np.float32)
+    kf = content_key(t, 8, 64, 32, fe)
+    assert kf != k0
+    assert content_key(t, 8, 64, 32, fe * 2) != kf      # frontend content
+
+
+# ---------------------------------------------------------------------------
+# ledger properties (hypothesis interleavings vs a model store)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10**9), n_slots=st.integers(2, 8),
+       n_keys=st.integers(1, 5))
+def test_ledger_random_interleavings(seed, n_slots, n_keys):
+    """Drive 200 random write/release ops; after every op the ledger's full
+    invariant suite holds and a simulated device — mutated ONLY as the
+    ledger's outputs dictate — serves every logical slot its true content."""
+    rng = np.random.default_rng(seed)
+    led = ShareLedger()
+    model = {}       # logical slot -> content key it should read
+    phys = {}        # physical row -> key actually stored on "device"
+    for _ in range(200):
+        slot = int(rng.integers(0, n_slots))
+        if rng.integers(0, 3) < 2:                       # write
+            key = bytes([int(rng.integers(0, n_keys))])
+            before = dict(model)
+            do_write, promote = led.record_write(slot, key)
+            if promote is not None:
+                src, dst = promote
+                # promote law: dst was a live referrer of src's old content
+                assert before.get(dst) == before.get(slot)
+                assert dst != slot and dst in model
+                phys[dst] = phys[src]
+            if do_write:
+                phys[slot] = key
+            model[slot] = key
+        else:                                            # release
+            promote = led.release(slot)
+            if promote is not None:
+                src, dst = promote
+                assert model.get(dst) == model.get(slot)
+                phys[dst] = phys[src]
+            model.pop(slot, None)
+        led.check()
+        assert set(led.owner_of) == set(model)
+        assert led.phys_slots == len(set(model.values()))
+        for s, k in model.items():
+            assert led.refcount(led.resolve(s)) >= 1
+            assert phys[led.resolve(s)] == k, \
+                f"slot {s} would gather stale bytes"
+        for s in range(n_slots):
+            assert led.refcount(s) >= 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**9), n_slots=st.integers(2, 6))
+def test_ledger_generation_monotonic_under_pool(seed, n_slots):
+    """Pool-level interleavings of take/write_shared/free: slot generations
+    only ever grow, no content leaks past the last release, and double-free
+    still raises with the ledger in the loop."""
+    rng = np.random.default_rng(seed)
+    pool = KVPool(n_slots, sharing=True)
+    gens = np.zeros(n_slots, np.int64)
+    held = set()
+    cache = {"x": jnp.zeros((2, 1, 4), jnp.float32)}
+    for _ in range(80):
+        op = int(rng.integers(0, 3))
+        slot = int(rng.integers(0, n_slots))
+        if op == 0 and slot not in held:
+            g = pool.take(slot)
+            assert g >= gens[slot]
+            gens[slot] = g
+            held.add(slot)
+        elif op == 1 and held:
+            s = sorted(held)[int(rng.integers(0, len(held)))]
+            key = bytes([int(rng.integers(0, 3))])
+            pool.write_shared([s], cache, [key])
+        elif op == 2 and held:
+            s = sorted(held)[int(rng.integers(0, len(held)))]
+            pool.free([s])
+            held.discard(s)
+            with pytest.raises(RuntimeError):
+                pool.free([s])
+            assert pool.generation(s) > gens[s]
+            gens[s] = pool.generation(s)
+        pool.ledger.check()
+        assert pool.phys_slots_in_use <= len(held)
+    pool.free(sorted(held))
+    assert pool.slots_in_use == [] and pool.phys_slots_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# pool integration (deterministic COW sequences)
+# ---------------------------------------------------------------------------
+
+def _tiny_cache(val: float):
+    return {"kv": jnp.full((2, 1, 3), val, jnp.float32)}
+
+
+def _row(pool, slot):
+    return np.asarray(pool.gather([slot])["kv"])[:, 0]
+
+
+def test_pool_dedup_shares_one_row_and_cow_promotes():
+    pool = KVPool(4, sharing=True)
+    for s in (0, 1, 2):
+        pool.take(s)
+    pool.write_shared([0], _tiny_cache(1.0), [b"A"])
+    pool.write_shared([1], _tiny_cache(1.0), [b"A"])     # dedup hit
+    pool.write_shared([2], _tiny_cache(2.0), [b"B"])
+    assert pool.ledger.hits == 1
+    assert pool.phys_slots_in_use == 2                   # A + B
+    assert np.all(_row(pool, 0) == 1.0) and np.all(_row(pool, 1) == 1.0)
+    # slot 0 (the owner of A) diverges: its bytes must survive on slot 1
+    pool.write_shared([0], _tiny_cache(3.0), [b"C"])
+    assert pool.ledger.cow_promotes == 1
+    assert np.all(_row(pool, 0) == 3.0)
+    assert np.all(_row(pool, 1) == 1.0), "referrer lost its bytes to COW"
+    # free-while-shared: re-share then free the owner; referrer keeps bytes
+    pool.write_shared([0], _tiny_cache(2.0), [b"B"])     # join slot 2's B
+    assert pool.ledger.hits == 2
+    pool.free([2])                                       # owner of B dies
+    assert np.all(_row(pool, 0) == 2.0), "promote-on-release tore content"
+    pool.free([0, 1])
+    assert pool.phys_slots_in_use == 0 and pool.slots_in_use == []
+
+
+def test_pool_write_shared_requires_sharing():
+    pool = KVPool(2)
+    with pytest.raises(RuntimeError, match="sharing"):
+        pool.write_shared([0], _tiny_cache(1.0), [b"A"])
+
+
+def test_pool_rejects_quant_with_mesh_and_bad_mode():
+    with pytest.raises(ValueError):
+        KVPool(2, kv_quant="int4")
+    with pytest.raises(NotImplementedError):
+        KVPool(2, shardings={"x": None}, kv_quant="int8")
+
+
+# ---------------------------------------------------------------------------
+# int8 storage: round-trip bounds + quantized pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_roundtrip_error_bound(dtype):
+    """|x - dq(q(x))| <= roundtrip_bound(per-slot absmax, dtype) — the
+    documented tolerance policy (docs/memory.md), checked leaf-wise over
+    random caches with per-slot dynamic ranges spanning 4 decades."""
+    rng = np.random.default_rng(7)
+    L, B, H, T = 2, 5, 3, 4
+    scales = 10.0 ** rng.uniform(-2, 2, (L, B))
+    x = (rng.standard_normal((L, B, H, T)) * scales[..., None, None])
+    kv = jnp.asarray(x, dtype)
+    cache = PackedKV(k=kv, v=kv,
+                     pos=jnp.zeros((L, B, H), jnp.int32),
+                     valid=jnp.ones((L, B, H), jnp.bool_))
+    q, sc = KQ.quantize_slot_leaves(cache)
+    assert q.k.dtype == jnp.int8 and q.pos.dtype == jnp.int32
+    dtypes = {i: dtype for i in sc}
+    dq = KQ.dequantize_slot_leaves(q, sc, dtypes)
+    xf = np.asarray(kv, np.float32)          # storage-visible values
+    absmax = np.abs(xf).max(axis=(2, 3))
+    err = np.abs(np.asarray(dq.k, np.float32) - xf)
+    bound = np.vectorize(lambda a: KQ.roundtrip_bound(a, dtype))(absmax)
+    assert np.all(err.max(axis=(2, 3)) <= bound + 1e-9), \
+        (err.max(axis=(2, 3)) / bound).max()
+    # pos/valid leaves pass through untouched
+    assert np.array_equal(np.asarray(dq.pos), np.asarray(cache.pos))
+
+
+def test_dequantize_gathered_is_identity_without_quant():
+    g = {"anything": jnp.ones((2, 2))}
+    assert OPS.dequantize_gathered(g, "none", None) is g
+
+
+def test_quant_mask_selects_only_kv_leaves():
+    cache = {"kv": PackedKV(k=1.0, v=2.0, pos=3, valid=True),
+             "ssm_state": jnp.zeros((2, 1, 4), jnp.float32)}
+    flags = KQ.quant_leaf_flags(cache)
+    leaves = jax.tree.leaves(KQ.quant_mask(cache))
+    assert flags == leaves
+    assert sum(flags) == 2                  # k and v only, never SSM state
+
+
+def test_quantized_pool_roundtrips_through_gather():
+    pool = KVPool(3, kv_quant="int8")
+    kv = jnp.asarray(np.linspace(-2, 2, 2 * 1 * 4).reshape(2, 1, 4),
+                     jnp.float32)
+    cache = PackedKV(k=kv, v=kv * 0.5,
+                     pos=jnp.zeros((2, 1), jnp.int32),
+                     valid=jnp.ones((2, 1), jnp.bool_))
+    pool.take(1)
+    pool.write(
+        [1], cache)
+    g = pool.gather([1])
+    assert set(g) == {"data", "scale"}
+    dq = OPS.dequantize_gathered(g, "int8", pool.gathered_dtypes)
+    bound = KQ.roundtrip_bound(2.0, jnp.float32)
+    assert np.abs(np.asarray(dq.k)[:, 0] - np.asarray(kv)[:, 0]).max() \
+        <= bound
+    assert np.array_equal(np.asarray(dq.pos), np.asarray(cache.pos))
+
+
+# ---------------------------------------------------------------------------
+# plan_memory capacity lifts
+# ---------------------------------------------------------------------------
+
+def test_plan_memory_int8_strictly_more_slots():
+    cfg = get_config("llada-8b")
+    s = ServeConfig(max_num_batched_tokens=4000, max_num_logits=2048,
+                    max_seq_len=2048, max_slots=4096, logit_mode="chunked")
+    hbm = 48 << 30
+    p0 = plan_memory(cfg, s, hbm)
+    pq = plan_memory(cfg, dataclasses.replace(s, kv_quant="int8"), hbm)
+    assert kv_slot_bytes(cfg, dataclasses.replace(s, kv_quant="int8")) < \
+        kv_slot_bytes(cfg, s)
+    assert pq.max_slots > p0.max_slots
+    assert pq.phys_slots > p0.phys_slots     # int8 grows PHYSICAL capacity
+    assert "int8" in pq.summary()
+
+
+def test_plan_memory_sharing_at_least_doubles_slots():
+    """The acceptance criterion: at equal HBM, sharing ON with the
+    shared-prefix trace's measured share factor plans >= 2x the slots of
+    sharing OFF — as LOGICAL capacity; physical capacity is unchanged
+    (the reserved-backing pool allocates physical rows only)."""
+    from repro.data.workloads import prefix_share_factor
+    trace = make_trace("shared-prefix", 64, rps=4.0, seed=0,
+                       prefix=PrefixSpec(n_prefixes=4, prefix_len=64))
+    share = prefix_share_factor(trace)
+    assert share >= 2.0                      # 64 reqs over <= 4x few groups
+    cfg = get_config("llada-8b")
+    s = ServeConfig(max_num_batched_tokens=4000, max_num_logits=2048,
+                    max_seq_len=2048, max_slots=4096, logit_mode="chunked")
+    hbm = 48 << 30
+    p_off = plan_memory(cfg, s, hbm)
+    p_on = plan_memory(cfg, dataclasses.replace(s, prefix_sharing=True),
+                       hbm, share_factor=share)
+    assert p_on.max_slots >= 2 * p_off.max_slots
+    assert p_on.phys_slots == p_off.max_slots
+    # share_factor without the flag must be inert (ternary, not a branch)
+    p_flag_off = plan_memory(cfg, s, hbm, share_factor=share)
+    assert p_flag_off.max_slots == p_off.max_slots
+
+
+# ---------------------------------------------------------------------------
+# end-to-end bit-identity: sharing ON == OFF
+# ---------------------------------------------------------------------------
+
+E2E_COUNTERS = ("committed_tokens", "iterations", "refresh_steps",
+                "reuse_steps", "refresh_tokens_real", "reuse_tokens_real",
+                "logit_tokens_real", "preemptions")
+
+
+def _serve_shared_trace(arch, varlen, sharing, kv_quant="none", n=8):
+    cfg = reduced(ARCHS[arch])
+    serve = dataclasses.replace(SERVE, varlen_pack=varlen,
+                                prefix_sharing=sharing, kv_quant=kv_quant,
+                                preempt_starvation_s=0.05)
+    eng = Engine(cfg, serve, seed=0, clock="modeled")
+    trace = make_trace("shared-prefix", n, rps=8.0, seed=3,
+                       prefix=PrefixSpec(n_prefixes=3, prefix_len=24))
+    prompts = trace_prompts(trace, cfg.vocab_size, seed=3)
+    # arrival 0 for everyone: co-resident duplicates are what the
+    # slot-granular ledger can dedup (requests that arrive after their
+    # twin has advanced past block 0 share nothing — docs/memory.md), and
+    # with max_slots < n the starvation preemption path runs under sharing
+    reqs = [eng.submit(p, gen_len=16, arrival=0.0, rid=i)
+            for i, (t, p) in enumerate(zip(trace, prompts))]
+    stats = eng.run()
+    return eng, reqs, stats
+
+
+@pytest.mark.parametrize("arch", ["llada-8b", "mamba2-130m"])
+@pytest.mark.parametrize("varlen", [True, False])
+def test_e2e_sharing_bit_identical(arch, varlen):
+    """Sharing is a pure storage optimization: ON and OFF runs of the
+    shared-prefix trace agree on every token id and every scheduling
+    counter, on the packed engine AND the padded oracle, for attention and
+    SSM state alike — and the ON run actually dedups (non-vacuous)."""
+    _, r_off, s_off = _serve_shared_trace(arch, varlen, sharing=False)
+    eng, r_on, s_on = _serve_shared_trace(arch, varlen, sharing=True)
+    assert s_on.shared_hits > 0, "trace produced no sharing — vacuous test"
+    assert s_on.conserved() and s_off.conserved()
+    for name in E2E_COUNTERS:
+        assert getattr(s_on, name) == getattr(s_off, name), name
+    for a, b in zip(r_off, r_on):
+        assert a.state == b.state
+        if a.state == State.FINISHED:
+            assert np.array_equal(a.output_tokens(), b.output_tokens()), \
+                f"rid {a.rid} diverged under sharing"
+    # all references released at drain; peak physical occupancy beat the
+    # logical resident count (the footprint claim, measured not planned)
+    assert eng.pool.slots_in_use == [] and eng.pool.phys_slots_in_use == 0
+    assert 0 < s_on.phys_slots_peak <= SERVE.max_slots
+    eng.pool.ledger.check()
+
+
+def test_e2e_int8_packed_matches_padded():
+    """Packed-vs-padded agreement under quantized serving: both paths
+    read the SAME int8 pool through the same dequant law, so at this scale
+    (confidence margins >> one quantization step; docs/memory.md tolerance
+    policy) token ids stay exactly equal."""
+    _, r_pad, s_pad = _serve_shared_trace("llada-8b", False, False, "int8")
+    _, r_pk, s_pk = _serve_shared_trace("llada-8b", True, False, "int8")
+    assert s_pad.conserved() and s_pk.conserved()
+    for a, b in zip(r_pad, r_pk):
+        assert np.array_equal(a.output_tokens(), b.output_tokens())
+
+
+def test_e2e_sharing_composes_with_int8():
+    _, r_off, s_off = _serve_shared_trace("llada-8b", True, False, "int8")
+    _, r_on, s_on = _serve_shared_trace("llada-8b", True, True, "int8")
+    assert s_on.shared_hits > 0
+    for a, b in zip(r_off, r_on):
+        assert np.array_equal(a.output_tokens(), b.output_tokens())
+
+
+def test_engine_rejects_bad_quant_and_quant_mesh():
+    cfg = reduced(ARCHS["llada-8b"])
+    with pytest.raises(ValueError):
+        Engine(cfg, dataclasses.replace(SERVE, kv_quant="fp4"), seed=0)
+    with pytest.raises(NotImplementedError):
+        Engine(cfg, dataclasses.replace(SERVE, kv_quant="int8",
+                                        mesh_shape=(1, 1)), seed=0)

@@ -125,6 +125,10 @@ def test_mesh_engine_rejects_indivisible_kernel_dims():
     # data-axis mesh: slot pool sharded over 'data' (padded slot axis),
     # replica streams serve the same trace bit-identically
     ("llada-8b", ["--kernels", "--mesh", "2,1"]),
+    # refcounted prefix sharing over duplicated prompts: dedup hits, COW
+    # promotes, and the promote-on-release target choice must be
+    # device-count invariant (1-device run == 2-device mesh run)
+    ("llada-8b", ["--sharing", "--n", "6"]),
 ])
 def test_shard_agreement_subprocess(arch, extra, tmp_path):
     out = tmp_path / "agree.json"
@@ -136,3 +140,7 @@ def test_shard_agreement_subprocess(arch, extra, tmp_path):
     rec = json.loads(out.read_text())
     assert rec["ok"], rec
     assert rec["mesh_devices"] == 2, rec
+    if "--sharing" in extra:
+        # shard_check itself fails on zero hits, but pin it here too:
+        # a vacuous agreement run must never count as coverage
+        assert rec["shared_hits"] > 0, rec

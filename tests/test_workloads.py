@@ -1,9 +1,14 @@
-"""Synthetic workload traces: statistical/structural properties."""
+"""Synthetic workload traces: statistical/structural properties, plus the
+seed-stability pins that protect the deterministic-deadline contract (the
+prefix-sharing machinery must never perturb the established streams)."""
+import hashlib
+
 import numpy as np
 import pytest
 from _hyp_compat import given, settings, st
 
-from repro.data.workloads import WORKLOADS, make_trace, trace_prompts
+from repro.data.workloads import (PrefixSpec, WORKLOADS, make_trace,
+                                  prefix_share_factor, trace_prompts)
 
 
 @pytest.mark.parametrize("name", WORKLOADS)
@@ -39,3 +44,82 @@ def test_scaling_property(seed, rps):
     assert all(t.prompt_len >= 4 for t in tr)
     full = make_trace("burst", 30, rps=rps, seed=seed, scale=1.0)
     assert sum(t.prompt_len for t in tr) < sum(t.prompt_len for t in full)
+
+
+# ---------------------------------------------------------------------------
+# seed-stability regression: the established streams are pinned
+# ---------------------------------------------------------------------------
+
+def _stream_digest(name, n=20, rps=2.0, seed=7, vocab=997):
+    tr = make_trace(name, n, rps=rps, seed=seed)
+    pr = trace_prompts(tr, vocab_size=vocab, seed=seed)
+    h = hashlib.blake2b(digest_size=8)
+    for t in tr:
+        h.update(np.float64(t.arrival).tobytes())
+        h.update(np.int64([t.prompt_len, t.gen_len]).tobytes())
+    for p in pr:
+        h.update(p.tobytes())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("name,golden", [
+    ("livebench", "a620ca93137f265f"),
+    ("burst", "de96e4153cfb2ca9"),
+    ("osc", "f647ab33a09e163c"),
+])
+def test_existing_streams_pinned(name, golden):
+    """Byte-exact pins of the three pre-existing workloads (verified
+    against the pre-prefix-pool implementation). The prefix machinery is
+    only allowed to touch DERIVED rng streams — any drift here breaks PR
+    6's deadline determinism and every trace-replay comparison."""
+    assert _stream_digest(name) == golden
+
+
+def test_trace_prompts_draws_once_per_request():
+    """The prefix pool must not add main-stream draws: a prefix-annotated
+    trace and a plain trace of identical geometry consume the SAME main
+    stream (prefix content is overlaid from derived streams afterwards)."""
+    tr = make_trace("shared-prefix", 12, rps=2.0, seed=5)
+    plain = [type(t)(t.arrival, t.prompt_len, t.gen_len) for t in tr]
+    with_pool = trace_prompts(tr, vocab_size=997, seed=5)
+    without = trace_prompts(plain, vocab_size=997, seed=5)
+    for a, b, t in zip(with_pool, without, tr):
+        assert a.shape == b.shape
+        # beyond the prefix overlay the draws are byte-identical
+        assert np.array_equal(a[t.prefix_len:], b[t.prefix_len:])
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix trace structure
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_pool_verbatim_and_grouped():
+    spec = PrefixSpec(n_prefixes=3, prefix_len=16)
+    tr = make_trace("shared-prefix", 24, rps=4.0, seed=2, prefix=spec)
+    assert all(0 <= t.prefix_id < 3 for t in tr)
+    assert len({t.prefix_id for t in tr}) > 1          # pool actually used
+    prompts = trace_prompts(tr, vocab_size=997, seed=2)
+    by_id = {}
+    for t, p in zip(tr, prompts):
+        assert t.prompt_len == t.prefix_len == 16      # tail_len=0 default
+        by_id.setdefault(t.prefix_id, []).append(p)
+    for ps in by_id.values():
+        for p in ps[1:]:
+            assert np.array_equal(p, ps[0]), "pool draw not verbatim"
+    # same-id prompts identical => the share factor counts them as one
+    groups = {(t.prefix_id, t.gen_len) for t in tr}
+    assert prefix_share_factor(tr) == pytest.approx(24 / len(groups))
+
+
+def test_shared_prefix_deterministic_and_deadline_pure():
+    a = make_trace("shared-prefix", 10, rps=2.0, seed=9)
+    b = make_trace("shared-prefix", 10, rps=2.0, seed=9,
+                   deadline_slack=0.5)
+    for x, y in zip(a, b):
+        assert (x.arrival, x.prompt_len, x.gen_len, x.prefix_id) == \
+            (y.arrival, y.prompt_len, y.gen_len, y.prefix_id)
+        assert y.deadline == pytest.approx(y.arrival + 0.5)
+
+
+def test_prefix_share_factor_unique_trace_is_one():
+    assert prefix_share_factor(make_trace("livebench", 20, rps=2.0)) == 1.0
