@@ -1,0 +1,77 @@
+"""Engine-loop benchmark: pipelined dispatch-ahead vs the synchronous oracle.
+
+Same Burst trace, same seed, two loops (docs/engine.md):
+
+* ``sync`` — ``pipeline=False``: plan, fill, dispatch, block on the
+  device_get, commit — one full host/device round trip per iteration.
+* ``pipelined`` — ``pipeline=True``: iteration i+1's plan/layout is built
+  while iteration i is still in flight; ONE deferred device_get per
+  iteration lands the previous results.
+
+Token output is bit-identical by construction (the bit-identity suite,
+tests/test_engine_pipeline.py, asserts ids + stats + caches exact), so the
+rows here are purely about the loop's host economics: per-iteration step
+time, how much host work was hidden (``overlap_frac`` — structural, 0 for
+sync by definition), and wall-clock vs modeled throughput.
+
+``record(quick)`` returns the dict committed as ``BENCH_engine.json`` by
+``benchmarks.run --record`` (auto-diffed by diff_bench's BENCH_* glob).
+"""
+from repro.launch.serve import run_serve
+
+
+def _serve(pipeline: bool, quick: bool = True, clock: str = "wall") -> dict:
+    # size_by_profiler=False pins max_slots so the artifact is stable
+    # across profiler changes; burst gives the scheduler enough concurrent
+    # residents that plan/fill host work is non-trivial per iteration.
+    return run_serve("llada-8b", "dllm-serve", "burst",
+                     rps=4.0, n=6 if quick else 16, seed=0,
+                     max_slots=6, size_by_profiler=False,
+                     clock=clock, pipeline=pipeline)
+
+
+def _step_us(r: dict) -> float:
+    return 1e6 * r["wall_clock_s"] / max(r["iterations"], 1)
+
+
+def run(quick: bool = True):
+    sync = _serve(False, quick)
+    pipe = _serve(True, quick)
+    out = [
+        ("engine/sync/step_time", _step_us(sync),
+         f"{sync['iterations']}iters"),
+        ("engine/pipelined/step_time", _step_us(pipe),
+         f"{pipe['iterations']}iters"),
+        ("engine/pipelined/overlap_frac", 0.0,
+         f"{pipe['overlap_frac']:.4f}"),
+        ("engine/pipelined/dispatched_ahead", 0.0,
+         f"{pipe['dispatched_ahead']}/{pipe['iterations']}"),
+        ("engine/wall_vs_modeled_tok_s", 0.0,
+         f"{pipe['wall_tok_s']:.1f}wall/{pipe['throughput_tok_s']:.1f}mod"),
+        ("engine/bit_identity", 0.0,
+         "ok" if sync["committed_tokens"] == pipe["committed_tokens"]
+         else "VIOLATED"),
+    ]
+    return out
+
+
+def record(quick: bool = True) -> dict:
+    sync = _serve(False, quick)
+    pipe = _serve(True, quick)
+    keys = ("rps", "n", "iterations", "committed_tokens",
+            "throughput_tok_s", "wall_tok_s", "wall_clock_s",
+            "host_plan_s", "host_fill_s", "sync_wait_s",
+            "overlapped_host_s", "overlap_frac", "dispatched_ahead",
+            "compiles_post_warmup", "max_slots")
+    return {
+        "sync": {k: sync[k] for k in keys},
+        "pipelined": {k: pipe[k] for k in keys},
+        # the loop restructure's two contracts, recorded so a regression
+        # can't slip into the committed artifact unnoticed: dispatch-ahead
+        # actually overlapped host work, and it changed zero tokens.
+        "overlap_gain": pipe["overlap_frac"] - sync["overlap_frac"],
+        "bit_identical": sync["committed_tokens"] == pipe["committed_tokens"]
+        and sync["n_finished"] == pipe["n_finished"],
+        "config": {"workload": "burst", "clock": "wall", "seed": 0,
+                   "max_slots": 6},
+    }

@@ -27,6 +27,7 @@ MODULES = [
     "ablation",          # Fig. 8
     "roofline_report",   # §Roofline (from dry-run artifacts)
     "robustness",        # overload + chaos (docs/robustness.md)
+    "engine",            # pipelined vs sync serving loop (docs/engine.md)
 ]
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -2,11 +2,14 @@
 in a module here and list it in :data:`RULES` (docs/analysis.md walks
 through it)."""
 from repro.analysis.rules.bare_jit import BareJitRule
+from repro.analysis.rules.donation import DonationRule
 from repro.analysis.rules.host_sync import HostSyncRule
 from repro.analysis.rules.mesh_api import MeshApiRule
+from repro.analysis.rules.multi_sync import MultiSyncRule
 from repro.analysis.rules.silent_fallback import SilentFallbackRule
 
-RULES = [MeshApiRule, BareJitRule, HostSyncRule, SilentFallbackRule]
+RULES = [MeshApiRule, BareJitRule, HostSyncRule, MultiSyncRule,
+         DonationRule, SilentFallbackRule]
 
 
 def all_rules():

@@ -1,0 +1,156 @@
+"""donation: donated buffers must not be aliased or read after the call.
+
+``jax_compat.jit(..., donate_argnums=...)`` hands an input buffer's storage
+to XLA for reuse — after the call that Python array is DEAD. Two statically
+checkable misuses:
+
+* **aliasing** — the same variable passed at a donated position and any
+  other position of the same call (``g(x, x)`` with arg 0 donated): XLA may
+  overwrite the buffer while the other operand still reads it, or reject
+  the donation silently — either way the caller's mental model is wrong.
+* **use-after-donate** — the donated variable is *read* (Load) later in the
+  same function. Re-binding (Store) is the idiomatic pattern
+  (``buf = step(buf)``) and is safe.
+
+The rule is intentionally local and name-based: it tracks only jitted
+callables bound by a plain ``name = JC.jit(...)`` / ``jax_compat.jit(...)``
+/ ``...jit_sharded(...)`` assignment in the same module, and only bare-Name
+call arguments. The engine's dict-registered stage functions and the KV
+pool's ``self._write`` are attribute/subscript-bound and therefore out of
+scope here — their donation discipline is covered by the bit-identity tests
+instead (tests/test_engine_pipeline.py).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.lint import FileContext, Finding, Rule, _dotted
+
+_JIT_SPELLINGS = ("jit", "jit_sharded")
+_COMPAT_MODULES = ("JC", "jax_compat")
+
+
+def _donating_call(node: ast.AST) -> Optional[Tuple[ast.Call, object]]:
+    """If ``node`` is a JC.jit/jit_sharded call with donate_argnums, return
+    (call, donated-argnum-set-or-None). None = non-literal argnums: donated
+    positions unknown, check aliasing against every position."""
+    if not isinstance(node, ast.Call):
+        return None
+    dotted = _dotted(node.func)
+    if dotted is None:
+        return None
+    parts = dotted.split(".")
+    if len(parts) != 2 or parts[0] not in _COMPAT_MODULES \
+            or parts[1] not in _JIT_SPELLINGS:
+        return None
+    for kw in node.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return node, {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            nums = {e.value for e in v.elts}
+            return (node, nums) if nums else None
+        return node, None
+    return None
+
+
+class DonationRule(Rule):
+    name = "donation"
+    description = ("buffers passed at donated argnums of a "
+                   "jax_compat.jit(donate_argnums=...) callable must not "
+                   "be aliased within the call or read after it")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        # pass 1: name -> donated argnum set for module-level-visible
+        # `name = JC.jit(..., donate_argnums=...)` bindings.
+        donors: Dict[str, Optional[Set[int]]] = {}
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not isinstance(tgt, ast.Name):
+                continue
+            hit = _donating_call(node.value)
+            if hit is not None:
+                donors[tgt.id] = hit[1]
+        if not donors:
+            return
+
+        # pass 2: judge every call of a donor.
+        for call in ast.walk(ctx.tree):
+            if not isinstance(call, ast.Call) \
+                    or not isinstance(call.func, ast.Name) \
+                    or call.func.id not in donors:
+                continue
+            argnums = donors[call.func.id]
+            names_at: List[Optional[str]] = [
+                a.id if isinstance(a, ast.Name) else None for a in call.args]
+            donated: Dict[str, int] = {}
+            for i, nm in enumerate(names_at):
+                if nm is None:
+                    continue
+                if argnums is None or i in argnums:
+                    donated.setdefault(nm, i)
+            for nm, i in donated.items():
+                dup = [j for j, other in enumerate(names_at)
+                       if other == nm and j != i]
+                if dup:
+                    yield self.finding(
+                        ctx, call,
+                        f"`{nm}` is passed to `{call.func.id}` at donated "
+                        f"position {i} and again at position {dup[0]} — "
+                        "a donated buffer may be overwritten while the "
+                        "aliased operand still reads it")
+                    continue
+                if nm in self._rebound_by(ctx, call):
+                    continue      # `buf = step(buf)`: re-bound, safe
+                use = self._first_use_after(ctx, call, nm)
+                if use is not None:
+                    yield Finding(
+                        self.name, ctx.path, use.lineno,
+                        f"`{nm}` is read after being donated to "
+                        f"`{call.func.id}` (line {call.lineno}) — the "
+                        "buffer is dead after the call; re-bind the "
+                        "result or pass a copy")
+
+    @staticmethod
+    def _rebound_by(ctx: FileContext, call: ast.Call) -> Set[str]:
+        """Names the statement containing ``call`` re-binds (its assignment
+        targets): ``buf = step(buf)`` kills the old binding in the same
+        statement, so later reads see the result, not the donated buffer."""
+        node: ast.AST = call
+        while node in ctx.parents and not isinstance(node, ast.stmt):
+            node = ctx.parents[node]
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        out: Set[str] = set()
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+        return out
+
+    @staticmethod
+    def _first_use_after(ctx: FileContext, call: ast.Call,
+                         name: str) -> Optional[ast.Name]:
+        """First occurrence of ``name`` in the enclosing scope strictly
+        after the call, if it is a *read*. A Store first = safe re-bind."""
+        scope = ctx.enclosing_function(call) or ctx.tree
+        end = getattr(call, "end_lineno", call.lineno)
+        best: Optional[ast.Name] = None
+        for n in ast.walk(scope):
+            if isinstance(n, ast.Name) and n.id == name and n.lineno > end:
+                if best is None or (n.lineno, n.col_offset) < \
+                        (best.lineno, best.col_offset):
+                    best = n
+        if best is not None and isinstance(best.ctx, ast.Load):
+            return best
+        return None

@@ -1,0 +1,63 @@
+"""multi-sync: at most ONE host sync per function, annotated or not.
+
+The pipelined serving loop's contract (docs/engine.md) is ONE deferred
+``jax.device_get`` per engine iteration — the ``host-sync`` rule makes each
+sync explicit, but an annotated pragma on every line would still let a
+function accumulate several "sanctioned" stalls. This rule counts sync
+calls (``jax.device_get`` / ``block_until_ready`` / ``.item()``) per
+enclosing function and flags every sync beyond the first, REGARDLESS of
+``# lint: allow(host-sync)`` pragmas — the pragma names a different rule,
+so it cannot suppress this one. Fixing a finding means restructuring to a
+single batched transfer (tuple ``device_get``), not adding an annotation.
+
+Scope mirrors ``host-sync``: launch/ and the analysis package are exempt by
+path (printing results is their job). Whole-file exemptions go through the
+ALLOWLIST under this rule's own name.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.lint import FileContext, Finding, Rule, _dotted
+from repro.analysis.rules.host_sync import (_EXEMPT_PREFIXES, _SYNC_FUNCS,
+                                            _SYNC_METHODS)
+
+
+def _is_sync_call(node: ast.Call) -> bool:
+    fn = node.func
+    if not isinstance(fn, ast.Attribute):
+        return False
+    dotted = _dotted(fn)
+    return dotted in _SYNC_FUNCS or (fn.attr in _SYNC_METHODS
+                                     and dotted not in _SYNC_FUNCS)
+
+
+class MultiSyncRule(Rule):
+    name = "multi-sync"
+    description = ("at most one host sync per function — a second "
+                   "device_get/.item()/block_until_ready in the same "
+                   "function is a pipeline stall even when each line is "
+                   "individually annotated")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.path.startswith(_EXEMPT_PREFIXES):
+            return
+        by_scope = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and _is_sync_call(node):
+                scope = ctx.enclosing_function(node)
+                by_scope.setdefault(scope, []).append(node)
+        for scope, calls in by_scope.items():
+            if len(calls) < 2:
+                continue
+            calls.sort(key=lambda n: (n.lineno, n.col_offset))
+            where = (f"`{scope.name}`" if scope is not None
+                     else "module scope")
+            for extra in calls[1:]:
+                yield self.finding(
+                    ctx, extra,
+                    f"{len(calls)} host syncs in {where} (first at line "
+                    f"{calls[0].lineno}) — the serving loop's contract is "
+                    "ONE deferred sync per iteration; batch the transfers "
+                    "into a single tuple device_get")

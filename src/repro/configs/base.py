@@ -189,6 +189,26 @@ class ServeConfig:
     iter_log_cap: int = 0                # keep only the last N iter_log rows
     # (0 = unlimited — a long modeled-clock run otherwise accumulates one
     # dict per iteration forever, which a production engine cannot afford)
+    # --- pipelined continuous-batching loop (docs/engine.md) -----------------
+    clock: str = "wall"                  # "wall" (host time) | "modeled"
+    # (virtual device clock — the discrete-event oracle; Engine's ``clock``
+    # ctor arg overrides this field for back-compat)
+    pipeline: bool = True                # dispatch-ahead serving loop: build
+    # iteration i+1's IterationPlan/PackedIterationLayout while iteration i
+    # executes on device, syncing i's ids/confidences only when i+1 has been
+    # planned. Bit-identical to the synchronous loop (pipeline=False, the
+    # oracle): the control plane — commit counts, block completion, phase
+    # transitions, admission, preemption — is a function of lengths and
+    # config only, never of the in-flight token VALUES, so deferring the
+    # host sync cannot change any decision (proven by
+    # tests/test_engine_pipeline.py).
+    donate_buffers: bool = True          # donate per-iteration stream buffers
+    # (token/position/validity streams, gathered reuse caches, the logit
+    # stage's hidden rows) into their stage jits via donate_argnums, so the
+    # packed streams stop double-buffering: each iteration's input buffers
+    # are released (or aliased into outputs) the moment the stage consumes
+    # them instead of living until the next host GC. Numerics are untouched
+    # — donation only changes buffer lifetime.
     # --- robustness layer (admission control / shedding / preemption) --------
     # Defaults keep every knob OFF: unbounded queue, no deadlines enforced
     # beyond what requests carry, no preemption, 3 dispatch retries — the

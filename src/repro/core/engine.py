@@ -190,6 +190,18 @@ class EngineStats:
     # (``repro.analysis.retrace``) holds at ZERO for a warmed engine.
     compile_counts: Dict[str, int] = field(default_factory=dict)
     compiles_warmup: int = 0
+    # -- pipelined-loop host/device accounting (docs/engine.md) ------------
+    # Wall-clock time, regardless of clock mode: the modeled clock prices
+    # DEVICE work, while these measure the HOST side of the serving loop —
+    # the gap the dispatch-ahead pipeline hides.
+    host_plan_s: float = 0.0      # building IterationPlans + packed layouts
+    host_fill_s: float = 0.0      # stage buffer fills + dispatch enqueue
+    sync_wait_s: float = 0.0      # blocked in the deferred device_get
+    overlapped_host_s: float = 0.0  # plan time spent while a previous
+    #                                 iteration's dispatch was still in flight
+    dispatched_ahead: int = 0     # iterations planned with a sync pending
+    streamed_events: int = 0      # per-iteration commit events emitted to
+    #                               the streaming callback
     # list when unlimited; the engine swaps in a maxlen deque under
     # ServeConfig.iter_log_cap (O(1) eviction of the oldest rows)
     iter_log: List[dict] = field(default_factory=list)
@@ -203,6 +215,17 @@ class EngineStats:
         """Compilations after the warmup snapshot (0 on a healthy warmed
         engine; equals ``compiles_total`` when warmup was never run)."""
         return self.compiles_total - self.compiles_warmup
+
+    @property
+    def overlap_frac(self) -> float:
+        """Fraction of per-iteration host work (plan + fill) that ran while
+        device work was in flight. Structural, not a wall-clock estimate:
+        plan time counts as overlapped exactly when a dispatched iteration
+        had not yet been synced — so the synchronous loop is identically 0
+        and any dispatch-ahead shows up deterministically, even on hosts
+        where timers are noisy (the CI gate relies on this)."""
+        return self.overlapped_host_s / max(
+            self.host_plan_s + self.host_fill_s, 1e-12)
 
     @property
     def rejected(self) -> int:
@@ -234,15 +257,75 @@ class EngineStats:
         return self.committed_tokens / max(self.wall_time, 1e-9)
 
 
+@dataclass
+class _CommitEntry:
+    """One request's dispatched-but-unsynced commit (docs/engine.md).
+
+    Recorded when the control plane advances at dispatch time; holds
+    everything the deferred sync needs to land the token VALUES later: the
+    hidden-row index, the block coordinates as of dispatch (the state
+    machine has already moved on), the commit width, and the request's
+    ``commit_epoch`` — a preemption rollback bumps the epoch, so a stale
+    entry's values are dropped at sync (the rollback already booked those
+    commits as recompute debt)."""
+    req: Request
+    row: int                  # request index in the decoded hidden stream
+    block_start: int          # absolute offset of the committed block
+    block_idx: int            # block index at dispatch (stream events)
+    n_commit: int             # commit width passed to commit_tokens
+    n_act: int                # positions actually unmasked (stats delta)
+    epoch: int                # req.commit_epoch at dispatch
+    finished: bool            # this commit completed the request
+    t: float                  # commit timestamp (modeled vtime / wall now)
+
+
+@dataclass
+class _Prepared:
+    """Host-side output of :meth:`Engine._begin_iteration`: one iteration's
+    scheduler plan + packed layout, built as pure host work — the part the
+    pipelined loop overlaps with in-flight device execution."""
+    now: float
+    plan: object              # IterationPlan
+    layout: object            # PackedIterationLayout | None
+    lifecycle: bool           # the plan shed/rejected/preempted something
+    plan_s: float             # host seconds spent planning
+
+    @property
+    def has_exec(self) -> bool:
+        return self.plan.has_exec
+
+
+@dataclass
+class _Pending:
+    """One dispatched-but-unsynced iteration: the decode outputs still on
+    device plus the commit entries to apply at the single deferred sync."""
+    ids: jax.Array
+    conf: jax.Array
+    n_rows: int
+    entries: List[_CommitEntry]
+    log_row: dict
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, serve: ServeConfig,
                  params: Optional[dict] = None, seed: int = 0,
-                 clock: str = "wall",
+                 clock: Optional[str] = None,
                  device_model: Optional[DeviceModel] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 stream_cb=None):
         self.cfg = cfg
         self.serve = serve
-        self.clock = clock
+        # clock mode: the ctor arg (back-compat spelling every harness uses)
+        # overrides ServeConfig.clock; None defers to the config
+        self.clock = clock if clock is not None else serve.clock
+        if self.clock not in ("wall", "modeled"):
+            raise ValueError(f"Engine clock must be 'wall' or 'modeled', "
+                             f"got {self.clock!r}")
+        # streaming per-iteration token output (docs/engine.md): called once
+        # per committed (request, iteration) at sync time — when the values
+        # exist host-side — with a dict event; finished blocks surface
+        # before the run completes instead of only via output_tokens()
+        self._stream_cb = stream_cb
         self.faults = faults
         self.device = device_model or DeviceModel()
         self.vtime = 0.0
@@ -351,7 +434,8 @@ class Engine:
                            pad_slots=self._pool_pad,
                            compile_counter=self._compile_counter,
                            sharing=serve.prefix_sharing,
-                           kv_quant=serve.kv_quant)
+                           kv_quant=serve.kv_quant,
+                           donate_cache=serve.donate_buffers)
         self._sharing = serve.prefix_sharing
         # robustness wiring: the scheduler drives the pool's take/free
         # generation ledger on admit/finish/preempt, and consumes the fault
@@ -429,6 +513,17 @@ class Engine:
     # ------------------------------------------------------------------
     # jitted step functions (cached per bucket size)
     # ------------------------------------------------------------------
+    def _donate(self, *argnums: int) -> tuple:
+        """Per-iteration stream buffers are single-use: every dispatch builds
+        fresh device inputs (``jnp.asarray`` of numpy fills, a fresh pool
+        gather) that are dead the moment the call returns, so under
+        ``ServeConfig.donate_buffers`` they are donated and XLA reuses their
+        storage for the outputs instead of double-buffering the packed
+        streams. Params (argnum 0) are never donated. Donation is a
+        lifetime hint only — numerics are bit-identical either way — so the
+        oracle suites run unchanged with it on or off."""
+        return tuple(argnums) if self.serve.donate_buffers else ()
+
     def _stage_specs(self, n_stream: int, with_cache: bool = False):
         """in_specs for one stage entry point: params carry their Rules
         placement, token/offset streams replicate (the serving mesh's model
@@ -463,6 +558,7 @@ class Engine:
             self._refresh_jit[n] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
                 out_specs=self._refresh_out_specs(),
+                donate_argnums=self._donate(1, 2),
                 entry="refresh", counter=self._compile_counter)
         return self._refresh_jit[n]
 
@@ -503,6 +599,7 @@ class Engine:
             self._refresh_packed_jit[(tp, rp)] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
                 out_specs=self._refresh_out_specs(),
+                donate_argnums=self._donate(1, 2, 3, 4),
                 entry="refresh_packed", counter=self._compile_counter)
         return self._refresh_packed_jit[(tp, rp)]
 
@@ -522,6 +619,7 @@ class Engine:
             in_specs = self._stage_specs(2, with_cache=True)
             self._reuse_jit[n] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
+                donate_argnums=self._donate(1, 2, 3),
                 entry="reuse", counter=self._compile_counter)
         return self._reuse_jit[n]
 
@@ -540,6 +638,7 @@ class Engine:
             in_specs = self._stage_specs(2, with_cache=True)
             self._reuse_packed_jit[rp] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
+                donate_argnums=self._donate(1, 2, 3),
                 entry="reuse_packed", counter=self._compile_counter)
         return self._reuse_packed_jit[rp]
 
@@ -560,6 +659,7 @@ class Engine:
             in_specs = self._stage_specs(1)
             self._decode_jit[n] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
+                donate_argnums=self._donate(1),
                 entry="decode", counter=self._compile_counter)
         return self._decode_jit[n]
 
@@ -576,6 +676,7 @@ class Engine:
             in_specs = self._stage_specs(2)
             self._decode_packed_jit[n] = JC.jit_sharded(
                 fn, mesh=self.mesh, in_specs=in_specs,
+                donate_argnums=self._donate(1, 2),
                 entry="decode_packed", counter=self._compile_counter)
         return self._decode_packed_jit[n]
 
@@ -657,15 +758,16 @@ class Engine:
                 if b >= _bucket(r_fused):
                     break
                 b *= 2
-        toks = jnp.zeros((1, S), jnp.int32)
-        valid = jnp.ones((1, F + S), bool)
-        bs = jnp.zeros((1,), jnp.int32)
+        # fresh dummy arrays per call, never a broadcast view of a shared
+        # template: the stage jits donate their stream buffers, and a
+        # same-shape broadcast can alias its source — reusing the template
+        # after a donating call would read a dead buffer
         b = 1
         while not self._use_packed:
             out = self._refresh_fn(b)(
-                self.params, jnp.broadcast_to(toks, (b, S)),
-                jnp.broadcast_to(valid, (b, F + S)),
-                jnp.broadcast_to(bs, (b,)), _fe(b))
+                self.params, jnp.zeros((b, S), jnp.int32),
+                jnp.ones((b, F + S), bool),
+                jnp.zeros((b,), jnp.int32), _fe(b))
             self.pool.write([self.pool.scratch_slot] * b,
                             jax.tree.map(jnp.zeros_like, out.cache))
             if b >= _bucket(r_eff):
@@ -676,8 +778,6 @@ class Engine:
         # (no-op without sharing); the refresh loops above materialized the
         # pool, so the copy compiles at its real shapes
         self.pool.warm_aux()
-        bpos = jnp.zeros((1, Sb), jnp.int32)
-        btok = jnp.zeros((1, Sb), jnp.int32)
         r_cap = max(1, min(self.serve.max_slots,
                            self.serve.max_num_batched_tokens // Sb))
         if self._use_packed:
@@ -697,8 +797,8 @@ class Engine:
             while True:
                 cache = self.pool.gather([self.pool.scratch_slot] * b)
                 self._reuse_fn(b)(self.params,
-                                  jnp.broadcast_to(btok, (b, Sb)),
-                                  jnp.broadcast_to(bpos, (b, Sb)), cache)
+                                  jnp.zeros((b, Sb), jnp.int32),
+                                  jnp.zeros((b, Sb), jnp.int32), cache)
                 if b >= _bucket(r_cap):
                     break
                 b *= 2
@@ -807,15 +907,45 @@ class Engine:
         deferral depend only on budget/slot state, which time alone cannot
         change). The old silent ``break`` here exited with unfinished
         requests still resident and recorded bogus throughput/latency
-        stats for them."""
+        stats for them.
+
+        Pipelined loop (``ServeConfig.pipeline``, docs/engine.md): each lap
+        (1) builds iteration i+1's plan + packed layout — pure host work
+        that overlaps iteration i's dispatched stages still executing
+        asynchronously on device, (2) performs the ONE deferred host sync
+        of iteration i (its committed token values must land before i+1's
+        stage buffers read ``r.tokens``), then (3) fills and dispatches
+        i+1, leaving its sync pending for the next lap. The control plane
+        (masked counts, block completion, FINISHED, the modeled clock)
+        advanced at dispatch time and is value-independent, so the order
+        of scheduler/stats/vtime mutations is exactly the synchronous
+        loop's — bit-identity is by construction, not by luck. With
+        ``pipeline=False`` each lap syncs immediately (the oracle)."""
         start = time.perf_counter()
+        pending: Optional[_Pending] = None
         it = 0
         while self.scheduler.has_work and it < max_iters:
             if self.clock == "modeled":
                 now = self.vtime
             else:
                 now = (time.perf_counter() - start) / time_scale
-            progressed = self.step(now)
+            prep = self._begin_iteration(now)
+            if pending is not None:
+                # the plan above was built while the previous dispatch was
+                # still in flight — the overlap the pipeline buys
+                self.stats.overlapped_host_s += prep.plan_s
+                self.stats.dispatched_ahead += 1
+                self._sync_iteration(pending)
+                pending = None
+            if prep.has_exec:
+                nxt = self._dispatch_iteration(prep)
+                if self.serve.pipeline:
+                    pending = nxt
+                else:
+                    self._sync_iteration(nxt)
+                progressed = True
+            else:
+                progressed = prep.lifecycle
             if not progressed:
                 # time CAN unblock two things: a future arrival (admission)
                 # and a future deadline (shedding a waiter that will never
@@ -854,6 +984,12 @@ class Engine:
                     if wait > 0:
                         time.sleep(min(wait, 0.05))
             it += 1
+        if pending is not None:
+            # drain the last in-flight iteration OUTSIDE the loop: a drain
+            # lap would advance the iteration counter (and with it the
+            # fault schedule) past the synchronous oracle
+            self._sync_iteration(pending)
+            pending = None
         self.stats.wall_time = (self.vtime if self.clock == "modeled"
                                 else time.perf_counter() - start)
         self.stats.iterations = it
@@ -910,9 +1046,26 @@ class Engine:
     # one engine iteration
     # ------------------------------------------------------------------
     def step(self, now: float) -> bool:
-        """One engine iteration. Returns True when the iteration made
-        progress — executed work OR a lifecycle event (shed / rejected /
-        preempted request), which also changes engine state."""
+        """One engine iteration, fully synchronous: plan → dispatch → sync.
+        Returns True when the iteration made progress — executed work OR a
+        lifecycle event (shed / rejected / preempted request), which also
+        changes engine state. :meth:`run` composes the same three phases
+        with the sync deferred one iteration (dispatch-ahead); direct
+        callers get the oracle ordering."""
+        prep = self._begin_iteration(now)
+        if not prep.has_exec:
+            return prep.lifecycle
+        self._sync_iteration(self._dispatch_iteration(prep))
+        return True
+
+    def _begin_iteration(self, now: float) -> _Prepared:
+        """Plan one iteration: fault-schedule tick, scheduler plan, packed
+        layout. Pure host work — no device dispatch, no host sync — so the
+        pipelined loop runs it while the previous iteration's stages are
+        still executing on device. Everything here depends only on request
+        lengths/phases/arrivals (never token values), which is why it can
+        legally run before the previous iteration's tokens are synced."""
+        t0 = time.perf_counter()
         self._iter += 1
         if self.faults is not None:
             self.faults.begin_iteration(self._iter)
@@ -936,18 +1089,31 @@ class Engine:
             self.faults is not None and bool(self.scheduler.waiting)
             and self.faults.blocking())
         lifecycle = bool(plan.rejected or plan.shed or plan.preempted)
-        if not plan.refresh and not plan.reuse:
-            return lifecycle
-        self.stats.deferred_steps += len(plan.deferred)
-        self.stats.peak_query_tokens = max(self.stats.peak_query_tokens,
-                                           plan.query_tokens)
+        layout = None
+        if plan.has_exec:
+            self.stats.deferred_steps += len(plan.deferred)
+            self.stats.peak_query_tokens = max(self.stats.peak_query_tokens,
+                                               plan.query_tokens)
+            # whole-iteration packed layout (drives the packed pipeline)
+            if self._use_packed:
+                layout = plan.packed_layout(self.serve.refresh_slots)
+        plan_s = time.perf_counter() - t0
+        self.stats.host_plan_s += plan_s
+        return _Prepared(now, plan, layout, lifecycle, plan_s)
+
+    def _dispatch_iteration(self, prep: _Prepared) -> _Pending:
+        """Fill stage buffers and launch every device dispatch for one
+        planned iteration, advance the control plane, and return the
+        iteration's pending sync (the decode outputs still on device).
+        Modeled-clock charges happen here — the same program points the
+        synchronous loop charged them at — so vtime sequencing is
+        identical whether the sync is deferred or immediate."""
+        t0 = time.perf_counter()
+        now, plan, layout = prep.now, prep.plan, prep.layout
 
         hidden_rows: List[jax.Array] = []
         decoded: List[Request] = []
-
-        # ---- whole-iteration packed layout (drives the packed pipeline) ----
         cap = self.serve.refresh_slots
-        layout = plan.packed_layout(cap) if self._use_packed else None
 
         # ---- Refresh: ONE fused packed dispatch / padded per-cap chunks ----
         iter_real = iter_exec = 0
@@ -1010,32 +1176,34 @@ class Engine:
 
         # ---- budgeted logit stage (C1) over every active block ----
         n_real = n_exec = 0
+        ids = conf = None
         if decoded:
-            h = jnp.concatenate([r.reshape(-1, self.cfg.d_model)
-                                 for r in hidden_rows], axis=0)
-            N = n_real = h.shape[0]
+            D = self.cfg.d_model
+            N = n_real = len(decoded) * self.serve.block_size
+
+            def build_h(b):
+                # built INSIDE the dispatch thunk: the stage jits donate
+                # their stream buffers, so the concatenated rows must die
+                # with the call — and a fault-retried attempt rebuilds the
+                # buffer instead of re-passing a donated one
+                h = jnp.concatenate([r.reshape(-1, D)
+                                     for r in hidden_rows], axis=0)
+                return jnp.pad(h, ((0, b - N), (0, 0))) if b != N else h
+
             if self.serve.varlen_pack:
                 # packed: token-bucket rounding + validity mask threaded into
                 # the decode kernel — no pow2 row bucket
                 b = self._logit_bucket(N)
-                if b != N:
-                    h = jnp.pad(h, ((0, b - N), (0, 0)))
                 valid = np.zeros((b,), bool)
                 valid[:N] = True
                 ids, conf = self._dispatch(
                     "decode", lambda: self._decode_packed_fn(b)(
-                        self.params, h, jnp.asarray(valid)))
+                        self.params, build_h(b), jnp.asarray(valid)))
             else:
                 b = _bucket(N, lo=self.serve.block_size)
-                if b != N:
-                    h = jnp.pad(h, ((0, b - N), (0, 0)))
                 ids, conf = self._dispatch(
-                    "decode", lambda: self._decode_fn(b)(self.params, h))
-            # one blocking transfer instead of two per-array host syncs —
-            # the engine's SINGLE annotated sync point (docs/analysis.md)
-            ids, conf = jax.device_get((ids, conf))  # lint: allow(host-sync)
-            ids = ids[:N]
-            conf = conf[:N]
+                    "decode", lambda: self._decode_fn(b)(self.params,
+                                                         build_h(b)))
             # C1: serial sub-batches serialize on device; monolithic runs one
             # big call (launch amortized, memory unbounded)
             if self.serve.logit_mode == "monolithic":
@@ -1052,21 +1220,94 @@ class Engine:
                     n_exec += min(sub, b - off)
             self.stats.logit_tokens_real += n_real
             self.stats.logit_tokens_exec += n_exec
-            self._commit(decoded, ids, conf,
-                         self.vtime if self.clock == "modeled" else now)
+
+        # control-plane advance at DISPATCH time (value-independent):
+        # the scheduler sees this iteration's block completions / finishes
+        # before planning the next one, exactly as in the synchronous loop
+        entries = self._advance_control(
+            decoded, self.vtime if self.clock == "modeled" else now)
 
         # under iter_log_cap the log is a maxlen deque: appending evicts the
         # oldest row in O(1) — the aggregate counters above carry the
         # lifetime totals, so a long modeled-clock run doesn't grow host
-        # memory one dict per iteration forever
-        self.stats.iter_log.append(dict(
+        # memory one dict per iteration forever. (The deferred sync backfills
+        # ``sync_s`` through the pending reference even after eviction.)
+        fill_s = time.perf_counter() - t0
+        self.stats.host_fill_s += fill_s
+        log_row = dict(
             t=now, q_tokens=plan.query_tokens,
             n_refresh=len(plan.refresh), n_reuse=len(plan.reuse),
             n_logits=len(decoded) * self.serve.block_size,
             refresh_tokens_real=iter_real, refresh_tokens_exec=iter_exec,
             reuse_tokens_real=r_real, reuse_tokens_exec=r_exec,
-            logit_tokens_real=n_real, logit_tokens_exec=n_exec))
-        return True
+            logit_tokens_real=n_real, logit_tokens_exec=n_exec,
+            plan_s=prep.plan_s, fill_s=fill_s, sync_s=0.0)
+        self.stats.iter_log.append(log_row)
+        return _Pending(ids, conf, n_real, entries, log_row)
+
+    def _advance_control(self, decoded: List[Request],
+                         t_commit: float) -> List[_CommitEntry]:
+        """Advance every scheduled request's state machine at dispatch time,
+        WITHOUT the committed token values (they are still on device).
+
+        ``diffusion.commit_count`` / ``commit_tokens`` unmask exactly
+        ``min(n_commit, masked)`` positions as a function of counts alone —
+        never of token values — so block completion, phase transitions,
+        FINISHED, and the committed-token stat are all computable here.
+        The returned entries carry what :meth:`_sync_iteration` needs to
+        land the values once they arrive."""
+        entries: List[_CommitEntry] = []
+        for j, r in enumerate(decoded):
+            steps_left = self.serve.steps_per_block - r.step_in_block
+            n_commit = diffusion.commit_count(r.masked_left, steps_left)
+            e = _CommitEntry(req=r, row=j, block_start=r.block_start,
+                             block_idx=r.block_idx, n_commit=n_commit,
+                             n_act=0, epoch=r.commit_epoch, finished=False,
+                             t=t_commit)
+            e.n_act = r.advance_control(n_commit, t_commit)
+            self.stats.committed_tokens += e.n_act
+            e.finished = r.state == State.FINISHED
+            if e.finished:
+                self.scheduler.finish(r)
+                self._tally(r)
+            entries.append(e)
+        return entries
+
+    def _sync_iteration(self, pending: _Pending) -> None:
+        """The iteration's SINGLE deferred host sync: pull the decode
+        outputs, land each entry's token values into its recorded block —
+        unless a preemption rollback bumped the request's epoch while the
+        commit was in flight, in which case the values are discarded (the
+        rollback already booked them as recompute debt, and only
+        mid-block Reuse residents are preemptible, so a stale epoch always
+        refers to the rolled-back block itself). Streaming events fire
+        here: this is the first moment the values exist host-side."""
+        if pending.ids is None:
+            return
+        t0 = time.perf_counter()
+        # one blocking transfer instead of two per-array host syncs —
+        # the engine's SINGLE annotated sync point (docs/analysis.md)
+        ids, conf = jax.device_get(  # lint: allow(host-sync)
+            (pending.ids, pending.conf))
+        sync_s = time.perf_counter() - t0
+        self.stats.sync_wait_s += sync_s
+        pending.log_row["sync_s"] = sync_s
+        Sb = self.serve.block_size
+        for e in pending.entries:
+            if e.req.commit_epoch != e.epoch:
+                continue          # preempted while in flight: values dropped
+            rid = ids[e.row * Sb: (e.row + 1) * Sb]
+            rconf = conf[e.row * Sb: (e.row + 1) * Sb]
+            s = e.block_start
+            newblk = diffusion.commit_tokens(e.req.tokens[s: s + Sb], rid,
+                                             rconf, e.n_commit, self.mask_id)
+            e.req.tokens[s: s + Sb] = newblk
+            if self._stream_cb is not None:
+                self.stats.streamed_events += 1
+                self._stream_cb(dict(
+                    rid=e.req.rid, t=e.t, block_idx=e.block_idx,
+                    n_committed=e.n_act, finished=e.finished,
+                    tokens=np.array(newblk)))
 
     # ------------------------------------------------------------------
     def _mesh_ctx(self):
@@ -1245,9 +1486,11 @@ class Engine:
             bpos[j] = np.arange(F + r.block_start, F + r.block_start + Sb)
             slots[j] = r.slot
         self._check_slots(reqs)
-        cache = self.pool.gather(slots)
+        # gather INSIDE the thunk: the reuse jit donates the gathered cache,
+        # so each dispatch attempt (fault retries included) needs its own
         h = self._dispatch("reuse", lambda: self._reuse_fn(b)(
-            self.params, jnp.asarray(btok), jnp.asarray(bpos), cache))
+            self.params, jnp.asarray(btok), jnp.asarray(bpos),
+            self.pool.gather(slots)))
         self.stats.padded_reuse_calls += 1
         self.stats.reuse_tokens_real += n * Sb
         self.stats.reuse_tokens_exec += b * Sb
@@ -1275,28 +1518,11 @@ class Engine:
                                             F + r.block_start + Sb)
             slots[j] = r.slot
         self._check_slots(list(reqs))
-        cache = self.pool.gather(slots)
+        # gather INSIDE the thunk (donated cache; see _run_reuse)
         h = self._dispatch("reuse", lambda: self._reuse_packed_fn(rp)(
-            self.params, jnp.asarray(btok), jnp.asarray(bpos), cache))
+            self.params, jnp.asarray(btok), jnp.asarray(bpos),
+            self.pool.gather(slots)))
         self.stats.packed_reuse_calls += 1
         self.stats.reuse_tokens_real += n * Sb
         self.stats.reuse_tokens_exec += tq
         return h.reshape(rp, Sb, -1)[:n], tq
-
-    def _commit(self, reqs: List[Request], ids: np.ndarray, conf: np.ndarray,
-                now: float) -> None:
-        Sb = self.serve.block_size
-        for j, r in enumerate(reqs):
-            rid = ids[j * Sb: (j + 1) * Sb]
-            rconf = conf[j * Sb: (j + 1) * Sb]
-            blk = r.block_tokens()
-            steps_left = self.serve.steps_per_block - r.step_in_block
-            n_commit = diffusion.commit_count(r.block_masked(), steps_left)
-            newblk = diffusion.commit_tokens(blk, rid, rconf, n_commit,
-                                             self.mask_id)
-            self.stats.committed_tokens += int(
-                (newblk != self.mask_id).sum() - (blk != self.mask_id).sum())
-            r.advance(newblk, now)
-            if r.state == State.FINISHED:
-                self.scheduler.finish(r)
-                self._tally(r)

@@ -62,7 +62,7 @@ class KVPool:
     def __init__(self, max_slots: int, shardings=None,
                  gather_shardings=None, pad_slots: int = 0,
                  compile_counter=None, sharing: bool = False,
-                 kv_quant: str = "none"):
+                 kv_quant: str = "none", donate_cache: bool = False):
         """``shardings``: optional NamedSharding pytree matching the cache
         structure (leading slot axis included) — resolved lazily against the
         first Refresh output in :meth:`ensure`.
@@ -84,7 +84,15 @@ class KVPool:
         must then write via :meth:`write_shared` with per-slot keys).
 
         ``kv_quant``: ``"none"`` (bit-exact float storage) or ``"int8"``
-        (per-slot-scale quantized KV leaves)."""
+        (per-slot-scale quantized KV leaves).
+
+        ``donate_cache``: additionally donate the INCOMING refresh cache to
+        the scatter jit (the pool buffer, argnum 0, is always donated — the
+        update is in place either way). The engine opts in
+        (``ServeConfig.donate_buffers``): its refresh outputs are
+        single-use, dead once scattered. Callers that reuse a cache pytree
+        across writes (the share-ledger property tests do) must leave this
+        off — a donated tree's buffers are invalid after the call."""
         if kv_quant not in ("none", "int8"):
             raise ValueError(f"KVPool: kv_quant must be 'none' or 'int8', "
                              f"got {kv_quant!r}")
@@ -101,6 +109,7 @@ class KVPool:
         self.gather_shardings = gather_shardings
         self._compile_counter = compile_counter
         self.kv_quant = kv_quant
+        self._write_donate = (0, 1) if donate_cache else (0,)
         self.ledger: Optional[ShareLedger] = ShareLedger() if sharing \
             else None
         self.phys_peak = 0         # high-water distinct-owner occupancy
@@ -212,14 +221,15 @@ class KVPool:
                               for k, v in sc.items()},
                 }
 
-            self._write = JC.jit(wfn, donate_argnums=0, entry="pool_write",
-                                 counter=cc)
+            self._write = JC.jit(wfn, donate_argnums=self._write_donate,
+                                 entry="pool_write", counter=cc)
         elif self.shardings is None:
             self.cache = jax.tree.map(alloc, cache_example)
             self._write = JC.jit(
                 lambda pool, cache, slots: jax.tree.map(
                     lambda P, c: P.at[:, slots].set(c), pool, cache),
-                donate_argnums=0, entry="pool_write", counter=cc)
+                donate_argnums=self._write_donate, entry="pool_write",
+                counter=cc)
         else:
             self.cache = jax.tree.map(alloc, cache_example, self.shardings)
             # pin the pool's planned layout across writes (donation keeps the
@@ -227,7 +237,8 @@ class KVPool:
             self._write = JC.jit(
                 lambda pool, cache, slots: jax.tree.map(
                     lambda P, c: P.at[:, slots].set(c), pool, cache),
-                donate_argnums=0, out_shardings=self.shardings,
+                donate_argnums=self._write_donate,
+                out_shardings=self.shardings,
                 entry="pool_write", counter=cc)
         # every pool leaf — int8 data, f32 scales, float caches alike —
         # keeps the slot axis at position 1, so ONE gather/copy program

@@ -76,6 +76,22 @@ class Request:
     deadline: float = math.inf
 
     state: State = State.WAITING
+    # -- control-plane mirror of the active block (docs/engine.md) ---------
+    # ``masked_left`` tracks how many positions of the active block are
+    # still masked WITHOUT reading token values. ``diffusion.commit_tokens``
+    # unmasks exactly ``min(n_commit, masked)`` positions (committed ids are
+    # never the mask id — remapped), so this counter evolves deterministically
+    # from lengths/config alone. It is what lets the pipelined engine advance
+    # the state machine (block completion, phase transitions, FINISHED) at
+    # dispatch time while the committed token VALUES are still in flight on
+    # device. Kept exactly equal to ``block_masked()`` whenever no commit is
+    # pending (asserted by the pipeline bit-identity suite).
+    masked_left: int = 0
+    # bumped by every rollback: an in-flight commit whose recorded epoch no
+    # longer matches is stale (the block was preempted under it) and its
+    # token values must be dropped on sync — the rollback already booked the
+    # discarded commits as recompute debt.
+    commit_epoch: int = 0
     slot: Optional[int] = None
     # generation of ``slot`` at allocation time (KVPool.take). A mismatch
     # against the pool's live counter means the slot was freed and recycled
@@ -105,6 +121,8 @@ class Request:
         if self.total_len <= self.cfg.max_seq_len:
             self.tokens = diffusion.build_sequence(
                 self.prompt, self.gen_len, self.cfg.max_seq_len, self.mask_id)
+        # a fresh block region is all-mask by construction
+        self.masked_left = self.cfg.block_size
 
     # -- geometry ----------------------------------------------------------
     @property
@@ -173,24 +191,46 @@ class Request:
     def block_masked(self) -> int:
         return int((self.block_tokens() == self.mask_id).sum())
 
-    def advance(self, new_block_tokens: np.ndarray, now: float) -> None:
-        """Apply a committed denoising step and advance the state machine."""
-        s = self.block_start
-        if self.t_first_commit < 0 and \
-                (new_block_tokens != self.mask_id).any():
+    def advance_control(self, n_commit: int, now: float) -> int:
+        """Advance the state machine by one committed denoising step WITHOUT
+        the committed token values (they may still be in flight on device —
+        the pipelined engine calls this at dispatch time and applies the
+        synced values later via the recorded ``commit_epoch``).
+
+        ``diffusion.commit_tokens`` unmasks exactly ``min(n_commit,
+        masked)`` positions and never writes the mask id, so the masked
+        count, block completion, and the FINISHED transition are all
+        deterministic functions of ``n_commit`` and the counters here —
+        value-independence is what makes dispatch-ahead bit-identical to
+        the synchronous oracle. Returns the number of newly committed
+        positions (the ``committed_tokens`` stat delta)."""
+        n_act = min(n_commit, self.masked_left)
+        if self.t_first_commit < 0 and n_act > 0:
             self.t_first_commit = now
-        self.tokens[s: s + self.cfg.block_size] = new_block_tokens
+        self.masked_left -= n_act
         self.steps_done += 1
         self.step_in_block += 1
-        done_block = (new_block_tokens != self.mask_id).all() or \
+        done_block = self.masked_left == 0 or \
             self.step_in_block >= self.cfg.steps_per_block
         if done_block:
             self.block_idx += 1
             self.step_in_block = 0
+            self.masked_left = self.cfg.block_size
             if self.block_idx >= self.n_blocks:
                 self.state = State.FINISHED
                 self.outcome = Outcome.FINISHED
                 self.t_finished = now
+        return n_act
+
+    def advance(self, new_block_tokens: np.ndarray, now: float) -> None:
+        """Apply a committed denoising step and advance the state machine
+        (the synchronous spelling: token values and control advance
+        together — direct callers and the oracle tests use this)."""
+        prev_masked = self.masked_left
+        s = self.block_start
+        self.tokens[s: s + self.cfg.block_size] = new_block_tokens
+        n_left = int((new_block_tokens == self.mask_id).sum())
+        self.advance_control(prev_masked - n_left, now)
 
     def rollback_block(self) -> int:
         """Preemption rollback: discard the active block's partial progress.
@@ -200,11 +240,19 @@ class Request:
         (step 0 of a block always refreshes) and the block's denoising
         trajectory — a deterministic function of the unchanged preceding
         context — replays bit-identically to the unpreempted run. Returns
-        the number of discarded commits (recompute debt)."""
-        blk = self.block_tokens()
-        n = int((blk != self.mask_id).sum())
-        blk[:] = self.mask_id
+        the number of discarded commits (recompute debt).
+
+        The count comes from the CONTROL counter, not the token array: under
+        the pipelined loop the latest commit's values may still be in
+        flight, but ``masked_left`` already accounts for them, so the debt
+        matches the synchronous oracle exactly. Bumping ``commit_epoch``
+        makes the engine drop those in-flight values on sync instead of
+        writing into the rolled-back block."""
+        n = self.cfg.block_size - self.masked_left
+        self.block_tokens()[:] = self.mask_id
         self.step_in_block = 0
+        self.masked_left = self.cfg.block_size
+        self.commit_epoch += 1
         self.recomputed_tokens += n
         return n
 

@@ -98,6 +98,18 @@ class IterationPlan:
     recomputed_tokens: int = 0   # commits discarded by preemption rollbacks
 
     @property
+    def has_exec(self) -> bool:
+        """True when the iteration executes device work (an empty plan is
+        lifecycle-only). Everything a plan exposes — costs, layouts, this
+        flag — is a function of request LENGTHS, phases, and config, never
+        of token values: ``plan()`` reads arrivals, deadlines, phase
+        counters, and ``refresh_len``/``query_tokens`` geometry only.
+        That value-independence is the contract the pipelined engine
+        relies on to build iteration i+1's plan before iteration i's
+        committed tokens have been synced from device (docs/engine.md)."""
+        return bool(self.refresh or self.reuse)
+
+    @property
     def query_tokens(self) -> int:
         return sum(r.query_tokens for r in self.refresh + self.reuse)
 

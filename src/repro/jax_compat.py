@@ -36,6 +36,24 @@ __all__ = [
     "jit_sharded", "shard_map", "compile_counts", "reset_compile_counts",
 ]
 
+# On CPU (and some older backends) jax 0.4.37 cannot alias every donated
+# buffer and warns "Some donated buffers were not usable" per dispatch.
+# Donation is a pure lifetime hint — numerics are identical either way — so
+# when a caller opts into donation we silence exactly that message once.
+_DONATION_WARNING_FILTERED = False
+
+
+def _enable_donation(jit_kwargs: dict, donate_argnums) -> dict:
+    global _DONATION_WARNING_FILTERED
+    if donate_argnums:
+        jit_kwargs["donate_argnums"] = tuple(donate_argnums)
+        if not _DONATION_WARNING_FILTERED:
+            import warnings
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            _DONATION_WARNING_FILTERED = True
+    return jit_kwargs
+
 # process-global trace/compile counters, keyed by entry-point name. A jitted
 # function's Python body runs exactly once per cache miss (each trace lowers
 # and compiles), so counting body executions counts compilations — no
@@ -68,7 +86,8 @@ def _counting(fn, entry: str, counter):
     return traced
 
 
-def jit(fn=None, *, entry=None, counter=None, **jit_kwargs):
+def jit(fn=None, *, entry=None, counter=None, donate_argnums=(),
+        **jit_kwargs):
     """``jax.jit`` through the compat layer (the lint-sanctioned spelling).
 
     ``entry`` names the jit entry point for the retrace sentinel: every
@@ -76,14 +95,22 @@ def jit(fn=None, *, entry=None, counter=None, **jit_kwargs):
     ``compile_counts()`` ledger and, if given, ``counter[entry]`` (any
     Counter-like mapping — the engine passes its per-instance counter).
     Without ``entry`` this is a plain ``jax.jit``. Usable as a decorator
-    (``@JC.jit`` / ``@functools.partial(JC.jit, static_argnames=...)``)."""
+    (``@JC.jit`` / ``@functools.partial(JC.jit, static_argnames=...)``).
+
+    ``donate_argnums`` marks per-call input buffers whose storage XLA may
+    reuse for the outputs (the engine donates its per-iteration stream
+    buffers so packed streams stop double-buffering — docs/engine.md).
+    The caller contract: a donated argument's buffer is dead after the
+    call; never re-pass or read it. Backends that can't alias a given
+    donation silently keep a copy (the 0.4.37 CPU warning is filtered
+    here), so donation never changes numerics — only buffer lifetime."""
     if fn is None:
         import functools
         return functools.partial(jit, entry=entry, counter=counter,
-                                 **jit_kwargs)
+                                 donate_argnums=donate_argnums, **jit_kwargs)
     if entry is not None:
         fn = _counting(fn, entry, counter)
-    return jax.jit(fn, **jit_kwargs)
+    return jax.jit(fn, **_enable_donation(jit_kwargs, donate_argnums))
 
 
 @contextlib.contextmanager
@@ -126,7 +153,7 @@ def named_shardings(mesh, spec_tree):
 
 
 def jit_sharded(fn, *, mesh, in_specs=None, out_specs=None, entry=None,
-                counter=None, **jit_kwargs):
+                counter=None, donate_argnums=(), **jit_kwargs):
     """``jax.jit`` with PartitionSpec-valued in/out shardings on ``mesh``.
 
     The serving engine's per-stage entry points thread their stage layouts
@@ -139,9 +166,12 @@ def jit_sharded(fn, *, mesh, in_specs=None, out_specs=None, entry=None,
 
     ``entry``/``counter`` hook the retrace sentinel exactly as in
     :func:`jit`: each compilation of the entry point is counted, so the
-    engine can prove zero post-warmup recompilation."""
+    engine can prove zero post-warmup recompilation. ``donate_argnums``
+    follows the :func:`jit` donation contract (buffer dead after the call);
+    donation composes with shardings — aliasing happens per device buffer."""
     if entry is not None:
         fn = _counting(fn, entry, counter)
+    jit_kwargs = _enable_donation(jit_kwargs, donate_argnums)
     if mesh is None:
         return jax.jit(fn, **jit_kwargs)
     if in_specs is not None:

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import time
 from typing import Optional, Tuple
 
 import numpy as np
@@ -47,7 +49,9 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
               fault_seed: Optional[int] = None,
               kernels: Optional[bool] = None,
               prefix_sharing: bool = False,
-              kv_quant: str = "none") -> dict:
+              kv_quant: str = "none",
+              pipeline: bool = True,
+              stream: bool = False) -> dict:
     import dataclasses
     cfg = get_config(arch)
     full_cfg = cfg
@@ -61,7 +65,8 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         mesh_shape=tuple(mesh_shape) if mesh_shape else None,
         queue_cap=queue_cap, queue_policy=queue_policy,
         preempt_starvation_s=preempt_starvation_s,
-        prefix_sharing=prefix_sharing, kv_quant=kv_quant)
+        prefix_sharing=prefix_sharing, kv_quant=kv_quant,
+        pipeline=pipeline)
     serve = system_profiles(base)[system]
     if kernels:
         # Pallas hot paths on top of the system profile (shard_mapped per
@@ -98,7 +103,20 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         serve = dataclasses.replace(serve,
                                     max_slots=max(1, sized.max_slots))
     faults = FaultPlan.seeded(fault_seed) if fault_seed is not None else None
-    eng = Engine(cfg, serve, seed=seed, clock=clock, faults=faults)
+    stream_cb = None
+    if stream:
+        # per-commit streaming: one event per request per iteration, fired
+        # at the deferred sync — the first host-side moment the token
+        # values exist. The launcher prints a compact line per event (the
+        # JSON still carries the aggregate streamed_events count).
+        def stream_cb(ev):
+            if not quiet:
+                tok = ev["tokens"][:4]
+                print(f"  stream rid={ev['rid']} block={ev['block_idx']} "
+                      f"+{ev['n_committed']} tok "
+                      f"{'FIN ' if ev['finished'] else ''}{tok}...")
+    eng = Engine(cfg, serve, seed=seed, clock=clock, faults=faults,
+                 stream_cb=stream_cb)
     if mesh_shape and not quiet:
         print(f"mesh: {eng.mesh_devices} devices "
               f"({'x'.join(map(str, serve.mesh_shape))})")
@@ -111,7 +129,9 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         pl = min(len(p), max_seq_len - gl - block_size)
         reqs.append(eng.submit(p[:pl], gen_len=gl, arrival=t.arrival, rid=i,
                                deadline=t.deadline))
+    t_run0 = time.perf_counter()
     stats = eng.run(time_scale=time_scale, quiet=quiet)
+    host_elapsed_s = time.perf_counter() - t_run0
     # latency percentiles over FINISHED requests only — shed/rejected
     # requests have no completion time and must not skew (or zero) the tail
     fin = [r for r in reqs if r.state == State.FINISHED]
@@ -166,6 +186,24 @@ def run_serve(arch: str, system: str, workload: str, rps: float, n: int,
         compile_counts=dict(stats.compile_counts),
         compiles_warmup=stats.compiles_warmup,
         compiles_post_warmup=stats.compiles_post_warmup,
+        # pipelined-loop accounting (docs/engine.md): the modeled clock
+        # prices device work (throughput_tok_s above); these price the HOST
+        # side — per-stage gaps and how much of them the dispatch-ahead
+        # loop hid. wall_clock_s is true host elapsed around Engine.run, so
+        # wall_tok_s is the end-to-end rate this process actually achieved.
+        clock=clock,
+        pipeline=serve.pipeline,
+        iterations=stats.iterations,
+        wall_clock_s=host_elapsed_s,
+        wall_tok_s=stats.committed_tokens / max(host_elapsed_s, 1e-9),
+        host_plan_s=stats.host_plan_s,
+        host_fill_s=stats.host_fill_s,
+        sync_wait_s=stats.sync_wait_s,
+        overlapped_host_s=stats.overlapped_host_s,
+        overlap_frac=stats.overlap_frac,
+        dispatched_ahead=stats.dispatched_ahead,
+        streamed_events=stats.streamed_events,
+        host_profile=int(os.environ.get("REPRO_HOST_PROFILE", "0") or "0"),
         max_slots=serve.max_slots,
         # memory-footprint multipliers (docs/memory.md): what ran, what the
         # ledger measured, and what the profiler planned from the trace
@@ -236,6 +274,20 @@ def main():
     ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
                     help="KV slot storage dtype (int8: per-slot abs-max "
                          "scales, dequantized at the Reuse KV load)")
+    ap.add_argument("--clock", default="modeled",
+                    choices=["modeled", "wall"],
+                    help="iteration clock: 'modeled' prices device work on "
+                         "the paper's cost model (deterministic, the "
+                         "default); 'wall' timestamps with the host clock "
+                         "so throughput reflects this machine")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="run the synchronous oracle loop (sync every "
+                         "iteration) instead of the dispatch-ahead "
+                         "pipelined loop; token output is bit-identical")
+    ap.add_argument("--stream", action="store_true",
+                    help="print a per-request commit event at each "
+                         "iteration's deferred sync (first host-side "
+                         "sight of the token values)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.mesh == "env":
@@ -252,7 +304,9 @@ def main():
                     preempt_starvation_s=args.preempt_starvation,
                     fault_seed=args.faults,
                     kernels=True if args.kernels else None,
-                    prefix_sharing=args.sharing, kv_quant=args.kv_quant)
+                    prefix_sharing=args.sharing, kv_quant=args.kv_quant,
+                    clock=args.clock, pipeline=not args.no_pipeline,
+                    stream=args.stream)
     print(json.dumps(res, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -20,12 +20,29 @@ VIOLATIONS = {
                         "    if serve.use_flash_kernel:\n"
                         "        x = x + 1\n"
                         "    return x\n"),
+    # two annotated syncs: each line passes host-sync via its pragma, but
+    # the function still stalls twice — multi-sync fires on the second.
+    "multi-sync": ("import jax\n"
+                   "\n"
+                   "\n"
+                   "def f(a, b):\n"
+                   "    x = jax.device_get(a)  # lint: allow(host-sync)\n"
+                   "    y = jax.device_get(b)  # lint: allow(host-sync)\n"
+                   "    return x, y\n"),
+    # the same buffer at the donated position 0 and again at position 1
+    "donation": ("import jax\n"
+                 "from repro import jax_compat as JC\n"
+                 "g = JC.jit(lambda a, b: a + b, donate_argnums=(0,))\n"
+                 "\n"
+                 "\n"
+                 "def f(x):\n"
+                 "    return g(x, x)\n"),
 }
 
 
 def _lint_fixture(tmp_path, name, source):
     pkg = tmp_path / "src" / "repro"
-    pkg.mkdir(parents=True)
+    pkg.mkdir(parents=True, exist_ok=True)
     (pkg / f"fixture_{name.replace('-', '_')}.py").write_text(source)
     return run_lint(root=tmp_path, rules=all_rules())
 
@@ -51,6 +68,45 @@ def test_accounted_dispatch_is_clean(tmp_path):
            "        x = x + 1\n"
            "    return x\n")
     report = _lint_fixture(tmp_path, "accounted", src)
+    assert report.ok, report.findings
+
+
+def test_single_annotated_sync_is_clean(tmp_path):
+    """The engine's contract — ONE annotated device_get per function —
+    passes both host-sync (pragma) and multi-sync (count == 1)."""
+    src = ("import jax\n"
+           "\n"
+           "\n"
+           "def f(a, b):\n"
+           "    x, y = jax.device_get((a, b))  # lint: allow(host-sync)\n"
+           "    return x, y\n")
+    report = _lint_fixture(tmp_path, "one-sync", src)
+    assert report.ok, report.findings
+
+
+def test_donation_use_after_donate(tmp_path):
+    """Reading a donated buffer after the call is flagged; re-binding it
+    to the result (the idiomatic `buf = step(buf)`) is not."""
+    src = ("import jax\n"
+           "from repro import jax_compat as JC\n"
+           "step = JC.jit(lambda a: a * 2, donate_argnums=(0,))\n"
+           "\n"
+           "\n"
+           "def bad(buf):\n"
+           "    out = step(buf)\n"
+           "    return out + buf\n")
+    report = _lint_fixture(tmp_path / "bad", "use-after", src)
+    assert [f.rule for f in report.findings] == ["donation"], report.findings
+
+    ok = ("import jax\n"
+          "from repro import jax_compat as JC\n"
+          "step = JC.jit(lambda a: a * 2, donate_argnums=(0,))\n"
+          "\n"
+          "\n"
+          "def good(buf):\n"
+          "    buf = step(buf)\n"
+          "    return buf\n")
+    report = _lint_fixture(tmp_path / "ok", "rebind", ok)
     assert report.ok, report.findings
 
 

@@ -136,6 +136,29 @@ def test_chaos_shared_slots_never_leak(seed):
             f"rid {b.rid} corrupted under sharing + fault seed {seed}"
 
 
+@pytest.mark.parametrize("seed", [2, 5])
+def test_chaos_pipelined_matches_sync_loop(seed):
+    """The dispatch-ahead loop under an identical seeded fault schedule is
+    bit-identical to the synchronous oracle loop: the deferred sync changes
+    WHEN token values land host-side, never what lands — including commits
+    discarded by preemption epoch bumps and dispatches replayed by retries
+    (docs/engine.md)."""
+    sync = dataclasses.replace(BASE, pipeline=False)
+    _, s_reqs, s_stats = _serve(faults=FaultPlan.seeded(seed, horizon=60),
+                                serve=sync)
+    _, p_reqs, p_stats = _serve(faults=FaultPlan.seeded(seed, horizon=60),
+                                serve=BASE)
+    for a, b in zip(s_reqs, p_reqs):
+        assert a.state == b.state
+        assert np.array_equal(a.tokens, b.tokens), f"rid {b.rid}"
+    for k in ("iterations", "committed_tokens", "recomputed_tokens",
+              "preemptions", "dispatch_retries", "alloc_fault_iters",
+              "finished", "shed", "rejected"):
+        assert getattr(s_stats, k) == getattr(p_stats, k), k
+    assert abs(s_stats.wall_time - p_stats.wall_time) < 1e-9
+    assert s_stats.dispatched_ahead == 0
+
+
 # ---------------------------------------------------------------------------
 # per-kind engine behaviour
 # ---------------------------------------------------------------------------
